@@ -1,0 +1,37 @@
+"""Shared helpers for the benchmark suite.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows (harness
+convention) plus richer JSON dropped under ``results/bench/``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+RESULTS = os.environ.get("REPRO_BENCH_OUT", "results/bench")
+QUICK = os.environ.get("REPRO_BENCH_QUICK", "1") == "1"
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def save_json(name: str, obj):
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, name + ".json"), "w") as f:
+        json.dump(obj, f, indent=1, default=float)
+
+
+def time_fn(fn, *args, iters: int = 10, warmup: int = 2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us

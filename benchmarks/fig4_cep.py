@@ -1,0 +1,41 @@
+"""Fig. 4 — success-ratio and Cumulative Effective Participation (CEP)
+trajectories per scheme."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.sim import selection_sim
+
+from .common import QUICK, emit, save_json
+from .fig3_selection import SCHEMES
+
+
+def run():
+    T = 500 if QUICK else 2500
+    out = {}
+    for name, kw in SCHEMES:
+        t0 = time.perf_counter()
+        sim = selection_sim(T=T, **kw)
+        us = (time.perf_counter() - t0) / T * 1e6
+        eff = (sim["masks"] * sim["xs"]).sum(1)  # per-round effective returns
+        cep = np.cumsum(eff)
+        rounds = np.arange(1, T + 1)
+        succ_ratio = cep / (rounds * 20)
+        q = max(1, T // 50)
+        out[name] = {
+            "rounds": rounds[::q].tolist(),
+            "cep": cep[::q].tolist(),
+            "success_ratio": succ_ratio[::q].tolist(),
+            "final_cep": float(cep[-1]),
+            "cep_at_T4": float(cep[T // 4 - 1]),
+        }
+        emit(f"fig4/{name}", us, f"final_cep={cep[-1]:.0f};cep@T/4={cep[T//4-1]:.0f};succ={succ_ratio[-1]:.3f}")
+    order = sorted(out, key=lambda n: -out[n]["final_cep"])
+    save_json("fig4_cep", {"rounds": T, "schemes": out, "cep_order": order})
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,29 @@
+"""Fig. 7 / Appendix B — varying selection cardinality k in {10, 20, 30}."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.sim import selection_sim
+
+from .common import QUICK, emit, save_json
+
+
+def run():
+    T = 400 if QUICK else 2500
+    out = {}
+    for k in (10, 20, 30):
+        for name, kw in [("E3CS-inc", dict(scheme="e3cs", quota="inc")), ("Random", dict(scheme="random"))]:
+            t0 = time.perf_counter()
+            sim = selection_sim(T=T, k=k, **kw)
+            us = (time.perf_counter() - t0) / T * 1e6
+            cep = float((sim["masks"] * sim["xs"]).sum())
+            out[f"{name}_k{k}"] = {"cep": cep, "cep_per_slot": cep / (T * k)}
+            emit(f"fig7/{name}_k{k}", us, f"cep={cep:.0f};per_slot={cep/(T*k):.3f}")
+    save_json("fig7_cardinality", {"rounds": T, "results": out})
+    return out
+
+
+if __name__ == "__main__":
+    run()

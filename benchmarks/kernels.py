@@ -1,0 +1,62 @@
+"""Kernel microbenchmarks: Pallas (interpret-mode on CPU) vs jnp oracle.
+
+Interpret-mode wall time is NOT TPU performance — the derived column records
+the correctness deltas and the arithmetic intensity each kernel targets; the
+roofline benchmark covers the deployment-scale analysis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+from .common import QUICK, emit, save_json, time_fn
+
+
+def run():
+    rng = np.random.default_rng(0)
+    out = {}
+
+    B, S, H, KV, hd = 1, 256, 4, 2, 64
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    o_ref = ref.flash_attention_ref(q, k, v)
+    o = ops.flash_attention(q, k, v, block_q=64, block_k=64)
+    err = float(jnp.abs(o - o_ref).max())
+    us_k = time_fn(lambda: ops.flash_attention(q, k, v, block_q=64, block_k=64), iters=3, warmup=1)
+    us_r = time_fn(lambda: ref.flash_attention_ref(q, k, v), iters=3, warmup=1)
+    ai = 2 * S / (2 + 2 * KV / H)  # flops/byte vs naive S^2 materialisation
+    out["flash_attention"] = {"max_err": err, "us_interpret": us_k, "us_ref": us_r}
+    emit("kernel/flash_attention", us_k, f"err={err:.1e};ref_us={us_r:.0f}")
+
+    b, S2, H2, P, G, N = 1, 256, 4, 32, 2, 64
+    x = jnp.asarray(rng.normal(size=(b, S2, H2, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.3, (b, S2, H2)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2, (H2,)), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(b, S2, G, N)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(b, S2, G, N)), jnp.float32)
+    y, st = ops.ssd_scan(x, dt, A, Bm, Cm, chunk=64)
+    y_ref, st_ref = ref.ssd_scan_ref(x, dt, A, Bm, Cm)
+    err = float(jnp.abs(y - y_ref).max())
+    us_k = time_fn(lambda: ops.ssd_scan(x, dt, A, Bm, Cm, chunk=64), iters=3, warmup=1)
+    us_r = time_fn(lambda: ref.ssd_scan_ref(x, dt, A, Bm, Cm), iters=3, warmup=1)
+    out["ssd_scan"] = {"max_err": err, "us_interpret": us_k, "us_ref": us_r}
+    emit("kernel/ssd_scan", us_k, f"err={err:.1e};ref_us={us_r:.0f}")
+
+    K = 4096 if QUICK else 1 << 20
+    p = jnp.asarray(rng.gamma(1, 1, K), jnp.float32)
+    p = p / p.sum() * 20
+    idx = ops.gumbel_topk_sample(jax.random.PRNGKey(0), p, 20, tile=1024)
+    us_k = time_fn(lambda: ops.gumbel_topk_sample(jax.random.PRNGKey(0), p, 20, tile=1024), iters=3, warmup=1)
+    out["gumbel_topk"] = {"K": K, "us_interpret": us_k, "n_unique": len(set(np.asarray(idx).tolist()))}
+    emit("kernel/gumbel_topk", us_k, f"K={K};unique={out['gumbel_topk']['n_unique']}")
+
+    save_json("kernels", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

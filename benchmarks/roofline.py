@@ -1,0 +1,58 @@
+"""§Roofline — aggregate the dry-run JSONs into the per-(arch x shape x mesh)
+three-term roofline table (compute / memory / collective seconds, dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS utilisation)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit, save_json
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_OUT", "results/dryrun")
+
+
+def load_records():
+    recs = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def run():
+    rows = []
+    for rec in load_records():
+        name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}"
+        if rec["status"] != "ok":
+            emit(f"roofline/{name}", 0.0, rec["status"])
+            continue
+        r = rec["roofline"]
+        total = r["compute_s"] + r["memory_s"] + r["collective_s"]
+        frac = r["compute_s"] / total if total else 0.0
+        rows.append(
+            dict(
+                name=name,
+                arch=rec["arch"],
+                shape=rec["shape"],
+                mesh=rec["mesh"],
+                compute_s=r["compute_s"],
+                memory_s=r["memory_s"],
+                collective_s=r["collective_s"],
+                bottleneck=r["bottleneck"],
+                hbm_gb=rec.get("per_device_hbm_gb"),
+                useful_ratio=rec.get("useful_flops_ratio"),
+                compute_frac=frac,
+            )
+        )
+        emit(
+            f"roofline/{name}",
+            total * 1e6,
+            f"bottleneck={r['bottleneck']};compute_frac={frac:.3f};useful={rec.get('useful_flops_ratio', 0) or 0:.3f}",
+        )
+    save_json("roofline", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Benchmark harness entrypoint — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Honors:
+  REPRO_BENCH_QUICK=0   full paper-scale protocol (hours on this CPU box)
+  REPRO_BENCH_ONLY=a,b  subset of benches to run
+"""
+import os
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import fig3_selection, fig4_cep, fig7_cardinality, inclusion, kernels, regret, roofline, table_training
+
+    benches = {
+        "fig3": fig3_selection.run,
+        "fig4": fig4_cep.run,
+        "fig7": fig7_cardinality.run,
+        "regret": regret.run,
+        "inclusion": inclusion.run,
+        "kernels": kernels.run,
+        "roofline": roofline.run,
+        "tables": table_training.run,
+    }
+    only = os.environ.get("REPRO_BENCH_ONLY")
+    names = only.split(",") if only else list(benches)
+    failed = []
+    print("name,us_per_call,derived")
+    for n in names:
+        try:
+            benches[n]()
+        except Exception as e:  # noqa: BLE001
+            failed.append(n)
+            print(f"{n},0,FAILED:{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,43 @@
+"""Quickstart: federated training with E3CS client selection in ~40 lines.
+
+Runs the paper's protocol end-to-end on CPU in about two minutes: 100
+volatile clients (Bernoulli success rates 0.1/0.3/0.6/0.9), non-iid
+primary-label shards of a synthetic 26-class image task, the paper's CNN,
+deadline aggregation, and the E3CS-inc fairness schedule.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import FLConfig, get_config
+from repro.data import ClientStore, make_image_dataset, partition_primary_label
+from repro.fl import FLServer
+from repro.models import build_model, cross_entropy
+
+fl = FLConfig(
+    K=100, k=20, rounds=20, scheme="e3cs", quota="inc",
+    samples_per_client=60, batch_size=20, local_epochs=(1, 2), seed=0,
+)
+
+data = make_image_dataset(n_classes=26, img_shape=(28, 28, 1), n_train=4000, n_test=1500, seed=0)
+shards = partition_primary_label(data["y"], fl.K, fl.samples_per_client, seed=0)
+store = ClientStore(data, shards)
+model = build_model(get_config("emnist-cnn"))
+
+
+def eval_fn(params):
+    x, y = store.eval_batch(1000)
+    logits = model.forward(params, {"x": jnp.asarray(x), "y": jnp.asarray(y)})
+    return float((jnp.argmax(logits, -1) == jnp.asarray(y)).mean()), float(cross_entropy(logits, jnp.asarray(y)))
+
+
+server = FLServer(model, fl, store, eval_fn)
+state = server.init_state(jax.random.PRNGKey(0))
+state, history = server.run(state, eval_every=5)
+
+print(f"rounds={fl.rounds}  CEP={int(state.cep)}/{fl.rounds * fl.k}")
+print("accuracy trajectory:", [round(a, 3) for a in history["acc"]])
+counts = np.asarray(state.sel_counts).reshape(4, -1).sum(1)
+print("selections by volatility class (rho=0.1/0.3/0.6/0.9):", counts.astype(int).tolist())

@@ -1,0 +1,63 @@
+"""Serving demo: batched prefill + sampled decode on any assigned arch's
+smoke variant — exercising the same prefill/decode paths the multi-pod
+dry-run lowers at production scale (incl. the Mamba2 O(1)-state decode and
+MLA latent cache).
+
+    PYTHONPATH=src python examples/serve_demo.py --arch deepseek-v3-671b
+    PYTHONPATH=src python examples/serve_demo.py --arch mamba2-130m --gen 64
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.models import build_model
+from repro.models.transformer import vlm_positions
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = smoke_variant(get_config(args.arch))
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    params, _ = model.init(rng)
+    B, S = args.batch, args.prompt_len
+
+    batch = {"tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab, jnp.int32)}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(rng, (B, cfg.n_patches, cfg.d_patch), jnp.float32)
+        batch["positions"] = vlm_positions(cfg, B, S + cfg.n_patches)
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(rng, (B, cfg.enc_len, cfg.d_model), jnp.float32)
+
+    t0 = time.time()
+    logits, caches = jax.jit(model.prefill)(params, batch, max_len=S + args.gen + 8)
+    jax.block_until_ready(logits)
+    print(f"[{cfg.name}] prefill B={B} S={S}: {time.time()-t0:.2f}s")
+
+    decode = jax.jit(model.decode)
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    toks = [tok]
+    t0 = time.time()
+    for i in range(args.gen):
+        logits, caches = decode(params, tok, caches)
+        tok = jax.random.categorical(jax.random.fold_in(rng, i), logits[:, -1] / 0.8)[:, None].astype(jnp.int32)
+        toks.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    gen = np.concatenate([np.asarray(t) for t in toks], 1)
+    print(f"decode: {args.gen} steps, {B*args.gen/dt:.1f} tok/s (incl. first-call compile)")
+    print("sample:", gen[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Harvest table_training rows from the bench log into the cached JSON."""
+import json, os, re
+rows = {}
+for line in open('results/bench_tables.log'):
+    m = re.match(r"table_(\w+)_(\w+)_(\w+)/([\w.\-]+),([\d.]+),final=([\d.]+);cep=(\d+);r2a=(.*)", line.strip())
+    if not m: continue
+    task, dist, upd, scheme, us, final, cep, r2a = m.groups()
+    rows.setdefault(task, {}).setdefault(f"{dist}_{upd}", {})[scheme] = {
+        "final_acc": float(final), "cep": float(cep),
+        "rounds_to": eval(r2a), "wall_s": float(us)*60/1e6, "acc_curve": [],
+    }
+os.makedirs('results/bench', exist_ok=True)
+json.dump(rows, open('results/bench/table_training.json','w'), indent=1)
+print({t: {g: list(v) for g, v in d.items()} for t, d in rows.items()})

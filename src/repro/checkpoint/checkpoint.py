@@ -1,0 +1,86 @@
+"""Pytree checkpointing: msgpack + zstd, no external deps beyond stdlib-ish.
+
+Layout: a single ``.ckpt`` file holding {tree structure, leaf metadata,
+zstd-compressed concatenated leaf bytes}.  Works for params, optimizer and
+server state (selector weights, round counters, rng keys).
+"""
+from __future__ import annotations
+
+import io
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+__all__ = ["save", "restore", "latest_checkpoint"]
+
+
+def _to_host(tree):
+    return jax.tree.map(lambda x: np.asarray(x), tree)
+
+
+def save(path: str, tree: Any, step: int = 0) -> str:
+    host = _to_host(tree)
+    leaves, treedef = jax.tree.flatten(host)
+    meta = []
+    buf = io.BytesIO()
+    for leaf in leaves:
+        a = np.asarray(leaf)
+        # bfloat16 has no numpy dtype string portable via msgpack; view bytes
+        dtype = str(a.dtype)
+        meta.append({"shape": list(a.shape), "dtype": dtype})
+        buf.write(np.ascontiguousarray(a).tobytes() if a.dtype != jnp.bfloat16 else a.view(np.uint16).tobytes())
+    payload = {
+        "step": step,
+        "treedef": str(treedef),
+        "structure": msgpack.packb(jax.tree.map(lambda _: 0, host), default=_pack_default),
+        "meta": meta,
+        "data": zstandard.ZstdCompressor(level=3).compress(buf.getvalue()),
+    }
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, default=_pack_default))
+    os.replace(tmp, path)
+    return path
+
+
+def _pack_default(o):
+    raise TypeError(f"unpackable {type(o)}")
+
+
+def restore(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shapes/dtypes must match)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), strict_map_key=False)
+    raw = zstandard.ZstdDecompressor().decompress(payload["data"])
+    leaves_like, treedef = jax.tree.flatten(like)
+    out = []
+    off = 0
+    for leaf, meta in zip(leaves_like, payload["meta"]):
+        shape = tuple(meta["shape"])
+        dtype = meta["dtype"]
+        if dtype == "bfloat16":
+            n = int(np.prod(shape)) * 2
+            a = jnp.asarray(np.frombuffer(raw[off : off + n], np.uint16).reshape(shape)).view(jnp.bfloat16)
+        else:
+            npdt = np.dtype(dtype)
+            n = int(np.prod(shape)) * npdt.itemsize
+            a = np.frombuffer(raw[off : off + n], npdt).reshape(shape)
+        off += n
+        out.append(jnp.asarray(a))
+    return jax.tree.unflatten(treedef, out)
+
+
+def latest_checkpoint(directory: str, prefix: str = "ckpt_"):
+    if not os.path.isdir(directory):
+        return None
+    cands = [f for f in os.listdir(directory) if f.startswith(prefix) and f.endswith(".ckpt")]
+    if not cands:
+        return None
+    best = max(cands, key=lambda f: int(f[len(prefix) : -5]))
+    return os.path.join(directory, best)

@@ -1,0 +1,15 @@
+"""The paper's own FL workloads (§VI-A): small CNNs for EMNIST-Letter and
+CIFAR-10 (reproduced against synthetic class-conditional data of matching
+shape — see repro.data.synthetic)."""
+from .base import ModelConfig, register
+
+# Encoded via the generic ModelConfig where sensible fields are reused;
+# the CNN definitions live in repro.models.cnn (not the transformer stack).
+EMNIST_CNN = register(ModelConfig(
+    name="emnist-cnn", family="cnn", source="paper sec VI-A (EMNIST-Letter)",
+    n_layers=2, d_model=10, d_ff=1280, vocab=26,  # conv channels / fc1 / classes
+))
+CIFAR_CNN = register(ModelConfig(
+    name="cifar-cnn", family="cnn", source="paper sec VI-A (CIFAR-10)",
+    n_layers=2, d_model=64, d_ff=384, vocab=10,
+))

@@ -1,0 +1,2 @@
+"""Paper core: E3CS stochastic client selection under volatile clients."""
+from . import selection, volatility, fairness  # noqa: F401

@@ -1,0 +1,68 @@
+"""Fairness / participation metrics used throughout the experiments.
+
+The paper quantifies fairness qualitatively through selection-count box plots
+(Fig. 3); we add the standard scalar summaries so the tradeoff can be put on
+one axis: Jain's fairness index, normalized selection entropy, and the
+coefficient of variation of selection counts.  CEP and success ratio follow
+Eq. (8) and Fig. 4.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["jain_index", "selection_entropy", "cep", "success_ratio", "class_selection_stats"]
+
+
+def jain_index(counts: jax.Array) -> jax.Array:
+    """Jain's fairness index in (1/K, 1]; 1 == perfectly even."""
+    counts = counts.astype(jnp.float32)
+    num = jnp.sum(counts) ** 2
+    den = counts.shape[0] * jnp.sum(counts**2)
+    return num / jnp.maximum(den, 1e-12)
+
+
+def selection_entropy(counts: jax.Array) -> jax.Array:
+    """Entropy of the empirical selection distribution, normalized to [0,1]."""
+    counts = counts.astype(jnp.float32)
+    p = counts / jnp.maximum(jnp.sum(counts), 1e-12)
+    h = -jnp.sum(jnp.where(p > 0, p * jnp.log(p), 0.0))
+    return h / jnp.log(counts.shape[0])
+
+
+def cep(sel_masks: jax.Array, xs: jax.Array) -> jax.Array:
+    """Cumulative effective participation: sum_t sum_{i in A_t} x_{i,t}."""
+    return jnp.sum(sel_masks * xs)
+
+
+def success_ratio(sel_masks: jax.Array, xs: jax.Array) -> jax.Array:
+    """CEP / (T*k) as in Fig. 4 (top)."""
+    return cep(sel_masks, xs) / jnp.maximum(jnp.sum(sel_masks), 1e-12)
+
+
+def class_selection_stats(counts, class_sizes):
+    """Per-class selection-count summaries reproducing Fig. 3's box plots.
+
+    Args:
+      counts: (K,) times-selected per client.
+      class_sizes: list of ints summing to K, clients ordered by class.
+    Returns list of dicts with min/q1/median/q3/max/mean per class.
+    """
+    import numpy as np
+
+    counts = np.asarray(counts)
+    out, off = [], 0
+    for n in class_sizes:
+        c = np.sort(counts[off : off + n])
+        off += n
+        out.append(
+            dict(
+                min=float(c.min()),
+                q1=float(np.percentile(c, 25)),
+                median=float(np.percentile(c, 50)),
+                q3=float(np.percentile(c, 75)),
+                max=float(c.max()),
+                mean=float(c.mean()),
+            )
+        )
+    return out

@@ -1,0 +1,31 @@
+from .prob_alloc import prob_alloc, prob_alloc_reference
+from .sampling import (
+    plackett_luce_sample,
+    systematic_sample,
+    sample_selection,
+    selection_mask,
+    inclusion_probability_mc,
+)
+from .e3cs import (
+    E3CSState,
+    e3cs_init,
+    e3cs_probs,
+    e3cs_update,
+    e3cs_round,
+    theorem1_eta,
+    theorem1_bound,
+)
+from .quota import make_quota_schedule
+from .baselines import (
+    random_select,
+    fedcs_select,
+    pow_d_select,
+    PowDState,
+    UCBState,
+    ucb_init,
+    ucb_select,
+    ucb_update,
+)
+from .regret import oracle_cep, empirical_expected_cep, regret
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,94 @@
+"""Baseline client-selection schemes evaluated in the paper (§VI-A2).
+
+* ``random``  — vanilla FedAvg selection: uniform k-subset.
+* ``fedcs``   — Nishio & Yonetani's FedCS adapted to the volatile context as
+  the paper does: *prophetic* greedy choice of the k clients with the highest
+  true success rate.
+* ``pow_d``   — power-of-choice (Cho et al.): draw a candidate set of size
+  ``d`` uniformly, query their current local loss, select the k with the
+  largest loss.
+* ``ucb``     — beyond-paper reference point: stochastic-bandit UCB1 on the
+  empirical success rate with a fairness floor applied through the same
+  ProbAlloc machinery (deterministic top-k on UCB scores).
+
+Each selector is a pure state machine with the same shape as E3CS so the FL
+round step can swap them under jit.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .sampling import selection_mask
+
+__all__ = [
+    "random_select",
+    "fedcs_select",
+    "PowDState",
+    "pow_d_select",
+    "UCBState",
+    "ucb_init",
+    "ucb_select",
+    "ucb_update",
+]
+
+
+def random_select(rng: jax.Array, K: int, k: int) -> jax.Array:
+    """Uniform k-subset (paper's `Random`)."""
+    return jax.random.permutation(rng, K)[:k].astype(jnp.int32)
+
+
+def fedcs_select(success_rate: jax.Array, k: int, rng: jax.Array | None = None) -> jax.Array:
+    """Prophetic FedCS: top-k by true success rate (ties broken randomly)."""
+    score = success_rate
+    if rng is not None:
+        score = score + 1e-6 * jax.random.uniform(rng, score.shape)
+    _, idx = jax.lax.top_k(score, k)
+    return idx.astype(jnp.int32)
+
+
+class PowDState(NamedTuple):
+    local_loss: jax.Array  # (K,) last observed local loss per client
+
+
+def pow_d_select(rng: jax.Array, local_loss: jax.Array, k: int, d: int) -> jax.Array:
+    """power-of-choice: candidate set of size d (uniform), top-k by loss.
+
+    The paper assumes loss reporting always succeeds even for volatile
+    clients; we match that.
+    """
+    K = local_loss.shape[0]
+    cand = jax.random.permutation(rng, K)[:d]
+    cand_loss = local_loss[cand]
+    _, pos = jax.lax.top_k(cand_loss, k)
+    return cand[pos].astype(jnp.int32)
+
+
+class UCBState(NamedTuple):
+    succ: jax.Array  # (K,) cumulative observed successes
+    pulls: jax.Array  # (K,) pull counts
+    t: jax.Array
+
+
+def ucb_init(K: int) -> UCBState:
+    return UCBState(jnp.zeros((K,)), jnp.zeros((K,)), jnp.zeros((), jnp.int32))
+
+
+def ucb_select(state: UCBState, k: int) -> jax.Array:
+    t = jnp.maximum(state.t.astype(jnp.float32), 1.0)
+    mean = state.succ / jnp.maximum(state.pulls, 1.0)
+    bonus = jnp.sqrt(2.0 * jnp.log(t + 1.0) / jnp.maximum(state.pulls, 1.0))
+    score = jnp.where(state.pulls == 0, jnp.inf, mean + bonus)
+    _, idx = jax.lax.top_k(score, k)
+    return idx.astype(jnp.int32)
+
+
+def ucb_update(state: UCBState, idx: jax.Array, x: jax.Array) -> UCBState:
+    mask = selection_mask(idx, state.succ.shape[0])
+    return UCBState(
+        succ=state.succ + mask * x,
+        pulls=state.pulls + mask,
+        t=state.t + 1,
+    )

@@ -1,0 +1,118 @@
+"""E3CS — Exp3-based Client Selection (paper Algorithm 1).
+
+Functional, jit-safe implementation.  The selector is a pure state machine:
+
+    state = e3cs_init(K)
+    p, capped = e3cs_probs(state, k, sigma_t)          # Algorithm 2
+    A_t = sample_selection(rng, p, k, method)          # multinomialNR
+    state = e3cs_update(state, p, capped, sel_mask, x, k, sigma_t, eta)
+
+The unbiased estimator and the weight update follow Eqs. (16)-(17): capped
+(overflowed) arms are frozen, everyone else multiplies their weight by
+``exp((k - K sigma) * eta * xhat / K)``.
+
+Weights are stored in log-space (``logw``) — mathematically identical, but
+immune to the floating-point overflow the paper's multiplicative form hits
+after a few hundred successful rounds with eta=0.5.  ProbAlloc is invariant to
+a common shift of ``logw``, so we re-center after every update.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .prob_alloc import prob_alloc
+from .sampling import sample_selection, selection_mask
+
+__all__ = ["E3CSState", "e3cs_init", "e3cs_probs", "e3cs_update", "e3cs_round"]
+
+
+class E3CSState(NamedTuple):
+    logw: jax.Array  # (K,) log exponential weights
+    t: jax.Array  # scalar int32 round counter
+
+
+def e3cs_init(K: int, dtype=jnp.float32) -> E3CSState:
+    return E3CSState(logw=jnp.zeros((K,), dtype), t=jnp.zeros((), jnp.int32))
+
+
+def e3cs_probs(state: E3CSState, k: int, sigma: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Probability allocation for the current round (Algorithm 2)."""
+    w = jnp.exp(state.logw - jax.lax.stop_gradient(jnp.max(state.logw)))
+    return prob_alloc(w, k, sigma)
+
+
+def e3cs_update(
+    state: E3CSState,
+    p: jax.Array,
+    capped: jax.Array,
+    sel_mask: jax.Array,
+    x: jax.Array,
+    k: int,
+    sigma: jax.Array,
+    eta: float,
+) -> E3CSState:
+    """Exponential-weight update, Eqs. (16)-(17).
+
+    Args:
+      p: (K,) allocation used for this round's draw.
+      capped: (K,) bool overflow set ``S_t`` (frozen arms).
+      sel_mask: (K,) {0,1} mask of ``A_t``.
+      x: (K,) success bits ``x_{i,t}`` (only entries with sel_mask=1 are
+         observed; others are multiplied by zero anyway).
+      sigma: scalar fairness quota ``sigma_t``.
+      eta: learning rate (static float).
+    """
+    K = p.shape[0]
+    xhat = sel_mask * x / jnp.maximum(p, 1e-12)  # Eq. (16)
+    residual = jnp.asarray(k, p.dtype) - K * sigma
+    step = residual * eta * xhat / K  # Eq. (17) exponent
+    # Numerical safeguard: the regret proof's Taylor step (Fact 8) assumes the
+    # exponent <= 1; with sigma=0 a rarely-selected arm can have p ~ 0 and an
+    # unbounded importance weight, which would blow the weights up in fp32.
+    # Clamping to the proof's regime keeps the update well-posed.
+    step = jnp.minimum(step, 1.0)
+    logw = state.logw + jnp.where(capped, 0.0, step)
+    logw = logw - jnp.max(logw)  # re-center (ProbAlloc is shift-invariant)
+    return E3CSState(logw=logw, t=state.t + 1)
+
+
+def e3cs_round(
+    state: E3CSState,
+    rng: jax.Array,
+    x: jax.Array,
+    k: int,
+    sigma: jax.Array,
+    eta: float,
+    method: str = "plackett_luce",
+):
+    """One full bandit round against a success-bit vector ``x`` (K,).
+
+    Returns ``(new_state, sel_idx, sel_mask, p)``. Used by the numerical
+    experiments (Figs. 3-4) and as the selection block inside the FL round.
+    """
+    p, capped = e3cs_probs(state, k, sigma)
+    idx = sample_selection(rng, p, k, method)
+    mask = selection_mask(idx, p.shape[0])
+    new_state = e3cs_update(state, p, capped, mask, x, k, sigma, eta)
+    return new_state, idx, mask, p
+
+
+def theorem1_eta(K: int, k: int, sigmas) -> float:
+    """Optimal learning rate of Theorem 1: sqrt(K ln K / sum_t (k - K sigma_t))."""
+    import numpy as np
+
+    s = float(np.sum(k - K * np.asarray(sigmas)))
+    return float(np.sqrt(K * np.log(K) / max(s, 1e-12)))
+
+
+def theorem1_bound(K: int, k: int, sigmas, eta: float | None = None) -> float:
+    """Regret upper bound of Theorem 1 (Eq. 28 / Eq. 29 when eta is None)."""
+    import numpy as np
+
+    s = float(np.sum(k - K * np.asarray(sigmas)))
+    if eta is None:
+        return 2.0 * float(np.sqrt(K * s * np.log(K)))
+    return eta * s + K / eta * float(np.log(K))

@@ -1,0 +1,137 @@
+"""Probability allocation with overflow capping (paper Algorithm 2).
+
+Given exponential weights ``w`` over ``K`` clients, a cardinality ``k`` and a
+fairness quota ``sigma`` (with ``0 <= sigma <= k/K``), compute
+
+    p_i = sigma + (k - K*sigma) * w'_i / sum_j w'_j            (Eq. 19)
+
+where ``w'_i = min(w_i, (1 - sigma) * alpha)`` and ``alpha`` is the largest
+value such that ``p_i <= 1`` for all ``i`` (Eqs. 21-24).  The set
+``S = {i : w_i > (1 - sigma) * alpha}`` of capped ("overflowed") clients is
+returned as a boolean mask; E3CS freezes the weights of capped clients in the
+update step (Eq. 17).
+
+Everything here is pure ``jnp`` and jit/vmap-safe: the per-case search of the
+paper (iterate cases ``v`` with ``Psi_{i_v} <= alpha < Psi_{i_{v+1}}``) is
+vectorized over all K cases via a sort + cumulative sums.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["prob_alloc", "prob_alloc_reference"]
+
+_EPS = 1e-12
+
+
+def _alpha_search(w: jax.Array, k: float, K: int, sigma: jax.Array) -> jax.Array:
+    """Solve ``alpha / sum_j min(w_j, (1-sigma) alpha) = 1/(k - K sigma)``.
+
+    Vectorised version of the paper's case analysis (Eq. 24). Let
+    ``Psi_i = w_i / (1 - sigma)`` and sort ascending. For case ``v`` (0-based:
+    arms ``0..v`` uncapped, arms ``v+1..K-1`` capped):
+
+        alpha_v = cumsum(w_sorted)[v] / (k - K sigma - (K - 1 - v)(1 - sigma))
+
+    and the premise is ``Psi_sorted[v] <= alpha_v < Psi_sorted[v+1]``.
+    """
+    one_minus_sigma = 1.0 - sigma
+    w_sorted = jnp.sort(w)
+    psi = w_sorted / jnp.maximum(one_minus_sigma, _EPS)
+    csum = jnp.cumsum(w_sorted)
+    K_ = jnp.asarray(K, w.dtype)
+    v = jnp.arange(K, dtype=w.dtype)
+    # residual probability mass handed to uncapped arms in case v
+    denom = (k - K_ * sigma) - (K_ - 1.0 - v) * one_minus_sigma
+    alpha_v = csum / jnp.where(jnp.abs(denom) < _EPS, _EPS, denom)
+    psi_next = jnp.concatenate([psi[1:], jnp.full((1,), jnp.inf, w.dtype)])
+    # relative tolerance: with tied weights (all psi equal) and sigma -> k/K,
+    # float32 roundoff otherwise leaves every strict case premise unsatisfied
+    tol = 1e-5
+    valid = (denom > _EPS) & (alpha_v >= psi[jnp.arange(K)] * (1 - tol) - 1e-9) & (
+        alpha_v < psi_next * (1 + tol) + 1e-9
+    )
+    # The paper proves at least one case is valid (Claim 1). If several are
+    # (degenerate ties), any satisfies the equation; take the largest alpha.
+    alpha = jnp.max(jnp.where(valid, alpha_v, -jnp.inf))
+    # Fallback (should not trigger): fully-even allocation alpha.
+    fallback = jnp.min(w) / jnp.maximum(one_minus_sigma, _EPS)
+    return jnp.where(jnp.isfinite(alpha), alpha, fallback)
+
+
+def prob_alloc(w: jax.Array, k: int, sigma: jax.Array):
+    """Paper Algorithm 2 (ProbAlloc).
+
+    Args:
+      w: ``(K,)`` positive exponential weights.
+      k: cardinality of the selection (static int).
+      sigma: scalar fairness quota in ``[0, k/K]``.
+
+    Returns:
+      ``(p, capped)`` where ``p`` is the ``(K,)`` selection-probability vector
+      with ``sum(p) = k`` and ``sigma <= p_i <= 1``, and ``capped`` is the
+      boolean overflow mask ``S_t``.
+    """
+    w = jnp.asarray(w)
+    K = w.shape[0]
+    sigma = jnp.asarray(sigma, w.dtype)
+    residual = jnp.asarray(k, w.dtype) - K * sigma  # k - K*sigma >= 0
+
+    w_sum = jnp.sum(w)
+    p_plain = sigma + residual * w / jnp.maximum(w_sum, _EPS)
+    overflow = jnp.max(p_plain) > 1.0 + 1e-9
+
+    def capped_branch(_):
+        alpha = _alpha_search(w, float(k), K, sigma)
+        cap = (1.0 - sigma) * alpha
+        w_c = jnp.minimum(w, cap)
+        p = sigma + residual * w_c / jnp.maximum(jnp.sum(w_c), _EPS)
+        # S_t = {i : w_i > (1-sigma) alpha} == the arms whose probability
+        # saturated at 1; deriving it from p is robust to float ties at the
+        # cap boundary.
+        return p, p >= 1.0 - 1e-6
+
+    def plain_branch(_):
+        return p_plain, jnp.zeros((K,), bool)
+
+    p, capped = jax.lax.cond(overflow, capped_branch, plain_branch, None)
+    # Numerical hygiene: clamp and renormalise the residual mass so that the
+    # downstream sampler sees a simplex-consistent vector.
+    p = jnp.clip(p, sigma, 1.0)
+    return p, capped
+
+
+def prob_alloc_reference(w, k: int, sigma: float):
+    """Brute-force iterative reference implementation (paper's literal case
+    enumeration) used as the test oracle. Pure python/numpy-style; not jitted.
+    """
+    import numpy as np
+
+    w = np.asarray(w, dtype=np.float64)
+    K = w.shape[0]
+    residual = k - K * sigma
+    p = sigma + residual * w / w.sum()
+    if p.max() <= 1.0 + 1e-12:
+        return p, np.zeros(K, bool)
+    # iterate the cases of Eq. (24)
+    order = np.argsort(w)
+    ws = w[order]
+    psi = ws / max(1.0 - sigma, _EPS)
+    best_alpha = None
+    tol = 1e-5
+    for v in range(K):
+        denom = residual - (K - 1 - v) * (1.0 - sigma)
+        if denom <= _EPS:
+            continue
+        alpha = ws[: v + 1].sum() / denom
+        hi = psi[v + 1] if v + 1 < K else np.inf
+        if psi[v] * (1 - tol) - 1e-9 <= alpha < hi * (1 + tol) + 1e-9:
+            best_alpha = alpha if best_alpha is None else max(best_alpha, alpha)
+    if best_alpha is None:
+        # degenerate ties at sigma -> k/K: fall back to Claim 1's witness
+        best_alpha = float(ws.min()) / max(1.0 - sigma, _EPS)
+    cap = (1.0 - sigma) * best_alpha
+    w_c = np.minimum(w, cap)
+    p = sigma + residual * w_c / w_c.sum()
+    return p, p >= 1.0 - 1e-6

@@ -1,0 +1,39 @@
+"""Fairness-quota schedules ``sigma_t`` (paper §VI-A2 and §VI-B).
+
+All schedules return a value in ``[0, k/K]`` (required for feasibility,
+paper §IV-B2).  ``make_quota_schedule`` returns a jit-safe function of the
+(traced) round index.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+__all__ = ["make_quota_schedule"]
+
+
+def make_quota_schedule(name: str, k: int, K: int, T: int, frac: float = 0.0) -> Callable:
+    """Build ``sigma(t)``.
+
+    Names:
+      * ``const``  — ``frac * k/K``  (E3CS-0 / E3CS-0.5 / E3CS-0.8 via frac)
+      * ``inc``    — paper's E3CS-inc: 0 for t <= T/4, k/K afterwards
+      * ``linear`` — beyond-paper: linear ramp 0 -> k/K over the horizon
+      * ``cosine`` — beyond-paper: smooth ramp 0 -> k/K
+    """
+    cap = k / K
+
+    if name == "const":
+        v = jnp.asarray(frac * cap, jnp.float32)
+        return lambda t: v
+    if name == "inc":
+        thresh = T // 4
+        return lambda t: jnp.where(t >= thresh, cap, 0.0).astype(jnp.float32)
+    if name == "linear":
+        return lambda t: (cap * jnp.clip(t / max(T - 1, 1), 0.0, 1.0)).astype(jnp.float32)
+    if name == "cosine":
+        return lambda t: (cap * 0.5 * (1.0 - jnp.cos(jnp.pi * jnp.clip(t / max(T - 1, 1), 0.0, 1.0)))).astype(
+            jnp.float32
+        )
+    raise ValueError(f"unknown quota schedule {name!r}")

@@ -1,0 +1,76 @@
+"""Selection-only simulator (no model training): reproduces the paper's
+numerical experiments (Figs. 3-4) and powers the regret benchmark.
+
+Runs any scheme for T rounds against a volatility model and returns the
+full (T, K) selection masks / success bits / probability allocations.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core.selection import e3cs_update, make_quota_schedule, selection_mask
+from repro.core.volatility import BernoulliVolatility, MarkovVolatility, paper_success_rates
+from repro.fl.round import init_server_state, make_select_fn
+
+__all__ = ["selection_sim"]
+
+
+def selection_sim(
+    scheme: str,
+    K: int = 100,
+    k: int = 20,
+    T: int = 2500,
+    quota: str = "const",
+    frac: float = 0.0,
+    eta: float = 0.5,
+    sampler: str = "plackett_luce",
+    volatility: str = "bernoulli",
+    stickiness: float = 0.8,
+    seed: int = 0,
+    xs_override: Optional[np.ndarray] = None,
+) -> Dict[str, np.ndarray]:
+    fl = FLConfig(K=K, k=k, rounds=T, scheme=scheme, quota=quota, quota_frac=frac, eta=eta, sampler=sampler)
+    rho = jnp.asarray(paper_success_rates(K))
+    vol = MarkovVolatility(rho, stickiness) if volatility == "markov" else BernoulliVolatility(rho)
+    quota_fn = make_quota_schedule(quota, k, K, T, frac)
+    select = jax.jit(make_select_fn(fl, quota_fn, rho))
+    state = init_server_state({}, K, vol.init_state())
+    key = jax.random.PRNGKey(seed)
+    masks, xs, ps, sigmas = [], [], [], []
+    for t in range(T):
+        key, k1, k2 = jax.random.split(key, 3)
+        idx, p, capped, sigma = select(state, k1)
+        if xs_override is not None:
+            x, vs = jnp.asarray(xs_override[t]), state.vol_state
+        else:
+            x, vs = vol.sample(k2, state.vol_state)
+        mask = selection_mask(idx, K)
+        e3cs = state.e3cs
+        if scheme == "e3cs":
+            e3cs = e3cs_update(state.e3cs, p, capped, mask, x, k, sigma, eta)
+        loss_cache = jnp.where(mask > 0, 1.0 - x, state.loss_cache)  # pow-d loss proxy
+        ucb = state.ucb
+        if scheme == "ucb":
+            from repro.core.selection import ucb_update
+
+            ucb = ucb_update(state.ucb, idx, x)
+        state = state._replace(
+            e3cs=e3cs, ucb=ucb, vol_state=vs, t=state.t + 1,
+            sel_counts=state.sel_counts + mask, loss_cache=loss_cache,
+        )
+        masks.append(np.asarray(mask))
+        xs.append(np.asarray(x))
+        ps.append(np.asarray(p))
+        sigmas.append(float(sigma))
+    return {
+        "masks": np.stack(masks),
+        "xs": np.stack(xs),
+        "ps": np.stack(ps),
+        "sigmas": np.asarray(sigmas),
+        "counts": np.stack(masks).sum(0),
+    }

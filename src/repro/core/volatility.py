@@ -1,0 +1,100 @@
+"""Volatile-client models: generators of the success bits ``x_{i,t}``.
+
+The paper simulates ``x_{i,t} ~ Bern(rho_i)`` with four client classes
+(rho in {0.1, 0.3, 0.6, 0.9}, K/4 clients each).  We additionally provide:
+
+* ``markov``   — two-state Gilbert-Elliott channel per client, modelling the
+  paper's motivating remark that crashes have *temporal correlation* (a failed
+  client tends to stay failed for a while).  Marginal success rate is kept at
+  ``rho_i`` so the classes remain comparable.
+* ``deadline`` — mechanistic model: training time ~ shifted-Exp(compute_i) *
+  epochs_i; failure iff time exceeds the round deadline or a transmission
+  fault occurs.  This grounds the success bit in the paper's deadline-based
+  aggregation story (Fig. 2).
+
+All generators are pure: ``x = model.sample(rng, t)`` returns the full (K,)
+bit-vector for round t (the scheduler only ever observes selected entries).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["paper_success_rates", "BernoulliVolatility", "MarkovVolatility", "DeadlineVolatility"]
+
+
+def paper_success_rates(K: int, rates=(0.1, 0.3, 0.6, 0.9)) -> np.ndarray:
+    """Paper §VI-A: equal split of K clients into len(rates) classes."""
+    per = K // len(rates)
+    out = np.concatenate([np.full(per, r) for r in rates])
+    if out.shape[0] < K:  # remainder goes to the most stable class
+        out = np.concatenate([out, np.full(K - out.shape[0], rates[-1])])
+    return out.astype(np.float32)
+
+
+@dataclass(frozen=True)
+class BernoulliVolatility:
+    """iid per-round success bits, x_{i,t} ~ Bern(rho_i)."""
+
+    rho: jnp.ndarray  # (K,)
+
+    def init_state(self):
+        return jnp.zeros((self.rho.shape[0],), jnp.float32)
+
+    def sample(self, rng: jax.Array, state):
+        x = jax.random.bernoulli(rng, self.rho).astype(jnp.float32)
+        return x, state
+
+
+@dataclass(frozen=True)
+class MarkovVolatility:
+    """Gilbert-Elliott: per-client 2-state chain with stationary P(up)=rho.
+
+    ``stickiness`` in [0,1) controls temporal correlation: transition
+    probabilities are scaled so expected sojourn grows as 1/(1-stickiness)
+    while the stationary distribution stays (rho, 1-rho).
+    """
+
+    rho: jnp.ndarray  # (K,)
+    stickiness: float = 0.8
+
+    def init_state(self):
+        return self.rho  # P(up) at t=0 equals stationary
+
+    def sample(self, rng: jax.Array, state):
+        r_up, r_flip = jax.random.split(rng)
+        up = jax.random.bernoulli(r_up, state).astype(jnp.float32)
+        # transition: stay with prob s + (1-s)*stationary
+        s = self.stickiness
+        p_next = s * up + (1.0 - s) * self.rho
+        return up, p_next
+
+
+@dataclass(frozen=True)
+class DeadlineVolatility:
+    """Failure = local training time exceeds deadline, or transmission fault.
+
+    time_i ~ epochs_i * base_i * (1 + Exp(jitter));  success iff
+    time_i <= deadline and U > p_net_fail_i.
+    """
+
+    epochs: jnp.ndarray  # (K,) designated local epochs
+    base_time: jnp.ndarray  # (K,) per-epoch compute time
+    deadline: float
+    p_net_fail: jnp.ndarray  # (K,)
+    jitter: float = 0.5
+
+    def init_state(self):
+        return jnp.zeros((self.epochs.shape[0],), jnp.float32)
+
+    def sample(self, rng: jax.Array, state):
+        r_t, r_n = jax.random.split(rng)
+        noise = jax.random.exponential(r_t, self.epochs.shape) * self.jitter
+        t_i = self.epochs * self.base_time * (1.0 + noise)
+        ok_time = (t_i <= self.deadline).astype(jnp.float32)
+        ok_net = (~jax.random.bernoulli(r_n, self.p_net_fail)).astype(jnp.float32)
+        return ok_time * ok_net, state

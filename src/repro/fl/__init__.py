@@ -1,0 +1,10 @@
+from .client import make_local_update, prox_penalty
+from .aggregation import aggregate
+from .round import (
+    ServerState,
+    init_server_state,
+    make_select_fn,
+    make_cohort_round,
+    make_silo_steps,
+)
+from .server import FLServer, build_volatility

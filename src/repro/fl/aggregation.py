@@ -1,0 +1,63 @@
+"""Aggregation operators o2 under the deadline mechanism (paper P1, Alg. 1 l.9-10).
+
+The paper's volatility constraint substitutes the *global* model for every
+client that failed or was not selected:
+
+    theta_{t+1} = sum_i w_i * [mask_i * theta_i + (1-mask_i) * theta_t]
+               = theta_t + sum_i w_i * mask_i * (theta_i - theta_t)
+
+so all schemes are implemented in delta form over the cohort only (the K-k
+unselected clients contribute zero delta by construction):
+
+* ``mean``           — w_i = 1/K (Alg. 1's plain average).
+* ``fedavg``         — w_i = q_i / q (data-size weighted, paper P1).
+* ``epoch_weighted`` — w_i ∝ (q_i/q) / E_i (Ruan et al. [11]: fewer-epoch
+  clients get up-weighted so they are not overwhelmed).
+* ``unbiased``       — w_i = q_i / (q * p_i): inverse-propensity estimator
+  (Chen et al. [19]); beyond-paper option that removes selection bias in
+  expectation — experiments quantify its variance cost.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["aggregate"]
+
+
+def aggregate(
+    global_params,
+    cohort_params,
+    success: jax.Array,  # (k,) {0,1}
+    data_sizes: jax.Array,  # (k,) q_i of the selected clients
+    total_data: jax.Array,  # scalar q
+    K: int,
+    scheme: str = "fedavg",
+    epochs: jax.Array = None,  # (k,) E_i (epoch_weighted)
+    sel_probs: jax.Array = None,  # (k,) p_{i,t} (unbiased)
+):
+    """cohort_params: pytree with leading cohort axis (k, ...)."""
+    k = success.shape[0]
+    if scheme == "mean":
+        w = jnp.full((k,), 1.0 / K)
+    elif scheme == "fedavg":
+        w = data_sizes / jnp.maximum(total_data, 1e-9)
+    elif scheme == "epoch_weighted":
+        base = data_sizes / jnp.maximum(total_data, 1e-9)
+        inv = 1.0 / jnp.maximum(epochs.astype(jnp.float32), 1.0)
+        # renormalise so the cohort's total weight is preserved
+        w = base.sum() * (base * inv) / jnp.maximum((base * inv).sum(), 1e-9)
+    elif scheme == "unbiased":
+        w = data_sizes / jnp.maximum(total_data, 1e-9) / jnp.clip(sel_probs, 1e-3, 1.0)
+    else:
+        raise ValueError(scheme)
+    w = w * success  # failed clients contribute the global model (zero delta)
+
+    def upd(g, c):
+        delta = c.astype(jnp.float32) - g.astype(jnp.float32)[None]
+        contrib = jnp.tensordot(w, delta, axes=(0, 0))
+        return (g.astype(jnp.float32) + contrib).astype(g.dtype)
+
+    return jax.tree.map(upd, global_params, cohort_params)

@@ -1,0 +1,59 @@
+"""Local update operators o1 (paper P1): FedAvg SGD and FedProx.
+
+``make_local_update`` builds a pure function
+
+    local_train(global_params, batches, step_mask, rng) -> (local_params, stats)
+
+that runs ``n_steps`` of SGD over pre-gathered mini-batches
+(``batches[name]: (n_steps, B, ...)``), skipping masked steps (heterogeneous
+epoch counts — paper §VI-A).  FedProx adds the proximal term
+``gamma/2 * ||theta - theta_global||^2`` to every step's loss (Li et al.).
+
+The function is vmapped across the cohort by ``repro.fl.round`` — on a mesh,
+with ``spmd_axis_name`` so each mesh data-slice trains its own client.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["make_local_update", "prox_penalty"]
+
+
+def prox_penalty(params, global_params) -> jax.Array:
+    sq = jax.tree.map(lambda a, b: jnp.sum(jnp.square(a.astype(jnp.float32) - b.astype(jnp.float32))), params, global_params)
+    return jax.tree.reduce(jnp.add, sq)
+
+
+def make_local_update(model, opt, update_kind: str = "fedavg", prox_coef: float = 0.5) -> Callable:
+    def loss_fn(params, batch, global_params, rng):
+        loss, metrics = model.loss(params, batch, rng)
+        if update_kind == "fedprox":
+            loss = loss + 0.5 * prox_coef * prox_penalty(params, global_params)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def local_train(global_params, batches: Dict[str, jax.Array], step_mask: jax.Array, rng: jax.Array):
+        opt_state = opt.init(global_params)
+
+        def step(carry, inp):
+            params, opt_state, i = carry
+            batch, m = inp
+            (loss, _), grads = grad_fn(params, batch, global_params, jax.random.fold_in(rng, i))
+            new_params, new_opt = opt.update(params, grads, opt_state, i)
+            # masked step: heterogeneous local epochs — skipped steps are no-ops
+            keep = m.astype(jnp.float32)
+            params = jax.tree.map(lambda n, o: (keep * n.astype(jnp.float32) + (1 - keep) * o.astype(jnp.float32)).astype(o.dtype), new_params, params)
+            opt_state = jax.tree.map(lambda n, o: (keep * n.astype(jnp.float32) + (1 - keep) * o.astype(jnp.float32)).astype(o.dtype), new_opt, opt_state)
+            return (params, opt_state, i + 1), loss * keep
+
+        (params, _, _), losses = jax.lax.scan(
+            step, (global_params, opt_state, jnp.zeros((), jnp.int32)), (batches, step_mask)
+        )
+        n_eff = jnp.maximum(jnp.sum(step_mask), 1.0)
+        return params, {"local_loss": jnp.sum(losses) / n_eff}
+
+    return local_train

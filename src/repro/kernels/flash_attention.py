@@ -1,0 +1,126 @@
+"""Flash attention (causal / sliding-window, GQA) as a Pallas TPU kernel.
+
+TPU adaptation of the classic algorithm: the grid is
+``(batch*q_heads, n_q_blocks, n_kv_blocks)`` with the KV dimension innermost;
+VMEM scratch carries the running max / normaliser / accumulator across KV
+blocks (TPU grids execute sequentially per core, so scratch persists).
+Block shapes are MXU-aligned (multiples of 128 on the sequence dims; the head
+dim rides along whole).  GQA is expressed in the BlockSpec index maps — query
+head ``h`` reads KV head ``h // group``, so no KV duplication is materialised
+in HBM.
+
+Causal structure is exploited two ways: KV blocks that are fully masked are
+skipped via ``pl.when`` (no MXU work issued), and the diagonal block applies
+the triangular mask element-wise.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_kernel_call"]
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, scale, bq, bk, n_kv, causal, window, seq_k
+):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_lo = qi * bq
+    k_lo = kj * bk
+    # block-level skip when the whole KV block is masked out
+    relevant = k_lo < seq_k
+    if causal:
+        relevant = jnp.logical_and(relevant, k_lo <= q_lo + bq - 1)
+    if window > 0:
+        relevant = jnp.logical_and(relevant, k_lo + bk - 1 > q_lo - window)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale  # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)  # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+        q_pos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = k_pos < seq_k
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos)
+        if window > 0:
+            mask = jnp.logical_and(mask, k_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]  # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+        m_scr[...] = m_new
+
+    @pl.when(kj == n_kv - 1)
+    def _finish():
+        l = l_scr[...]
+        o_ref[0, :, :] = (acc_scr[...] / jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+
+def flash_attention_kernel_call(
+    q: jax.Array,  # (BH, Sq, hd)  batch*q_heads flattened
+    k: jax.Array,  # (BKV, Sk, hd) batch*kv_heads flattened
+    v: jax.Array,
+    group: int,  # q heads per kv head
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    BH, Sq, hd = q.shape
+    Sk = k.shape[1]
+    bq = min(block_q, max(Sq, 8))
+    bk = min(block_k, max(Sk, 8))
+    Sq_p = math.ceil(Sq / bq) * bq
+    Sk_p = math.ceil(Sk / bk) * bk
+    if Sq_p != Sq:
+        q = jnp.pad(q, ((0, 0), (0, Sq_p - Sq), (0, 0)))
+    if Sk_p != Sk:
+        k = jnp.pad(k, ((0, 0), (0, Sk_p - Sk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Sk_p - Sk), (0, 0)))
+    n_q, n_kv = Sq_p // bq, Sk_p // bk
+
+    kernel = functools.partial(
+        _kernel, scale=1.0 / math.sqrt(hd), bq=bq, bk=bk, n_kv=n_kv, causal=causal, window=window, seq_k=Sk
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(BH, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b // group, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq_p, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :Sq]

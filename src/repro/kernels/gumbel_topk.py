@@ -1,0 +1,92 @@
+"""Gumbel top-k selection as a Pallas kernel — E3CS sampling at large K.
+
+``A_t ~ multinomialNR(p/k, k)`` == top-k of ``log p + Gumbel`` (Yellott 1977).
+At cross-device-FL scale (K ~ 10^5..10^6 clients) the selection itself becomes
+a bandwidth-bound scan over the weight vector; this kernel streams the
+perturbed scores through VMEM in tiles and maintains the running top-k in a
+scratch buffer via k iterative max-extractions per tile (k << tile, so the
+cost is one VPU max-reduction per candidate).
+
+Layout: grid ``(n_tiles,)``; scratch holds (k, 2) [value, index] pairs merged
+across tiles.  Output: (k,) int32 indices, descending by score.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["gumbel_topk_kernel_call"]
+
+NEG_INF = -1e30
+
+
+def _kernel(s_ref, val_ref, idx_ref, best_v, best_i, *, k, tile, n_tiles, K):
+    ti = pl.program_id(0)
+
+    @pl.when(ti == 0)
+    def _init():
+        best_v[...] = jnp.full_like(best_v, NEG_INF)
+        best_i[...] = jnp.zeros_like(best_i)
+
+    s = s_ref[...].astype(jnp.float32)  # (tile,)
+    base = ti * tile
+    pos = base + jax.lax.broadcasted_iota(jnp.int32, (tile,), 0)
+    s = jnp.where(pos < K, s, NEG_INF)
+
+    # merge this tile into the running top-k: extract the tile's max k times,
+    # each time only if it beats the current k-th best.
+    def body(j, carry):
+        s, bv, bi = carry
+        m = jnp.max(s)
+        am = jnp.argmax(s)
+        gidx = base + am
+        # current minimum of the top-k buffer
+        kmin_pos = jnp.argmin(bv)
+        kmin = bv[kmin_pos]
+        better = m > kmin
+        bv = bv.at[kmin_pos].set(jnp.where(better, m, kmin))
+        bi = bi.at[kmin_pos].set(jnp.where(better, gidx, bi[kmin_pos]))
+        s = s.at[am].set(NEG_INF)
+        return s, bv, bi
+
+    s, bv, bi = jax.lax.fori_loop(0, k, body, (s, best_v[...], best_i[...]))
+    best_v[...] = bv
+    best_i[...] = bi
+
+    @pl.when(ti == n_tiles - 1)
+    def _finish():
+        order = jnp.argsort(-best_v[...])
+        val_ref[...] = best_v[...][order]
+        idx_ref[...] = best_i[...][order].astype(jnp.int32)
+
+
+def gumbel_topk_kernel_call(scores: jax.Array, k: int, tile: int = 8192, interpret: bool = False):
+    """scores: (K,) perturbed log-probabilities. Returns (values, indices)."""
+    K = scores.shape[0]
+    tile = min(tile, max(K, 8))
+    K_p = math.ceil(K / tile) * tile
+    if K_p != K:
+        scores = jnp.pad(scores, (0, K_p - K), constant_values=NEG_INF)
+    n_tiles = K_p // tile
+    kernel = functools.partial(_kernel, k=k, tile=tile, n_tiles=n_tiles, K=K)
+    vals, idx = pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((tile,), lambda t: (t,))],
+        out_specs=[
+            pl.BlockSpec((k,), lambda t: (0,)),
+            pl.BlockSpec((k,), lambda t: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((k,), jnp.float32), pltpu.VMEM((k,), jnp.int32)],
+        interpret=interpret,
+    )(scores)
+    return vals, idx

@@ -1,0 +1,53 @@
+"""Jit'd wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute with ``interpret=True`` — the
+kernel body runs in Python via the Pallas interpreter, which is how
+correctness is validated against ``ref.py``.  On a real TPU backend
+``interpret`` flips off automatically.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_kernel_call
+from .gumbel_topk import gumbel_topk_kernel_call
+from .ssd_scan import ssd_scan_kernel_call
+
+__all__ = ["flash_attention", "ssd_scan", "gumbel_topk_sample"]
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0, block_q: int = 128, block_k: int = 128):
+    """q: (B,S,H,hd); k/v: (B,T,KV,hd). Returns (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    group = H // KV
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, T, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, T, hd)
+    o = flash_attention_kernel_call(
+        qf, kf, vf, group, causal=causal, window=window, block_q=block_q, block_k=block_k, interpret=_interpret()
+    )
+    return o.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, A, B, C, chunk: int = 128):
+    """Chunked SSD scan; see repro.models.ssm for argument shapes."""
+    return ssd_scan_kernel_call(x, dt, A, B, C, chunk=chunk, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tile"))
+def gumbel_topk_sample(rng, p, k: int, tile: int = 8192):
+    """Plackett-Luce k-subset sample over probabilities ``p`` (K,)."""
+    g = jax.random.gumbel(rng, p.shape, jnp.float32)
+    scores = jnp.log(jnp.maximum(p.astype(jnp.float32), 1e-20)) + g
+    _, idx = gumbel_topk_kernel_call(scores, k, tile=tile, interpret=_interpret())
+    return idx

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_ref", "ssd_scan_ref", "gumbel_topk_ref"]
+
+
+def flash_attention_ref(q, k, v, causal: bool = True, window: int = 0):
+    """q: (B,S,H,hd); k/v: (B,T,KV,hd), H = G*KV. Returns (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    s = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32) / jnp.sqrt(hd)
+    qi = jnp.arange(S)[:, None]
+    kj = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kj <= qi
+    if window > 0:
+        mask &= kj > qi - window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    w = jnp.where(jnp.isfinite(w), w, 0.0)  # fully-masked rows
+    out = jnp.einsum("bkgst,btkh->bskgh", w.astype(v.dtype), v)
+    return out.reshape(B, S, H, hd)
+
+
+def ssd_scan_ref(x, dt, A, B, C, chunk: int = 0):
+    """Sequential SSD recurrence (ground truth; chunk arg ignored).
+
+    x: (b,S,H,P); dt: (b,S,H); A: (H,); B/C: (b,S,G,N).
+    Returns (y (b,S,H,P), final_state (b,H,N,P)).
+    """
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=2)
+    Ch = jnp.repeat(C, rep, axis=2)
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp
+        decay = jnp.exp(dtt * A)[:, :, None, None]
+        state = state * decay + jnp.einsum("bh,bhn,bhp->bhnp", dtt, Bt, xt)
+        y = jnp.einsum("bhn,bhnp->bhp", Ct, state)
+        return state, y
+
+    init = jnp.zeros((b, H, N, P), jnp.float32)
+    xs = (
+        jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(Bh.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(Ch.astype(jnp.float32), 1, 0),
+    )
+    final, ys = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), final.astype(x.dtype)
+
+
+def gumbel_topk_ref(scores, k: int):
+    """Top-k indices of perturbed scores (descending)."""
+    _, idx = jax.lax.top_k(scores, k)
+    return idx.astype(jnp.int32)

@@ -1,0 +1,114 @@
+"""Mamba2 SSD chunked scan as a Pallas TPU kernel.
+
+Grid ``(batch, heads, n_chunks)`` — chunks innermost; the inter-chunk
+recurrent state ``(N, P)`` lives in VMEM scratch and persists across the
+chunk dimension (sequential TPU grid).  Per chunk the kernel does the SSD
+block decomposition entirely in VMEM:
+
+    intra:  Y  = ((C B^T) ∘ L ∘ dt_j) X          (Q,Q)x(Q,P) MXU matmuls
+    inter:  Y += (C exp(cum)) S_prev             (Q,N)x(N,P)
+    state:  S  = exp(total) S_prev + (dt exp(total-cum) B)^T X
+
+Chunk length Q and state width N are 128 (MXU-aligned); the head dim P rides
+whole (64).  B/C are shared across the heads of a group — the BlockSpec index
+map reads group ``h // rep``, mirroring the GQA trick in flash attention.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_scan_kernel_call"]
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_ref, state_scr, *, Q, n_chunks, seq_len):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, :, 0].astype(jnp.float32)  # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)  # (Q,)
+    A = a_ref[0].astype(jnp.float32)  # scalar (negative)
+    Bm = b_ref[0, :, 0].astype(jnp.float32)  # (Q, N)
+    Cm = c_ref[0, :, 0].astype(jnp.float32)  # (Q, N)
+
+    # zero-out padded tail positions (dt=0 makes them inert)
+    pos = ci * Q + jax.lax.broadcasted_iota(jnp.int32, (Q, 1), 0)[:, 0]
+    dt = jnp.where(pos < seq_len, dt, 0.0)
+
+    dA = dt * A  # (Q,)
+    cum = jnp.cumsum(dA)  # (Q,)
+    total = cum[-1]
+
+    # ---- intra-chunk ----
+    li = cum[:, None] - cum[None, :]  # (Q, Q)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(tri, jnp.exp(li), 0.0)
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())))  # (Q, Q)
+    att = scores * L * dt[None, :]
+    y = jax.lax.dot_general(att, x, (((1,), (0,)), ((), ())))  # (Q, P)
+
+    # ---- inter-chunk: contribution of the carried state ----
+    s_prev = state_scr[...]  # (N, P)
+    y = y + jax.lax.dot_general(Cm * jnp.exp(cum)[:, None], s_prev, (((1,), (0,)), ((), ())))
+
+    # ---- state update ----
+    w = dt * jnp.exp(total - cum)  # (Q,)
+    s_new = s_prev * jnp.exp(total) + jax.lax.dot_general(Bm * w[:, None], x, (((0,), (0,)), ((), ())))
+    state_scr[...] = s_new
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _finish():
+        st_ref[0, 0] = s_new.astype(st_ref.dtype)
+
+
+def ssd_scan_kernel_call(x, dt, A, B, C, chunk: int = 128, interpret: bool = False):
+    """x: (b,S,H,P); dt: (b,S,H); A: (H,); B/C: (b,S,G,N).
+
+    Returns (y (b,S,H,P), final_state (b,H,N,P)).
+    """
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Q = min(chunk, max(S, 8))
+    S_p = math.ceil(S / Q) * Q
+    if S_p != S:
+        pad = S_p - S
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = S_p // Q
+
+    kernel = functools.partial(_kernel, Q=Q, n_chunks=n_chunks, seq_len=S)
+    y, st = pl.pallas_call(
+        kernel,
+        grid=(b, H, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, Q, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, Q, 1, N), lambda bi, hi, ci, r=rep: (bi, ci, hi // r, 0)),
+            pl.BlockSpec((1, Q, 1, N), lambda bi, hi, ci, r=rep: (bi, ci, hi // r, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, S_p, H, P), x.dtype),
+            jax.ShapeDtypeStruct((b, H, N, P), x.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C)
+    return y[:, :S], st

@@ -1,0 +1,420 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("REPRO_DRYRUN_XLA_FLAGS")
+    or "--xla_force_host_platform_device_count=" + os.environ.get("REPRO_DRYRUN_DEVICES", "512")
+)
+
+"""Multi-pod dry-run driver (DESIGN.md §6).
+
+For every (architecture x input-shape x mesh) this lowers + compiles the
+jitted step with explicit shardings on the production mesh built from 512
+host placeholder devices, then records ``memory_analysis()``,
+``cost_analysis()`` and the collective bytes parsed from the optimized HLO
+into ``results/dryrun/<arch>__<shape>__<mesh>.json``.
+
+Usage:
+    python -m repro.launch.dryrun --arch llama3-405b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh both --skip-existing
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ASSIGNED, INPUT_SHAPES, get_config
+from repro.configs.base import FLConfig, InputShape, ModelConfig
+from repro.core.selection import e3cs_init, e3cs_probs, e3cs_update, sample_selection, selection_mask
+from repro.launch.hlo import collective_bytes, count_ops
+from repro.launch.mesh import axis_sizes, make_production_mesh
+from repro.models import build_model, input_specs
+from repro.models.sharding import cohort_rules, logical_to_spec, silo_rules, use_rules
+from repro.models.transformer import cache_specs
+from repro.optim import sgd
+
+# hardware constants (TPU v5e)
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s
+LINK_BW = 50e9  # B/s per ICI link (conservative single-link model)
+
+# grad-accumulation microbatch counts for silo-mapped archs (memory planning)
+MICRO = {"llama3-405b": 8, "deepseek-v3-671b": 8, "qwen2-vl-72b": 4, "qwen3-moe-30b-a3b": 2}
+WINDOW_LONG = 8192  # sliding window for attention-family long_500k serving
+
+_RULES_PATCH = {}  # hillclimb experiments patch the sharding rules here
+
+SKIPS = {
+    ("whisper-base", "long_500k"): (
+        "enc-dec with a 448-token-class decoder; a 500k text self-attention cache is architecturally meaningless"
+    ),
+}
+
+
+def _sds(shape, dtype, spec, mesh):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def _spec_tree_to_sharding(spec_tree, mesh, rules):
+    return jax.tree.map(
+        lambda axes: NamedSharding(mesh, logical_to_spec(axes, rules)),
+        spec_tree,
+        is_leaf=lambda s: isinstance(s, tuple) and all(isinstance(a, (str, type(None))) for a in s),
+    )
+
+
+def _param_shapes_and_specs(model, cfg):
+    captured = {}
+
+    def f(r):
+        params, specs = model.init(r)
+        captured["specs"] = specs
+        return params
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, captured["specs"]
+
+
+def _attach(shapes_tree, sharding_tree):
+    return jax.tree.map(lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh), shapes_tree, sharding_tree)
+
+
+def _replicated(tree, mesh):
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=NamedSharding(mesh, P())), tree)
+
+
+def serve_rules(cfg, sizes, kind: str):
+    base = silo_rules(cfg, sizes) if cfg.fl_mapping == "silo" else cohort_rules(cfg, sizes)
+    if kind == "decode" and (base.get("kv_heads") is None or cfg.attn == "mla"):
+        # kv heads can't shard over `model` -> shard the cache sequence instead
+        base["cache_seq"] = "model"
+        base["kv_heads"] = None
+    return base
+
+
+def _batch_axis(name: str) -> int:
+    return 1 if name == "positions" else 0
+
+
+def _batch_sds(batch_spec, rules, mesh, extra_lead=()):
+    """Shard the batch dim of each input per rules['batch']."""
+    out = {}
+    for name, s in batch_spec.items():
+        spec = [None] * (len(extra_lead) + len(s.shape))
+        spec[len(extra_lead) + _batch_axis(name)] = rules.get("batch")
+        out[name] = _sds(tuple(extra_lead) + s.shape, s.dtype, P(*spec), mesh)
+    return out
+
+
+# ------------------------------------------------------------------ train --
+
+
+def build_train_program(cfg: ModelConfig, shape: InputShape, mesh, n_micro_override=None):
+    sizes = axis_sizes(mesh)
+    fsdp_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    n_fsdp = 1
+    for a in fsdp_axes:
+        n_fsdp *= sizes[a]
+    model = build_model(cfg, impl="einsum")
+
+    if cfg.fl_mapping == "silo":
+        rules = silo_rules(cfg, sizes)
+        rules.update(_RULES_PATCH)
+        n_micro = n_micro_override or MICRO.get(cfg.name, 1)
+        opt = sgd(1e-2, 0.9)
+
+        def train_step(params, opt_state, batch, rng):
+            B = batch["tokens"].shape[0]
+            mb = B // n_micro
+
+            def micro(acc, i):
+                sl = {
+                    k: jax.lax.dynamic_slice_in_dim(v, i * (v.shape[_batch_axis(k)] // n_micro),
+                                                    v.shape[_batch_axis(k)] // n_micro, _batch_axis(k))
+                    for k, v in batch.items()
+                }
+                (loss, _), grads = jax.value_and_grad(model.loss, has_aux=True)(params, sl, rng)
+                return jax.tree.map(lambda a, g: a + g.astype(a.dtype), acc, grads), loss
+
+            acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            micro_fn = jax.checkpoint(micro) if n_micro > 1 else micro
+            acc, losses = jax.lax.scan(micro_fn, acc0, jnp.arange(n_micro))
+            grads = jax.tree.map(lambda g, p_: (g / n_micro).astype(p_.dtype), acc, params)
+            new_params, new_opt = opt.update(params, grads, opt_state, 0)
+            return new_params, new_opt, jnp.mean(losses)
+
+        with use_rules(rules):
+            pshapes, pspecs = _param_shapes_and_specs(model, cfg)
+        psharding = _spec_tree_to_sharding(pspecs, mesh, rules)
+        params_sds = _attach(pshapes, psharding)
+        opt_shapes = jax.eval_shape(opt.init, pshapes)
+        opt_sds = _attach(opt_shapes, psharding)  # momentum mirrors params
+        batch_sds = _batch_sds(input_specs(cfg, shape), rules, mesh)
+        rng_sds = _sds((2,), jnp.uint32, P(), mesh)
+        return train_step, (params_sds, opt_sds, batch_sds, rng_sds), rules
+
+    # ---- cohort mapping: the full paper round in one program ----
+    rules = cohort_rules(cfg, sizes)
+    rules["batch"] = None  # per-client batch lives inside a (pod,data) slice
+    rules.update(_RULES_PATCH)
+    n_clients = n_fsdp  # one client per (pod, data) slice
+    B_cl = max(1, shape.global_batch // n_clients)
+    K_virtual = 1024
+    k_sel = n_clients
+    opt = sgd(1e-2, 0.9)
+    from repro.fl.client import make_local_update
+
+    local = make_local_update(model, opt, "fedavg")
+    spmd = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+    vlocal = jax.vmap(local, in_axes=(None, 0, 0, 0), spmd_axis_name=spmd)
+
+    def round_step(params, e3cs_state, batches, rng):
+        sigma = jnp.float32(0.5 * k_sel / K_virtual)
+        p, capped = e3cs_probs(e3cs_state, k_sel, sigma)
+        r_sel, r_x, r_loc = jax.random.split(rng, 3)
+        idx = sample_selection(r_sel, p, k_sel)
+        mask = selection_mask(idx, K_virtual)
+        x_full = jax.random.bernoulli(r_x, 0.7, (K_virtual,)).astype(jnp.float32)
+        success = x_full[idx]
+        step_mask = jnp.ones((k_sel, 1), jnp.float32)
+        cohort, stats = vlocal(params, batches, step_mask, jax.random.split(r_loc, k_sel))
+        from repro.fl.aggregation import aggregate
+
+        new_params = aggregate(
+            params, cohort, success, jnp.ones((k_sel,)), jnp.float32(K_virtual), K_virtual, "fedavg"
+        )
+        new_state = e3cs_update(e3cs_state, p, capped, mask, x_full, k_sel, sigma, 0.5)
+        return new_params, new_state, stats["local_loss"].mean()
+
+    with use_rules(rules):
+        pshapes, pspecs = _param_shapes_and_specs(model, cfg)
+    params_sds = _attach(pshapes, _spec_tree_to_sharding(pspecs, mesh, rules))
+    e3cs_sds = _replicated(jax.eval_shape(lambda: e3cs_init(K_virtual)), mesh)
+    base = input_specs(cfg, shape)
+    batch_sds = {}
+    client_axis = spmd
+    for name, s in base.items():
+        per_client = (B_cl,) + tuple(s.shape[1:]) if _batch_axis(name) == 0 else s.shape[:1] + (B_cl,) + tuple(s.shape[2:])
+        shp = (k_sel, 1) + per_client
+        spec = [client_axis] + [None] * (len(shp) - 1)
+        batch_sds[name] = _sds(shp, s.dtype, P(*spec), mesh)
+    rng_sds = _sds((2,), jnp.uint32, P(), mesh)
+    return round_step, (params_sds, e3cs_sds, batch_sds, rng_sds), rules
+
+
+# ------------------------------------------------------------------ serve --
+
+
+def build_serve_program(cfg: ModelConfig, shape: InputShape, mesh):
+    sizes = axis_sizes(mesh)
+    kind = shape.kind
+    window = WINDOW_LONG if (shape.name == "long_500k" and cfg.family != "ssm") else 0
+    impl = "chunked" if (kind == "prefill" and shape.seq_len >= 8192) else "einsum"
+    model = build_model(cfg, window=window, impl=impl)
+    rules = serve_rules(cfg, sizes, kind)
+    if shape.global_batch < 8:
+        rules["batch"] = None  # batch=1 long-context decode: replicate batch
+    rules.update(_RULES_PATCH)
+
+    with use_rules(rules):
+        pshapes, pspecs = _param_shapes_and_specs(model, cfg)
+    params_sds = _attach(pshapes, _spec_tree_to_sharding(pspecs, mesh, rules))
+
+    if kind == "prefill":
+        batch_sds = _batch_sds(input_specs(cfg, shape, window=window), rules, mesh)
+
+        def prefill_step(params, batch):
+            logits, caches = model.prefill(params, batch)
+            return logits[:, -1:], caches
+
+        return prefill_step, (params_sds, batch_sds), rules
+
+    # ---- decode ----
+    cshapes = jax.eval_shape(lambda: model.init_caches(shape.global_batch, shape.seq_len))
+    if cfg.family == "encdec":
+        cax = {
+            "self": type(cshapes["self"])(
+                ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+                ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+                ("layers",),
+            ),
+            "cross": (
+                ("layers", "batch", "enc_seq", "kv_heads", "head_dim"),
+                ("layers", "batch", "enc_seq", "kv_heads", "head_dim"),
+            ),
+        }
+    else:
+        cax = cache_specs(cfg)
+    is_axes_leaf = lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x)
+    flat_shapes = jax.tree.leaves(cshapes)
+    flat_axes = jax.tree.flatten(cax, is_leaf=is_axes_leaf)[0]
+    assert len(flat_shapes) == len(flat_axes), (len(flat_shapes), len(flat_axes))
+    flat_sds = [
+        _sds(s.shape, s.dtype, logical_to_spec(a, rules) if len(a) == len(s.shape) else P(), mesh)
+        for s, a in zip(flat_shapes, flat_axes)
+    ]
+    caches_sds = jax.tree.unflatten(jax.tree.structure(cshapes), flat_sds)
+    tok_sds = _sds((shape.global_batch, 1), jnp.int32, P(rules.get("batch"), None), mesh)
+
+    def decode_step(params, tokens, caches):
+        return model.decode(params, tokens, caches)
+
+    return decode_step, (params_sds, tok_sds, caches_sds), rules
+
+
+# -------------------------------------------------------------------- run --
+
+
+def run_one(
+    arch: str, shape_name: str, mesh_kind: str, out_dir: str, skip_existing: bool = True,
+    overrides: Dict = None, tag: str = "", rules_patch: Dict = None,
+) -> Dict:
+    suffix = f"__{tag}" if tag else ""
+    outfile = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_kind}{suffix}.json")
+    if skip_existing and os.path.exists(outfile):
+        with open(outfile) as f:
+            rec = json.load(f)
+            if rec.get("status") == "ok" or rec.get("status") == "skipped":
+                return rec
+    import dataclasses as _dc
+
+    cfg = get_config(arch)
+    if overrides:
+        cfg = _dc.replace(cfg, **overrides)
+    if rules_patch:
+        global _RULES_PATCH
+        _RULES_PATCH = dict(rules_patch)
+    shape = INPUT_SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind, "status": "ok",
+           "overrides": overrides or {}, "rules_patch": rules_patch or {}, "tag": tag}
+    if (arch, shape_name) in SKIPS:
+        rec.update(status="skipped", reason=SKIPS[(arch, shape_name)])
+        _write(outfile, rec)
+        return rec
+    t0 = time.time()
+    try:
+        override = os.environ.get("REPRO_DRYRUN_MESH")  # e.g. "4x2" or "2x2x2" (tests)
+        if override:
+            dims = tuple(int(x) for x in override.split("x"))
+            axes = ("pod", "data", "model")[-len(dims):]
+            from repro.launch.mesh import make_mesh
+
+            mesh = make_mesh(dims, axes)
+        else:
+            mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        with mesh:
+            if shape.kind == "train":
+                fn, args, rules = build_train_program(cfg, shape, mesh)
+            else:
+                fn, args, rules = build_serve_program(cfg, shape, mesh)
+            with use_rules(rules):
+                lowered = jax.jit(fn).lower(*args)
+                t_lower = time.time() - t0
+                compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        n_chips = mesh.devices.size
+
+        # corrected (scan-trip-count-aware) per-device metrics
+        from repro.launch.metrics import corrected_metrics
+
+        corr = corrected_metrics(
+            cfg,
+            shape,
+            mesh,
+            lambda c, s, m: build_train_program(c, s, m, n_micro_override=1),
+            build_serve_program,
+        )
+        flops = corr["per_device_flops"]
+        bytes_acc = corr["per_device_bytes"]
+        coll_total = corr["per_device_coll"]
+        terms = {
+            "compute_s": flops / PEAK_FLOPS,
+            "memory_s": bytes_acc / HBM_BW,
+            "collective_s": coll_total / LINK_BW,
+        }
+        terms["bottleneck"] = max(
+            ("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k]
+        ).replace("_s", "")
+        n_active = cfg.n_active_params()
+        tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+        model_flops = (6 if shape.kind == "train" else 2) * n_active * tokens
+        mem_fields = {}
+        for k in ("argument_size_in_bytes", "output_size_in_bytes", "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            if hasattr(mem, k):
+                mem_fields[k] = int(getattr(mem, k))
+        rec.update(
+            mesh_shape=list(mesh.devices.shape),
+            n_chips=n_chips,
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            memory=mem_fields,
+            cost_raw_scanbody={k: float(v) for k, v in cost.items() if isinstance(v, (int, float))},
+            collectives_raw_scanbody=coll,
+            corrected=corr,
+            ops=count_ops(hlo),
+            roofline=terms,
+            model_flops=model_flops,
+            hlo_flops_per_dev=flops,
+            useful_flops_ratio=(model_flops / (flops * n_chips)) if flops else None,
+            per_device_hbm_gb=round(
+                sum(mem_fields.get(k, 0) for k in ("argument_size_in_bytes", "output_size_in_bytes", "temp_size_in_bytes"))
+                / 1e9,
+                3,
+            ),
+        )
+        print(mem)  # memory_analysis: proves it fits
+    except Exception as e:  # noqa: BLE001
+        rec.update(status="fail", error=f"{type(e).__name__}: {e}", traceback=traceback.format_exc()[-4000:])
+    rec["elapsed_s"] = round(time.time() - t0, 1)
+    globals()["_RULES_PATCH"] = {}
+    _write(outfile, rec)
+    return rec
+
+
+def _write(path, rec):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--no-skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = ASSIGNED if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                rec = run_one(arch, shape, mk, args.out, skip_existing=not args.no_skip_existing)
+                status = rec["status"]
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (
+                        f"compute {r['compute_s']:.3e}s mem {r['memory_s']:.3e}s coll {r['collective_s']:.3e}s"
+                        f" | {r['bottleneck']} | hbm/dev {rec['per_device_hbm_gb']}GB | compile {rec.get('compile_s', '?')}s"
+                    )
+                elif status == "fail":
+                    extra = rec["error"][:200]
+                else:
+                    extra = rec.get("reason", "")[:80]
+                print(f"[{status:7s}] {arch:22s} {shape:12s} {mk:6s} {extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Parse collective ops + their operand bytes out of optimized HLO text.
+
+``cost_analysis()`` does not report collective traffic, so the roofline's
+third term comes from here: sum the operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute in the
+post-SPMD module (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+__all__ = ["collective_bytes", "parse_shape_bytes", "count_ops"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+
+def parse_shape_bytes(shape_str: str) -> int:
+    """Bytes of 'bf16[16,128,4096]' or a tuple '(f32[2], bf16[3,4])'."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-collective-kind result bytes (per device, post-SPMD module).
+
+    HLO lines look like
+      ``%ar = bf16[4096]{0} all-reduce(bf16[4096]{0} %x), replica_groups=...``
+    We take the *result* shape (between '=' and the op name), which for
+    all-gather counts the gathered bytes and for reduce-scatter the scattered
+    output — a per-device traffic proxy consistent across kinds.
+    """
+    out: Dict[str, float] = defaultdict(float)
+    counts: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        for coll in _COLLECTIVES:
+            tag = " " + coll
+            pos = s.find(tag + "(")
+            if pos < 0:
+                pos = s.find(tag + "-start(")
+            if pos < 0:
+                continue
+            eq = s.find("=")
+            if eq < 0 or eq > pos:
+                break
+            shape_str = s[eq + 1 : pos]
+            out[coll] += parse_shape_bytes(shape_str)
+            counts[coll] += 1
+            break
+    out_total = dict(out)
+    out_total["total"] = float(sum(out.values()))
+    out_total.update({f"n_{k}": float(v) for k, v in counts.items()})
+    return out_total
+
+
+def count_ops(hlo_text: str, names=("fusion", "custom-call", "while", "dynamic-update-slice")) -> Dict[str, int]:
+    c = {}
+    for n in names:
+        c[n] = len(re.findall(rf"\s{re.escape(n)}[\(\.]", hlo_text))
+    return c

@@ -1,0 +1,29 @@
+"""Production meshes (DESIGN.md §6).
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state.  The single-pod mesh is
+(16, 16) = 256 chips with axes (data, model); the multi-pod mesh prepends a
+``pod`` axis: (2, 16, 16) = 512 chips.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh", "axis_sizes"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (tests use small fake-device meshes, e.g. (2, 4))."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def axis_sizes(mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

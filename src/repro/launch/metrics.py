@@ -1,0 +1,162 @@
+"""Corrected roofline metrics (DESIGN.md §6, EXPERIMENTS.md §Roofline).
+
+``compiled.cost_analysis()`` counts each ``while`` (scan) body ONCE, so the
+scan-over-layers proof programs undercount FLOPs/bytes/collectives by ~L.
+This module compiles small *unrolled* variants of the same program at full
+width (1-3 layers, ``scan_layers=False``) and extrapolates:
+
+    total(kind) = m(V0) + sum_kind (n_full(kind) - n_V0(kind)) * delta(kind)
+
+where ``delta(kind)`` is the exact marginal cost of one layer of that kind,
+measured as the difference between two variants.  Chunked-attention prefill
+(inner scans, again counted once) is handled analytically: the quadratic
+attention FLOPs and flash-style bytes are added in closed form and the
+(negligible, counted-once) scanned contribution is left in place.
+
+Memory numbers are NOT extrapolated — the peak comes from the real scanned
+program's ``memory_analysis()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.launch.hlo import collective_bytes
+
+__all__ = ["corrected_metrics", "attention_analytic"]
+
+
+def _measure(cfg, shape, mesh, build_train, build_serve) -> Dict[str, float]:
+    """Compile one variant and return per-device flops/bytes/collective bytes."""
+    with mesh:
+        if shape.kind == "train":
+            fn, args, rules = build_train(cfg, shape, mesh)
+        else:
+            fn, args, rules = build_serve(cfg, shape, mesh)
+        from repro.models.sharding import use_rules
+
+        with use_rules(rules):
+            compiled = jax.jit(fn).lower(*args).compile()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": float(coll.get("total", 0.0)),
+    }
+
+
+def _variant(cfg: ModelConfig, **kw) -> ModelConfig:
+    base = dict(scan_layers=False)  # mtp head kept: it is part of every variant's fixed cost
+    base.update(kw)
+    return dataclasses.replace(cfg, **base)
+
+
+def _plan(cfg: ModelConfig):
+    """Variant plan: list of (name, variant_cfg) + composition weights."""
+    fam = cfg.family
+    if fam == "moe" and cfg.n_dense_layers:
+        a = _variant(cfg, n_layers=2, n_dense_layers=1)  # 1 dense + 1 moe
+        b = _variant(cfg, n_layers=3, n_dense_layers=1)  # 1 dense + 2 moe
+        c = _variant(cfg, n_layers=3, n_dense_layers=2)  # 2 dense + 1 moe
+        # a = E + 1*dense + 1*moe ; b adds one moe ; c adds one dense:
+        # total = a + (n_moe-1)*(b-a) + (n_dense-1)*(c-a)
+        return {
+            "variants": {"a": a, "b": b, "c": c},
+            "compose": lambda m: {
+                k: m["a"][k]
+                + (cfg.n_layers - cfg.n_dense_layers - 1) * (m["b"][k] - m["a"][k])
+                + (cfg.n_dense_layers - 1) * (m["c"][k] - m["a"][k])
+                for k in ("flops", "bytes", "coll")
+            },
+        }
+    if fam == "moe":
+        a = _variant(cfg, n_layers=1)
+        b = _variant(cfg, n_layers=2)
+        return _two_point(cfg, a, b)
+    if fam == "hybrid" and cfg.hybrid_attn_every:
+        a = _variant(cfg, n_layers=1, hybrid_attn_every=0)
+        b = _variant(cfg, n_layers=2, hybrid_attn_every=0)
+        c = _variant(cfg, n_layers=1, hybrid_attn_every=1)  # 1 ssm + 1 shared site
+        n_sites = cfg.n_layers // cfg.hybrid_attn_every
+        return {
+            "variants": {"a": a, "b": b, "c": c},
+            "compose": lambda m: {
+                k: m["a"][k]
+                + (cfg.n_layers - 1) * (m["b"][k] - m["a"][k])  # ssm layers
+                + n_sites * (m["c"][k] - m["a"][k])  # shared-attn sites
+                for k in ("flops", "bytes", "coll")
+            },
+        }
+    if fam == "encdec":
+        a = _variant(cfg, n_layers=1, n_enc_layers=1)
+        b = _variant(cfg, n_layers=2, n_enc_layers=1)
+        c = _variant(cfg, n_layers=1, n_enc_layers=2)
+        return {
+            "variants": {"a": a, "b": b, "c": c},
+            "compose": lambda m: {
+                k: m["a"][k]
+                + (cfg.n_layers - 1) * (m["b"][k] - m["a"][k])
+                + (cfg.n_enc_layers - 1) * (m["c"][k] - m["a"][k])
+                for k in ("flops", "bytes", "coll")
+            },
+        }
+    # dense / vlm / ssm
+    a = _variant(cfg, n_layers=1)
+    b = _variant(cfg, n_layers=2)
+    return _two_point(cfg, a, b)
+
+
+def _two_point(cfg, a, b):
+    return {
+        "variants": {"a": a, "b": b},
+        "compose": lambda m: {
+            k: m["a"][k] + (cfg.n_layers - 1) * (m["b"][k] - m["a"][k]) for k in ("flops", "bytes", "coll")
+        },
+    }
+
+
+def attention_analytic(cfg: ModelConfig, shape: InputShape, n_chips: int, window: int = 0) -> Dict[str, float]:
+    """Closed-form quadratic-attention FLOPs + flash-style bytes per device
+    (used for chunked prefill where the inner scans defeat cost_analysis)."""
+    B, S = shape.global_batch, shape.seq_len
+    W = min(window, S) if window else S
+    if cfg.family == "ssm":
+        return {"flops": 0.0, "bytes": 0.0}
+    hd = cfg.resolved_head_dim
+    if cfg.attn == "mla":
+        H = cfg.n_heads
+        dqk = cfg.kv_lora_rank + cfg.qk_rope_head_dim  # absorbed scores
+        dv = cfg.kv_lora_rank
+        per_layer = 2.0 * B * S * (W / 2 if not window else W) * H * (dqk + dv)
+        n_attn = cfg.n_layers
+    elif cfg.family == "hybrid":
+        H = cfg.n_heads
+        per_layer = 2.0 * B * S * (W / 2 if not window else W) * H * (2 * hd)
+        n_attn = cfg.n_layers // cfg.hybrid_attn_every if cfg.hybrid_attn_every else 0
+    else:
+        H = cfg.n_heads
+        per_layer = 2.0 * B * S * (W / 2 if not window else W) * H * (2 * hd)
+        n_attn = cfg.n_layers + (cfg.n_enc_layers if cfg.family == "encdec" else 0)
+    flops = per_layer * n_attn
+    # flash-style HBM traffic: Q read once, K/V streamed once per q-pass
+    kv_dim = cfg.n_kv_heads * hd if cfg.attn != "mla" else (cfg.kv_lora_rank + cfg.qk_rope_head_dim)
+    bytes_ = n_attn * B * S * (2 * H * hd + 2 * kv_dim) * 2.0
+    return {"flops": flops / n_chips, "bytes": bytes_ / n_chips}
+
+
+def corrected_metrics(cfg, shape, mesh, build_train, build_serve) -> Dict:
+    plan = _plan(cfg)
+    measured = {name: _measure(v, shape, mesh, build_train, build_serve) for name, v in plan["variants"].items()}
+    total = plan["compose"](measured)
+    out = {"per_device_" + k: v for k, v in total.items()}
+    if shape.kind == "prefill" and shape.seq_len >= 8192:
+        extra = attention_analytic(cfg, shape, mesh.devices.size)
+        out["per_device_flops"] += extra["flops"]
+        out["per_device_bytes"] += extra["bytes"]
+        out["attn_analytic"] = extra
+    out["variants_raw"] = measured
+    return out

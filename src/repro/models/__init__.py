@@ -1,0 +1,2 @@
+from .api import Model, build_model, input_specs, cross_entropy
+from . import sharding, layers, attention, mla, moe, ssm, transformer, encdec, cnn  # noqa: F401

@@ -1,0 +1,192 @@
+"""Model façade: one uniform interface over all families.
+
+``build_model(cfg)`` returns a ``Model`` with pure functions:
+    init(rng) -> (params, specs)         specs = logical-axis pytree
+    loss(params, batch, rng) -> (loss, metrics)
+    forward(params, batch) -> logits
+    prefill(params, batch) -> (logits, caches)
+    decode(params, tokens, caches) -> (logits, caches)
+    init_caches(B, S_cache) -> caches
+
+``input_specs(cfg, shape)`` builds jax.ShapeDtypeStruct stand-ins for the
+dry-run (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import cnn as cnn_mod
+from . import encdec as encdec_mod
+from . import transformer as tr
+from repro.configs.base import InputShape, ModelConfig
+
+__all__ = ["Model", "build_model", "input_specs", "cross_entropy"]
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token CE in fp32. logits (..., V), labels (...) int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: Callable
+    loss: Callable
+    forward: Callable
+    prefill: Callable
+    decode: Callable
+    init_caches: Callable
+
+
+def build_model(cfg: ModelConfig, window: int = 0, impl: str = "einsum") -> Model:
+    if cfg.family == "cnn":
+        return _build_cnn(cfg)
+    if cfg.family == "encdec":
+        return _build_encdec(cfg, window)
+    return _build_lm(cfg, window, impl)
+
+
+def _build_lm(cfg, window, impl):
+    def init(rng):
+        return tr.model_init(rng, cfg)
+
+    def loss(params, batch, rng=None):
+        logits, _, (aux, mtp_logits) = tr.forward(params, cfg, batch, "train", window, impl)
+        labels = batch["labels"]
+        if cfg.family == "vlm":
+            # image positions carry no LM loss
+            P = cfg.n_patches
+            logits = logits[:, P:]
+        ce = cross_entropy(logits[:, :-1], labels[:, 1:])
+        total = ce + cfg.router_aux_coef * aux
+        metrics = {"ce": ce, "aux": aux}
+        if mtp_logits is not None:
+            tl = mtp_logits[:, cfg.n_patches :] if cfg.family == "vlm" else mtp_logits
+            # mtp_logits[:, t] predicts labels[t+2] (length S-1 vs labels S)
+            mtp_ce = cross_entropy(tl[:, :-1], labels[:, 2:])
+            total = total + 0.1 * mtp_ce
+            metrics["mtp_ce"] = mtp_ce
+        return total, metrics
+
+    def forward(params, batch):
+        logits, _, _ = tr.forward(params, cfg, batch, "train", window, impl)
+        return logits
+
+    def prefill(params, batch, max_len=None):
+        logits, caches, _ = tr.forward(params, cfg, batch, "prefill", window, impl)
+        S = next(iter(batch.values())).shape[1] if "tokens" not in batch else batch["tokens"].shape[1]
+        if cfg.family == "vlm":
+            S = batch["tokens"].shape[1] + cfg.n_patches
+        margin = (max_len - S) if max_len else 64
+        caches = tr.pad_caches(caches, margin, window)
+        return logits, caches
+
+    def decode(params, tokens, caches):
+        return tr.decode_step(params, cfg, tokens, caches, window)
+
+    def init_caches(B, S_cache, dtype=None):
+        return tr.init_caches(cfg, B, S_cache, window, dtype or jnp.dtype(cfg.dtype))
+
+    return Model(cfg, init, loss, forward, prefill, decode, init_caches)
+
+
+def _build_encdec(cfg, window):
+    def init(rng):
+        return encdec_mod.encdec_init(rng, cfg)
+
+    def loss(params, batch, rng=None):
+        logits, _, _ = encdec_mod.encdec_forward(params, cfg, batch, "train", window)
+        return cross_entropy(logits[:, :-1], batch["labels"][:, 1:]), {}
+
+    def forward(params, batch):
+        return encdec_mod.encdec_forward(params, cfg, batch, "train", window)[0]
+
+    def prefill(params, batch, max_len=None):
+        logits, caches, _ = encdec_mod.encdec_forward(params, cfg, batch, "prefill", window)
+        S = batch["tokens"].shape[1]
+        margin = (max_len - S) if max_len else 64
+        if margin > 0 and window == 0:
+            from .attention import KVCache
+
+            c = caches["self"]
+            pad = [(0, 0)] * c.k.ndim
+            pad[2] = (0, margin)
+            caches["self"] = KVCache(jnp.pad(c.k, pad), jnp.pad(c.v, pad), c.pos)
+        return logits, caches
+
+    def decode(params, tokens, caches):
+        return encdec_mod.encdec_decode_step(params, cfg, tokens, caches, window)
+
+    def init_caches(B, S_cache, dtype=None):
+        return encdec_mod.encdec_init_caches(cfg, B, S_cache, window, dtype or jnp.dtype(cfg.dtype))
+
+    return Model(cfg, init, loss, forward, prefill, decode, init_caches)
+
+
+def _build_cnn(cfg):
+    def init(rng):
+        return cnn_mod.cnn_init(rng, cfg)
+
+    def loss(params, batch, rng=None):
+        logits = cnn_mod.cnn_forward(params, cfg, batch)
+        ce = cross_entropy(logits, batch["y"])
+        acc = jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))
+        return ce, {"acc": acc}
+
+    def forward(params, batch):
+        return cnn_mod.cnn_forward(params, cfg, batch)
+
+    def _na(*a, **k):
+        raise NotImplementedError("CNN has no serving path")
+
+    return Model(cfg, init, loss, forward, _na, _na, _na)
+
+
+# ------------------------------------------------------------ input specs --
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, window: int = 0) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this shape.
+
+    For train/prefill: the token batch (+frontend stubs).  For decode: one
+    new token per sequence plus the KV/state caches sized to ``seq_len``.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if cfg.family == "cnn":
+        s = cnn_mod.CNN_SHAPES[cfg.name.replace("-smoke", "")]
+        return {
+            "x": jax.ShapeDtypeStruct((B, *s["img"]), jnp.float32),
+            "y": jax.ShapeDtypeStruct((B,), i32),
+        }
+    if shape.kind in ("train", "prefill"):
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if shape.kind == "train":
+            batch["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        if cfg.family == "vlm":
+            P = cfg.n_patches
+            batch["tokens"] = jax.ShapeDtypeStruct((B, S - P), i32)
+            if shape.kind == "train":
+                batch["labels"] = jax.ShapeDtypeStruct((B, S - P), i32)
+            batch["patch_embeds"] = jax.ShapeDtypeStruct((B, P, cfg.d_patch), jnp.bfloat16)
+            batch["positions"] = jax.ShapeDtypeStruct((3, B, S), i32)
+        if cfg.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct((B, cfg.enc_len, cfg.d_model), jnp.bfloat16)
+        return batch
+    # decode: one token + caches pre-filled to S
+    model = build_model(cfg, window=window)
+    caches = jax.eval_shape(lambda: model.init_caches(B, S))
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+        "caches": caches,
+    }

@@ -1,0 +1,232 @@
+"""GQA/MQA/MHA attention with RoPE / M-RoPE, sliding window, and KV cache.
+
+Three entry points share one score/softmax core:
+  * ``attn_apply(..., mode="train")``   — full-sequence causal.
+  * ``attn_apply(..., mode="prefill")`` — causal + returns the filled cache.
+  * ``attn_decode``                     — one new token against a cache.
+
+A ``window > 0`` enables sliding-window attention; in decode mode the cache
+is a ring buffer of ``window`` slots, so `long_500k` serving keeps O(window)
+memory for dense architectures (DESIGN.md §5).
+
+The XLA einsum path is the default (robust for SPMD lowering); the Pallas
+flash kernel (`repro.kernels.flash_attention`) is selectable for the
+train/prefill hot path via ``impl="flash"``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParamBuilder, apply_rope, apply_mrope
+from .sharding import shard
+
+__all__ = ["attn_init", "attn_apply", "attn_decode", "init_kv_cache", "KVCache"]
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S_cache, KV, hd)
+    v: jax.Array  # (B, S_cache, KV, hd)
+    pos: jax.Array  # scalar int32 — number of tokens already absorbed
+
+
+def attn_init(pb: ParamBuilder, cfg):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    pb.p("wq", (d, H, hd), ("embed", "q_heads", "head_dim"), fan_in=d)
+    pb.p("wk", (d, KV, hd), ("embed", "kv_heads", "head_dim"), fan_in=d)
+    pb.p("wv", (d, KV, hd), ("embed", "kv_heads", "head_dim"), fan_in=d)
+    pb.p("wo", (H, hd, d), ("q_heads", "head_dim", "embed"), fan_in=H * hd)
+
+
+def _project_qkv(p, x, cfg, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.mrope_sections is not None:
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    elif positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, softcap: Optional[float]):
+    """q: (B,S,H,hd), k/v: (B,T,KV,hd) with H = G*KV.  mask: (B,1,S,T) bool."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32) / jnp.sqrt(hd).astype(jnp.float32)
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    scores = jnp.where(mask[:, :, None] if mask.ndim == 4 else mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", w.astype(v.dtype), v)
+    return out.reshape(B, S, H, hd)
+
+
+def _chunked_sdpa(q, k, v, causal: bool, window: int, softcap, chunk_q: int = 512, chunk_k: int = 1024):
+    """Memory-efficient attention: double scan over (q-chunk, kv-chunk) with a
+    running-softmax carry — the XLA-lowerable analogue of the flash kernel,
+    used for long-sequence prefill where materialising (S, T) scores is
+    impossible.  No backward pass needed (prefill only).
+
+    q: (B,S,H,hd); k/v: (B,T,KV,hd).
+    """
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    cq = min(chunk_q, S)
+    ck = min(chunk_k, T)
+    assert S % cq == 0 and T % ck == 0, (S, cq, T, ck)
+    nq, nk = S // cq, T // ck
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    qc = q.reshape(B, nq, cq, KV, G, hd)
+    kc = k.reshape(B, nk, ck, KV, hd)
+    vc = v.reshape(B, nk, ck, KV, hd)
+
+    def q_block(qi, qb):
+        # qb: (B, cq, KV, G, hd)
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kj, kb, vb = inp
+            s = jnp.einsum("bqkgh,btkh->bkgqt", qb, kb).astype(jnp.float32) * scale
+            if softcap:
+                s = jnp.tanh(s / softcap) * softcap
+            q_pos = qi * cq + jnp.arange(cq)[:, None]
+            k_pos = kj * ck + jnp.arange(ck)[None, :]
+            mask = jnp.ones((cq, ck), bool)
+            if causal:
+                mask &= k_pos <= q_pos
+            if window > 0:
+                mask &= k_pos > q_pos - window
+            s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum("bkgqt,btkh->bkgqh", p.astype(vb.dtype), vb).astype(
+                jnp.float32
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, cq), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, cq, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0))
+        )
+        out = acc / jnp.where(l == 0, 1.0, l)[..., None]
+        return jnp.moveaxis(out, 3, 1).reshape(B, cq, KV * G, hd).astype(q.dtype)  # (B,cq,H,hd)
+
+    outs = jax.lax.map(lambda args: q_block(*args), (jnp.arange(nq), jnp.moveaxis(qc, 1, 0)))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, H, hd)
+
+
+def _causal_mask(S: int, T: int, offset: int, window: int) -> jax.Array:
+    """(S, T) bool; query i attends key j iff j <= i+offset and within window."""
+    qi = jnp.arange(S)[:, None] + offset
+    kj = jnp.arange(T)[None, :]
+    m = kj <= qi
+    if window > 0:
+        m &= kj > qi - window
+    return m
+
+
+def attn_apply(
+    p,
+    x: jax.Array,
+    cfg,
+    positions: jax.Array,
+    mode: str = "train",
+    window: int = 0,
+    impl: str = "einsum",
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+):
+    """Full-sequence attention. Returns (out, cache|None)."""
+    B, S, _ = x.shape
+    if cross_kv is not None:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        k, v = cross_kv
+        out = _sdpa(q, k, v, jnp.ones((B, 1, S, k.shape[1]), bool), cfg.attn_logit_softcap)
+    else:
+        q, k, v = _project_qkv(p, x, cfg, positions)
+        k = shard(k, "batch", "seq", "kv_heads", "head_dim")
+        v = shard(v, "batch", "seq", "kv_heads", "head_dim")
+        if impl == "flash" and cross_kv is None:
+            from repro.kernels import ops as kops
+
+            out = kops.flash_attention(q, k, v, causal=True, window=window)
+        elif impl == "chunked":
+            out = _chunked_sdpa(q, k, v, True, window, cfg.attn_logit_softcap)
+        else:
+            mask = _causal_mask(S, S, 0, window)[None, None]
+            out = _sdpa(q, k, v, mask, cfg.attn_logit_softcap)
+    out = shard(out, "batch", "seq", "q_heads", "head_dim")
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    cache = None
+    if mode == "prefill" and cross_kv is None:
+        if window > 0:
+            # keep only the trailing `window` keys (ring buffer, oldest first
+            # rotated so slot (pos % window) is next to write)
+            keep = min(window, S)
+            kw = jnp.zeros((B, window, *k.shape[2:]), k.dtype).at[:, :keep].set(k[:, -keep:])
+            vw = jnp.zeros((B, window, *v.shape[2:]), v.dtype).at[:, :keep].set(v[:, -keep:])
+            # ring index: cache slot i holds key for position pos - window + ...
+            # we store in chronological order starting at slot 0 == position S-keep
+            cache = KVCache(kw, vw, jnp.asarray(S, jnp.int32))
+        else:
+            cache = KVCache(k, v, jnp.asarray(S, jnp.int32))
+    return y, cache
+
+
+def init_kv_cache(cfg, B: int, S_cache: int, window: int = 0, dtype=jnp.bfloat16) -> KVCache:
+    KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    n = min(window, S_cache) if window > 0 else S_cache
+    z = jnp.zeros((B, n, KV, hd), dtype)
+    return KVCache(z, z, jnp.zeros((), jnp.int32))
+
+
+def attn_decode(
+    p,
+    x: jax.Array,
+    cfg,
+    cache: KVCache,
+    window: int = 0,
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+    positions: Optional[jax.Array] = None,
+):
+    """One-token step. x: (B, 1, d). Returns (out, new_cache)."""
+    B = x.shape[0]
+    if cross_kv is not None:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        k, v = cross_kv
+        out = _sdpa(q, k, v, jnp.ones((B, 1, 1, k.shape[1]), bool), cfg.attn_logit_softcap)
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache
+
+    pos = cache.pos  # number of tokens already in context
+    if positions is None:
+        positions = jnp.broadcast_to(pos, (B, 1))
+        if cfg.mrope_sections is not None:
+            positions = jnp.broadcast_to(pos, (3, B, 1))
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+    n_slots = cache.k.shape[1]
+    slot = (pos % n_slots) if window > 0 else pos
+    k = cache.k.at[:, slot].set(k_new[:, 0].astype(cache.k.dtype))
+    v = cache.v.at[:, slot].set(v_new[:, 0].astype(cache.v.dtype))
+    k = shard(k, "batch", "cache_seq", "kv_heads", "head_dim")
+    v = shard(v, "batch", "cache_seq", "kv_heads", "head_dim")
+    # validity mask over slots
+    slots = jnp.arange(n_slots)
+    if window > 0:
+        valid = (slots[None] <= slot) | (pos >= n_slots)  # ring: all valid once wrapped
+        valid = valid & (slots[None] >= 0)
+    else:
+        valid = slots[None] <= pos
+    mask = jnp.broadcast_to(valid[:, None, None, :], (B, 1, 1, n_slots))
+    out = _sdpa(q, k, v, mask, cfg.attn_logit_softcap)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, KVCache(k, v, pos + 1)

@@ -1,0 +1,66 @@
+"""The paper's own FL workloads (§VI-A "Datasets and network structure").
+
+* EMNIST-Letter net: two 5x5 conv layers (10 channels each) + 2x2 max-pool,
+  FC 1280 -> 256 -> 26 softmax.
+* CIFAR-10 net: two 5x5 conv layers (64 channels each) + 2x2 max-pool,
+  FC 384 -> 192 -> 10 softmax.
+
+Implemented with ``lax.conv_general_dilated`` — small enough to vmap across a
+cohort of clients on CPU, which is exactly how the FL round executes.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParamBuilder
+
+__all__ = ["cnn_init", "cnn_forward", "CNN_SHAPES"]
+
+# dataset image shapes (H, W, C) and fc sizes per paper
+CNN_SHAPES = {
+    "emnist-cnn": dict(img=(28, 28, 1), ch=10, fc1=1280, fc2=256, classes=26),
+    "cifar-cnn": dict(img=(32, 32, 3), ch=64, fc1=384, fc2=192, classes=10),
+}
+
+
+def _spec(name):
+    return CNN_SHAPES[name]
+
+
+def cnn_init(rng, cfg):
+    s = _spec(cfg.name.replace("-smoke", ""))
+    H, W, C = s["img"]
+    pb = ParamBuilder(rng, jnp.float32)
+    pb.p("conv1", (5, 5, C, s["ch"]), (None, None, None, None), fan_in=5 * 5 * C)
+    pb.p("b1", (s["ch"],), (None,), init="zeros")
+    pb.p("conv2", (5, 5, s["ch"], s["ch"]), (None, None, None, None), fan_in=5 * 5 * s["ch"])
+    pb.p("b2", (s["ch"],), (None,), init="zeros")
+    # two 2x2 pools with 'SAME' convs: spatial H/4 * W/4
+    flat = (H // 4) * (W // 4) * s["ch"]
+    pb.p("fc1", (flat, s["fc1"]), (None, None), fan_in=flat)
+    pb.p("fb1", (s["fc1"],), (None,), init="zeros")
+    pb.p("fc2", (s["fc1"], s["fc2"]), (None, None), fan_in=s["fc1"])
+    pb.p("fb2", (s["fc2"],), (None,), init="zeros")
+    pb.p("head", (s["fc2"], s["classes"]), (None, None), fan_in=s["fc2"])
+    pb.p("hb", (s["classes"],), (None,), init="zeros")
+    return pb.params, pb.specs
+
+
+def _pool(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def cnn_forward(params, cfg, batch):
+    """batch: {'x': (B,H,W,C), 'y': (B,) int}. Returns logits (B, classes)."""
+    x = batch["x"]
+    h = jax.lax.conv_general_dilated(x, params["conv1"], (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    h = _pool(jax.nn.relu(h + params["b1"]))
+    h = jax.lax.conv_general_dilated(h, params["conv2"], (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    h = _pool(jax.nn.relu(h + params["b2"]))
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["fc1"] + params["fb1"])
+    h = jax.nn.relu(h @ params["fc2"] + params["fb2"])
+    return h @ params["head"] + params["hb"]

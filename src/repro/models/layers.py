@@ -1,0 +1,183 @@
+"""Shared building blocks: parameter factory, norms, MLPs, RoPE / M-RoPE."""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .sharding import shard
+
+__all__ = [
+    "ParamBuilder",
+    "rmsnorm",
+    "layernorm",
+    "norm_apply",
+    "mlp_init",
+    "mlp_apply",
+    "rope_freqs",
+    "apply_rope",
+    "apply_mrope",
+    "sinusoidal_positions",
+]
+
+
+class ParamBuilder:
+    """Creates parameters and records their logical sharding axes.
+
+    ``pb = ParamBuilder(rng, dtype)`` then
+    ``w = pb.p("wq", (d, H, hd), ("embed", "q_heads", "head_dim"), fan_in=d)``.
+    ``pb.params`` / ``pb.specs`` hold mirrored pytrees.
+    """
+
+    def __init__(self, rng: jax.Array, dtype=jnp.float32, prefix: str = ""):
+        self.rng = rng
+        self.dtype = dtype
+        self.params: Dict = {}
+        self.specs: Dict = {}
+        self._n = 0
+
+    def _next(self) -> jax.Array:
+        self._n += 1
+        return jax.random.fold_in(self.rng, self._n)
+
+    def p(self, name, shape, axes, init="normal", fan_in=None, scale=None):
+        assert len(shape) == len(axes), (name, shape, axes)
+        if init == "zeros":
+            v = jnp.zeros(shape, self.dtype)
+        elif init == "ones":
+            v = jnp.ones(shape, self.dtype)
+        elif init == "normal":
+            std = scale if scale is not None else 1.0 / math.sqrt(fan_in or shape[0])
+            v = jax.random.normal(self._next(), shape, jnp.float32).astype(self.dtype) * std
+        elif init == "embed":
+            v = jax.random.normal(self._next(), shape, jnp.float32).astype(self.dtype) * (scale or 0.02)
+        else:
+            raise ValueError(init)
+        self.params[name] = v
+        self.specs[name] = tuple(axes)
+        return v
+
+    def child(self, name) -> "ParamBuilder":
+        pb = ParamBuilder(self._next(), self.dtype)
+        self.params[name] = pb.params
+        self.specs[name] = pb.specs
+        return pb
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5, plus_one: bool = False) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    g = w.astype(jnp.float32)
+    if plus_one:
+        g = 1.0 + g
+    return (y * g).astype(dt)
+
+
+def layernorm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def norm_init(pb: ParamBuilder, name: str, d: int, kind: str):
+    if kind == "rmsnorm":
+        pb.p(name, (d,), ("embed",), init="ones")
+    else:
+        pb.p(name + "_w", (d,), ("embed",), init="ones")
+        pb.p(name + "_b", (d,), ("embed",), init="zeros")
+
+
+def norm_apply(params, name: str, x, kind: str, eps: float, plus_one: bool = False):
+    if kind == "rmsnorm":
+        return rmsnorm(x, params[name], eps, plus_one)
+    return layernorm(x, params[name + "_w"], params[name + "_b"], eps)
+
+
+# ---------------------------------------------------------------- MLP ------
+
+
+def mlp_init(pb: ParamBuilder, d: int, d_ff: int, act: str):
+    gated = act in ("silu", "geglu")
+    if gated:
+        pb.p("w_in", (d, 2, d_ff), ("mlp_embed", None, "mlp"), fan_in=d)
+    else:
+        pb.p("w_in", (d, d_ff), ("mlp_embed", "mlp"), fan_in=d)
+    pb.p("w_out", (d_ff, d), ("mlp", "mlp_embed"), fan_in=d_ff)
+
+
+def mlp_apply(p, x: jax.Array, act: str) -> jax.Array:
+    """x: (..., d) -> (..., d).  Gated (SiLU/GeGLU) or plain (GELU/sqReLU)."""
+    if act in ("silu", "geglu"):
+        h = jnp.einsum("...d,dgf->...gf", x, p["w_in"])
+        g, u = h[..., 0, :], h[..., 1, :]
+        g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g, approximate=True)
+        h = g * u
+    else:
+        h = jnp.einsum("...d,df->...f", x, p["w_in"])
+        if act == "gelu":
+            h = jax.nn.gelu(h, approximate=True)
+        elif act == "sqrelu":
+            r = jax.nn.relu(h)
+            h = r * r
+        else:
+            raise ValueError(act)
+    h = shard(h, *((None,) * (h.ndim - 1)), "mlp")
+    return jnp.einsum("...f,fd->...d", h, p["w_out"])
+
+
+# ---------------------------------------------------------------- RoPE -----
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def _rotate(x, cos, sin):
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float, sections: Tuple[int, int, int]) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.
+
+    x: (B, S, H, hd); positions3: (3, B, S) — temporal/height/width position
+    ids; ``sections`` gives the number of frequency *pairs* taken from each
+    component (sum == hd/2).
+    """
+    hd = x.shape[-1]
+    assert sum(sections) * 2 == hd, (sections, hd)
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    # component id per frequency pair: [0]*s0 + [1]*s1 + [2]*s2
+    comp = jnp.repeat(jnp.arange(3), jnp.asarray(sections), total_repeat_length=hd // 2)
+    # select per-pair component: (B, S, hd/2)
+    pos_sel = jnp.moveaxis(positions3.astype(jnp.float32), 0, -1)[..., comp]
+    ang = pos_sel * freqs
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings (n, d)."""
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (dim / d))
+    out = jnp.zeros((n, d), jnp.float32)
+    out = out.at[:, 0::2].set(jnp.sin(ang))
+    out = out.at[:, 1::2].set(jnp.cos(ang))
+    return out

@@ -1,0 +1,197 @@
+"""DeepSeek-V2/V3 Multi-head Latent Attention (MLA).
+
+Projections (per arXiv:2412.19437 §2.1.1):
+    c_q  = W_dq x                (q_lora_rank)            -> norm
+    q    = W_uq c_q              (H, qk_nope + qk_rope)   rope on the rope part
+    c_kv = W_dkv x               (kv_lora_rank)           -> norm, **cached**
+    k_r  = W_kr x                (qk_rope_head_dim)       rope, shared across heads, **cached**
+    k    = [W_uk c_kv ; k_r]     (H, qk_nope + qk_rope)
+    v    = W_uv c_kv             (H, v_head_dim)
+    out  = W_o (attn @ v)
+
+The decode cache stores only ``(c_kv, k_r)`` — 576 floats/token for V3 —
+which is the technique's serving win.  ``mla_absorb=True`` additionally folds
+``W_uk`` into the query and ``W_uv`` into the output projection at decode
+time (the paper's "absorption"), so scores/values are computed directly in
+the latent space: a beyond-paper perf option exercised in §Perf.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParamBuilder, apply_rope, rmsnorm
+from .sharding import shard
+
+__all__ = ["MLACache", "mla_init", "mla_apply", "mla_decode", "init_mla_cache"]
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array  # (B, S, kv_lora_rank)
+    k_rope: jax.Array  # (B, S, qk_rope_head_dim)
+    pos: jax.Array
+
+
+def mla_init(pb: ParamBuilder, cfg):
+    d, H = cfg.d_model, cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    pb.p("w_dq", (d, qr), ("embed", "lora"), fan_in=d)
+    pb.p("q_norm", (qr,), ("lora",), init="ones")
+    pb.p("w_uq", (qr, H, dn + dr), ("lora", "q_heads", "head_dim"), fan_in=qr)
+    pb.p("w_dkv", (d, kvr), ("embed", "lora"), fan_in=d)
+    pb.p("kv_norm", (kvr,), ("lora",), init="ones")
+    pb.p("w_kr", (d, dr), ("embed", "head_dim"), fan_in=d)
+    pb.p("w_uk", (kvr, H, dn), ("lora", "q_heads", "head_dim"), fan_in=kvr)
+    pb.p("w_uv", (kvr, H, dv), ("lora", "q_heads", "head_dim"), fan_in=kvr)
+    pb.p("wo", (H, dv, d), ("q_heads", "head_dim", "embed"), fan_in=H * dv)
+
+
+def _latents(p, x, cfg, positions):
+    """Compute (q_nope, q_rope, c_kv, k_rope) with rope applied."""
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    c_q = rmsnorm(jnp.einsum("bsd,dr->bsr", x, p["w_dq"]), p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", c_q, p["w_uq"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    c_kv = rmsnorm(jnp.einsum("bsd,dr->bsr", x, p["w_dkv"]), p["kv_norm"], cfg.norm_eps)
+    k_rope = jnp.einsum("bsd,dk->bsk", x, p["w_kr"])
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_attend(p, q_nope, q_rope, c_kv, k_rope, cfg, mask, absorb: bool):
+    """Score+combine. q_*: (B,S,H,*), c_kv: (B,T,r), k_rope: (B,T,dr)."""
+    dn, dv = cfg.qk_nope_head_dim, cfg.v_head_dim
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dn + cfg.qk_rope_head_dim, jnp.float32))
+    if absorb:
+        # fold W_uk into q: q_lat (B,S,H,r); scores vs latent cache directly
+        q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, p["w_uk"])
+        s_nope = jnp.einsum("bshr,btr->bhst", q_lat, c_kv)
+    else:
+        k_nope = jnp.einsum("btr,rhn->bthn", c_kv, p["w_uk"])
+        s_nope = jnp.einsum("bshn,bthn->bhst", q_nope, k_nope)
+    s_rope = jnp.einsum("bshk,btk->bhst", q_rope, k_rope)
+    scores = (s_nope + s_rope).astype(jnp.float32) * scale
+    scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(c_kv.dtype)
+    if absorb:
+        o_lat = jnp.einsum("bhst,btr->bshr", w, c_kv)
+        out = jnp.einsum("bshr,rhv->bshv", o_lat, p["w_uv"])
+    else:
+        v = jnp.einsum("btr,rhv->bthv", c_kv, p["w_uv"])
+        out = jnp.einsum("bhst,bthv->bshv", w, v)
+    return jnp.einsum("bshv,hvd->bsd", out, p["wo"])
+
+
+def _mla_attend_chunked(p, q_nope, q_rope, c_kv, k_rope, cfg, window: int, chunk_q: int = 512, chunk_k: int = 1024):
+    """Memory-efficient MLA prefill: running softmax over latent-KV chunks.
+
+    Always uses the absorbed form (scores directly against ``c_kv``), so the
+    full (S, T) score matrix and the uncompressed per-head K are never
+    materialised — the latent cache is both the memory format *and* the
+    compute format.
+    """
+    B, S, H, dn = q_nope.shape
+    T = c_kv.shape[1]
+    r = c_kv.shape[-1]
+    cq = min(chunk_q, S)
+    ck = min(chunk_k, T)
+    assert S % cq == 0 and T % ck == 0
+    nq, nk = S // cq, T // ck
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dn + cfg.qk_rope_head_dim, jnp.float32))
+    q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, p["w_uk"])  # (B,S,H,r)
+    qlc = q_lat.reshape(B, nq, cq, H, r)
+    qrc = q_rope.reshape(B, nq, cq, H, -1)
+    ckv = c_kv.reshape(B, nk, ck, r)
+    krc = k_rope.reshape(B, nk, ck, -1)
+
+    def q_block(qi, ql, qr):
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kj, cb, krb = inp
+            s = (jnp.einsum("bqhr,btr->bhqt", ql, cb) + jnp.einsum("bqhk,btk->bhqt", qr, krb)).astype(
+                jnp.float32
+            ) * scale
+            q_pos = qi * cq + jnp.arange(cq)[:, None]
+            k_pos = kj * ck + jnp.arange(ck)[None, :]
+            mask = k_pos <= q_pos
+            if window > 0:
+                mask &= k_pos > q_pos - window
+            s = jnp.where(mask[None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            pr = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + pr.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum("bhqt,btr->bhqr", pr.astype(cb.dtype), cb).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, cq), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, H, cq), jnp.float32)
+        a0 = jnp.zeros((B, H, cq, r), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), jnp.moveaxis(ckv, 1, 0), jnp.moveaxis(krc, 1, 0))
+        )
+        o_lat = (acc / jnp.where(l == 0, 1.0, l)[..., None]).astype(c_kv.dtype)  # (B,H,cq,r)
+        out = jnp.einsum("bhqr,rhv->bqhv", o_lat, p["w_uv"])
+        return out  # (B,cq,H,dv)
+
+    outs = jax.lax.map(lambda a: q_block(a[0], a[1], a[2]), (jnp.arange(nq), jnp.moveaxis(qlc, 1, 0), jnp.moveaxis(qrc, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, H, -1)
+    return jnp.einsum("bshv,hvd->bsd", out, p["wo"])
+
+
+def mla_apply(p, x, cfg, positions, mode: str = "train", window: int = 0, impl: str = "einsum"):
+    B, S, _ = x.shape
+    q_nope, q_rope, c_kv, k_rope = _latents(p, x, cfg, positions)
+    c_kv = shard(c_kv, "batch", "seq", None)
+    if impl == "chunked":
+        y = _mla_attend_chunked(p, q_nope, q_rope, c_kv, k_rope, cfg, window)
+    else:
+        qi = jnp.arange(S)[:, None]
+        kj = jnp.arange(S)[None, :]
+        mask = kj <= qi
+        if window > 0:
+            mask &= kj > qi - window
+        y = _mla_attend(p, q_nope, q_rope, c_kv, k_rope, cfg, mask[None, None], cfg.mla_absorb)
+    cache = None
+    if mode == "prefill":
+        if window > 0:
+            keep = min(window, S)
+            ck = jnp.zeros((B, window, c_kv.shape[-1]), c_kv.dtype).at[:, :keep].set(c_kv[:, -keep:])
+            kr = jnp.zeros((B, window, k_rope.shape[-1]), k_rope.dtype).at[:, :keep].set(k_rope[:, -keep:])
+            cache = MLACache(ck, kr, jnp.asarray(S, jnp.int32))
+        else:
+            cache = MLACache(c_kv, k_rope, jnp.asarray(S, jnp.int32))
+    return y, cache
+
+
+def init_mla_cache(cfg, B: int, S_cache: int, window: int = 0, dtype=jnp.bfloat16) -> MLACache:
+    n = min(window, S_cache) if window > 0 else S_cache
+    return MLACache(
+        jnp.zeros((B, n, cfg.kv_lora_rank), dtype),
+        jnp.zeros((B, n, cfg.qk_rope_head_dim), dtype),
+        jnp.zeros((), jnp.int32),
+    )
+
+
+def mla_decode(p, x, cfg, cache: MLACache, window: int = 0):
+    B = x.shape[0]
+    pos = cache.pos
+    positions = jnp.broadcast_to(pos, (B, 1))
+    q_nope, q_rope, c_kv, k_rope = _latents(p, x, cfg, positions)
+    n_slots = cache.c_kv.shape[1]
+    slot = (pos % n_slots) if window > 0 else pos
+    ck = cache.c_kv.at[:, slot].set(c_kv[:, 0].astype(cache.c_kv.dtype))
+    kr = cache.k_rope.at[:, slot].set(k_rope[:, 0].astype(cache.k_rope.dtype))
+    ck = shard(ck, "batch", "cache_seq", None)
+    slots = jnp.arange(n_slots)
+    if window > 0:
+        valid = (slots[None] <= slot) | (pos >= n_slots)
+    else:
+        valid = slots[None] <= pos
+    mask = jnp.broadcast_to(valid[:, None, None, :], (B, 1, 1, n_slots))
+    y = _mla_attend(p, q_nope, q_rope, ck, kr, cfg, mask, cfg.mla_absorb)
+    return y, MLACache(ck, kr, pos + 1)

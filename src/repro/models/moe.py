@@ -1,0 +1,177 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity-based dispatch/combine
+(GShard/Switch pattern), shared experts, and a load-balance auxiliary loss.
+
+Expert weights carry an ``experts`` logical axis (sharded over ``model`` —
+expert parallelism); the dispatch/combine einsums then lower to the
+all-to-all-style collectives the roofline analysis tracks.  Router compute is
+fp32 for numerical stability.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParamBuilder
+from .sharding import shard
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(pb: ParamBuilder, cfg):
+    d, E, dff = cfg.d_model, cfg.n_experts, cfg.d_expert
+    gated = cfg.act in ("silu", "geglu")
+    pb.p("router", (d, E), ("embed", "experts"), fan_in=d)
+    if gated:
+        pb.p("w_in", (E, d, 2, dff), ("experts", "embed", None, "expert_mlp"), fan_in=d)
+    else:
+        pb.p("w_in", (E, d, dff), ("experts", "embed", "expert_mlp"), fan_in=d)
+    pb.p("w_out", (E, dff, d), ("experts", "expert_mlp", "embed"), fan_in=dff)
+    if cfg.n_shared_experts:
+        ds = cfg.n_shared_experts * dff
+        if gated:
+            pb.p("w_in_shared", (d, 2, ds), ("embed", None, "mlp"), fan_in=d)
+        else:
+            pb.p("w_in_shared", (d, ds), ("embed", "mlp"), fan_in=d)
+        pb.p("w_out_shared", (ds, d), ("mlp", "embed"), fan_in=ds)
+
+
+def _expert_ffn(p, x, act):
+    """x: (E, C, d) -> (E, C, d), batched over experts."""
+    if act in ("silu", "geglu"):
+        h = jnp.einsum("ecd,edgf->ecgf", x, p["w_in"])
+        g, u = h[..., 0, :], h[..., 1, :]
+        g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g, approximate=True)
+        h = g * u
+    else:
+        h = jnp.einsum("ecd,edf->ecf", x, p["w_in"])
+        if act == "gelu":
+            h = jax.nn.gelu(h, approximate=True)
+        else:
+            r = jax.nn.relu(h)
+            h = r * r
+    return jnp.einsum("ecf,efd->ecd", h, p["w_out"])
+
+
+def _shared_ffn(p, x, act):
+    if act in ("silu", "geglu"):
+        h = jnp.einsum("nd,dgf->ngf", x, p["w_in_shared"])
+        g, u = h[..., 0, :], h[..., 1, :]
+        g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g, approximate=True)
+        h = g * u
+    else:
+        h = jnp.einsum("nd,df->nf", x, p["w_in_shared"])
+        h = jax.nn.gelu(h, approximate=True) if act == "gelu" else jax.nn.relu(h) ** 2
+    return jnp.einsum("nf,fd->nd", h, p["w_out_shared"])
+
+
+def moe_apply(p, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array]:
+    """Dispatches to the einsum (small-scale) or scatter (large-scale) impl."""
+    if getattr(cfg, "moe_impl", "einsum") == "scatter":
+        return moe_apply_scatter(p, x, cfg)
+    return moe_apply_einsum(p, x, cfg)
+
+
+def moe_apply_einsum(p, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d). Returns (y, aux_loss).
+
+    Capacity-based top-k dispatch: every token emits its top-k expert choices;
+    tokens beyond an expert's capacity ``C = ceil(N * top_k / E * cf)`` are
+    dropped for that expert (their residual passes through — standard
+    Switch/GShard semantics).  The (N, E, C) one-hot dispatch tensor limits
+    this to small N*E*C — production scale uses ``moe_apply_scatter``.
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.moe_top_k
+    N = B * S
+    xf = x.reshape(N, d)
+
+    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32), p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)  # (N, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (N, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)  # renormalise (deepseek-style)
+
+    # load-balance aux loss (Switch eq. 4 generalised to top-k)
+    me = probs.mean(0)  # (E,) mean router prob
+    one_hot_k = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)  # (N,k,E)
+    ce = one_hot_k.sum(1).mean(0) / k  # fraction of tokens per expert
+    aux = E * jnp.sum(me * ce)
+
+    capacity = max(1, int(N * k / E * cfg.capacity_factor))
+    # position of each (token, choice) within its expert's queue
+    flat_choice = one_hot_k.reshape(N * k, E)
+    pos_in_expert = (jnp.cumsum(flat_choice, axis=0) - flat_choice).reshape(N, k, E)
+    pos = jnp.einsum("nke,nke->nk", pos_in_expert, one_hot_k)  # (N,k)
+    keep = pos < capacity
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    # dispatch tensor (N, k, E, C) -> combine weights; built sparsely via one-hots
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, capacity), capacity + 1, dtype=x.dtype)[..., :capacity]
+    disp = jnp.einsum("nke,nkc->nec", one_hot_k.astype(x.dtype), pos_oh)  # (N,E,C)
+    comb = jnp.einsum("nk,nke,nkc->nec", gate_vals.astype(x.dtype), one_hot_k.astype(x.dtype), pos_oh)
+
+    xe = jnp.einsum("nec,nd->ecd", disp, xf)  # (E, C, d)
+    xe = shard(xe, "experts", None, "embed")
+    ye = _expert_ffn(p, xe, cfg.act)
+    ye = shard(ye, "experts", None, "embed")
+    y = jnp.einsum("nec,ecd->nd", comb, ye)  # (N, d)
+
+    if cfg.n_shared_experts:
+        y = y + _shared_ffn(p, xf, cfg.act)
+    return y.reshape(B, S, d), aux.astype(jnp.float32)
+
+
+def moe_apply_scatter(p, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array]:
+    """Production-scale MoE dispatch via scatter/gather (no (N,E,C) one-hot).
+
+    Each (token, choice) computes its slot = expert*C + position-in-expert
+    (cross-device cumsum), tokens are scatter-added into the per-expert
+    buffers (this *is* the all-to-all the roofline tracks), batched expert
+    FFNs run on the ``experts``-sharded buffer, and results gather back.
+    Over-capacity tokens drop (GShard semantics).
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.moe_top_k
+    N = B * S
+    xf = x.reshape(N, d)
+
+    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32), p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (N, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    me = probs.mean(0)
+    one_hot_k = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)
+    ce = one_hot_k.sum(1).mean(0) / k
+    aux = E * jnp.sum(me * ce)
+
+    flat_e = expert_idx.reshape(-1)  # (N*k,)
+    flat_g = gate_vals.reshape(-1)
+    # position-in-expert via a stable sort (O(N log N)) — a (N*k, E) one-hot
+    # cumsum lowers to a quadratic reduce-window, which is catastrophic at
+    # production N (confirmed by cost_analysis; see EXPERIMENTS.md §Perf).
+    order = jnp.argsort(flat_e, stable=True)  # (N*k,)
+    sorted_e = flat_e[order]
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)  # bincount
+    starts = jnp.cumsum(counts) - counts  # (E,) tiny cumsum
+    pos_sorted = jnp.arange(flat_e.shape[0], dtype=jnp.int32) - starts[sorted_e]
+    pos = jnp.zeros_like(flat_e).at[order].set(pos_sorted)
+    C = max(1, int(N * k / E * cfg.capacity_factor))
+    keep = pos < C
+    slot = jnp.where(keep, flat_e * C + pos, E * C)  # E*C = trash slot
+
+    tok = jnp.arange(N * k) // k
+    src = jnp.take(xf, tok, axis=0) * keep[:, None].astype(xf.dtype)  # (N*k, d)
+    xe = jnp.zeros((E * C + 1, d), x.dtype).at[slot].add(src)
+    xe = xe[: E * C].reshape(E, C, d)
+    xe = shard(xe, "experts", None, "embed")
+    ye = _expert_ffn(p, xe, cfg.act)
+    ye = shard(ye, "experts", None, "embed")
+    ye_flat = jnp.concatenate([ye.reshape(E * C, d), jnp.zeros((1, d), ye.dtype)], 0)
+    back = jnp.take(ye_flat, slot, axis=0) * flat_g[:, None].astype(ye.dtype)  # (N*k, d)
+    y = back.reshape(N, k, d).sum(1)
+
+    if cfg.n_shared_experts:
+        y = y + _shared_ffn(p, xf, cfg.act)
+    return y.reshape(B, S, d), aux.astype(jnp.float32)

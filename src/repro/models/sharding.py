@@ -1,0 +1,130 @@
+"""Logical-axis sharding rules (MaxText-style) for the model stack.
+
+Model code annotates tensors with *logical* axis names via ``shard(x, ...)``;
+a rules table (installed with ``use_rules``) maps logical names to mesh axes.
+Outside a mesh/rules context the annotations are no-ops, so the same model
+code runs on a laptop CPU and on the 512-chip dry-run mesh.
+
+Two base rule-sets implement DESIGN.md §3:
+
+* ``cohort_rules`` — tensor-parallel over ``model``; the client axis of the
+  vmapped cohort is injected by ``vmap(..., spmd_axis_name=...)``; per-client
+  params otherwise replicated over ``data``.
+* ``silo_rules``   — FSDP over (``pod``,``data``) + tensor-parallel over
+  ``model``: batch and the ``embed`` dimension of every weight shard over the
+  fsdp axes, head/mlp/vocab/expert dimensions over ``model``.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["use_rules", "shard", "logical_to_spec", "cohort_rules", "silo_rules", "current_rules"]
+
+_state = threading.local()
+
+
+def current_rules() -> Optional[Dict[str, object]]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[Dict[str, object]]):
+    prev = current_rules()
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def logical_to_spec(axes: Sequence[Optional[str]], rules: Optional[Dict[str, object]] = None) -> P:
+    rules = rules if rules is not None else current_rules()
+    if rules is None:
+        return P(*([None] * len(axes)))
+    out = []
+    used = set()
+    for a in axes:
+        m = rules.get(a) if a is not None else None
+        # a mesh axis may appear at most once in a spec; later duplicates
+        # fall back to replication (can happen for e.g. (experts, mlp) both
+        # mapped to 'model').
+        if m is None:
+            out.append(None)
+            continue
+        ms = (m,) if isinstance(m, str) else tuple(m)
+        ms = tuple(x for x in ms if x not in used)
+        used.update(ms)
+        out.append(ms[0] if len(ms) == 1 else (ms if ms else None))
+        if not ms:
+            out[-1] = None
+    return P(*out)
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Apply a logical sharding constraint (no-op without rules)."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    assert len(axes) == x.ndim, (axes, x.shape)
+    spec = logical_to_spec(axes, rules)
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x  # no mesh in scope
+
+
+def _divisible(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0
+
+
+def cohort_rules(cfg, mesh_axis_sizes: Dict[str, int]) -> Dict[str, object]:
+    """Tensor-parallel rules; client axis handled by vmap(spmd_axis_name)."""
+    m = mesh_axis_sizes.get("model", 1)
+    fsdp = tuple(a for a in ("pod", "data") if a in mesh_axis_sizes)
+    kv = cfg.n_kv_heads * (cfg.resolved_head_dim or 1)
+    return {
+        "batch": fsdp,  # serving batch; during cohort training batch is per-client (unsharded)
+        "client": fsdp,
+        "seq": None,
+        "cache_seq": None,
+        "embed": None,
+        "mlp_embed": None,  # d-dim of MLP weights (default: follows "embed")
+        "act_embed": None,  # embed dim of *activations* (hillclimb: -> model)
+        "q_heads": "model" if _divisible(max(cfg.n_heads, 1), m) else None,
+        "kv_heads": "model" if _divisible(max(cfg.n_kv_heads, 1), m) else None,
+        "head_dim": None,
+        "mlp": "model",
+        "vocab": "model" if _divisible(cfg.vocab, m) else None,
+        "experts": "model" if cfg.n_experts and _divisible(cfg.n_experts, m) else None,
+        "expert_mlp": None,
+        "lora": None,
+        "ssm_inner": "model" if (cfg.ssm_expand * cfg.d_model) % (m * max(cfg.ssm_headdim, 1)) == 0 else None,
+        "ssm_state": None,
+        "layers": None,
+        "patch": None,
+        "enc_seq": None,
+    }
+
+
+def silo_rules(cfg, mesh_axis_sizes: Dict[str, int]) -> Dict[str, object]:
+    """FSDP + TP rules for huge archs (one client occupies the whole mesh)."""
+    m = mesh_axis_sizes.get("model", 1)
+    fsdp = tuple(a for a in ("pod", "data") if a in mesh_axis_sizes)
+    fsize = 1
+    for a in fsdp:
+        fsize *= mesh_axis_sizes[a]
+    r = cohort_rules(cfg, mesh_axis_sizes)
+    r.update(
+        {
+            "batch": fsdp,
+            "embed": fsdp if _divisible(cfg.d_model, fsize) else None,
+            "mlp_embed": fsdp if _divisible(cfg.d_model, fsize) else None,
+            "expert_mlp": None,
+        }
+    )
+    return r

@@ -1,0 +1,213 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) layer.
+
+Layout per layer (d_in = expand*d_model, H = d_in/headdim heads, P = headdim,
+G = ngroups, N = ssm_state):
+
+    in_proj:  d -> [z(d_in) | x(d_in) | B(G*N) | C(G*N) | dt(H)]
+    conv1d:   depthwise causal width-4 over the (x|B|C) channels
+    SSD:      y_t = C_t^T h_t ;  h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t^T
+    gate:     y = RMSNorm(y * silu(z)) ; out_proj: d_in -> d
+
+Training/prefill uses the *chunked* SSD algorithm (quadratic within chunks of
+length Q, linear across chunks via a carried (H,N,P) state) — mirrored by the
+Pallas kernel in ``repro.kernels.ssd_scan``.  Decode is the O(1) recurrence
+with a conv ring state, which is what makes `long_500k` serving tractable.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParamBuilder, rmsnorm
+from .sharding import shard
+
+__all__ = ["SSMCache", "ssm_init", "ssm_apply", "ssm_decode", "init_ssm_cache", "ssd_chunked"]
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array  # (B, W-1, conv_channels) trailing inputs
+    state: jax.Array  # (B, H, N, P) ssm state
+    pos: jax.Array
+
+
+def _dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    P = cfg.ssm_headdim
+    H = d_in // P
+    G = cfg.ssm_ngroups
+    N = cfg.ssm_state
+    return d_in, H, P, G, N
+
+
+def ssm_init(pb: ParamBuilder, cfg):
+    d = cfg.d_model
+    d_in, H, P, G, N = _dims(cfg)
+    conv_ch = d_in + 2 * G * N
+    pb.p("in_proj", (d, 2 * d_in + 2 * G * N + H), ("embed", "ssm_inner"), fan_in=d)
+    pb.p("conv_w", (cfg.ssm_conv_width, conv_ch), (None, "ssm_inner"), fan_in=cfg.ssm_conv_width)
+    pb.p("conv_b", (conv_ch,), ("ssm_inner",), init="zeros")
+    pb.p("A_log", (H,), ("ssm_inner",), init="zeros")  # A = -exp(A_log) = -1 at init
+    pb.p("D", (H,), ("ssm_inner",), init="ones")
+    pb.p("dt_bias", (H,), ("ssm_inner",), init="zeros")
+    pb.p("gate_norm", (d_in,), ("ssm_inner",), init="ones")
+    pb.p("out_proj", (d_in, d), ("ssm_inner", "embed"), fan_in=d_in)
+
+
+def _split_proj(cfg, h):
+    d_in, H, P, G, N = _dims(cfg)
+    z = h[..., :d_in]
+    xbc = h[..., d_in : 2 * d_in + 2 * G * N]
+    dt = h[..., 2 * d_in + 2 * G * N :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv. xbc: (B,S,C); w: (W,C)."""
+    W = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xbc.shape[1], :] * w[i] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, initial_state=None, return_final=False):
+    """Chunked SSD scan (pure jnp oracle; kernel mirrors this).
+
+    Args:
+      x:  (b, S, H, P) inputs (after conv/activation)
+      dt: (b, S, H) positive step sizes
+      A:  (H,) negative decay rates
+      B:  (b, S, G, N); C: (b, S, G, N)
+      chunk: chunk length Q (S % Q == 0)
+    Returns y (b,S,H,P) [, final_state (b,H,N,P)].
+    """
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    Q = min(chunk, S)
+    if S % Q:  # pad to a chunk multiple; dt=0 makes padding inert
+        pad = Q - S % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    S_pad = x.shape[1]
+    nc = S_pad // Q
+    rep = H // G
+
+    xc = x.reshape(b, nc, Q, H, P)
+    dtc = dt.reshape(b, nc, Q, H)
+    Bc = B.reshape(b, nc, Q, G, N)
+    Cc = C.reshape(b, nc, Q, G, N)
+    # broadcast groups to heads
+    Bh = jnp.repeat(Bc, rep, axis=3)  # (b,nc,Q,H,N)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    dA = dtc * A[None, None, None, :]  # (b,nc,Q,H) negative
+    cum = jnp.cumsum(dA, axis=2)  # within-chunk cumulative log-decay
+    total = cum[:, :, -1]  # (b,nc,H)
+
+    # ---- intra-chunk (quadratic within Q) ----
+    # L[i,j] = exp(cum[i] - cum[j]) for j <= i else 0
+    Li = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (b,nc,Q,Q,H)
+    mask = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])[None, None, :, :, None]
+    L = jnp.where(mask, jnp.exp(Li), 0.0)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Ch, Bh)  # (b,nc,Q,Q,H)
+    att = scores * L * dtc[:, :, None, :, :]  # weight by dt_j
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", att, xc)
+
+    # ---- chunk states ----
+    decay_to_end = jnp.exp(total[:, :, None, :] - cum)  # (b,nc,Q,H)
+    S_chunk = jnp.einsum("bcqh,bcqhn,bcqhp->bchnp", dtc * decay_to_end, Bh, xc)
+
+    # ---- inter-chunk recurrence ----
+    def step(carry, inp):
+        s_prev = carry  # (b,H,N,P)
+        s_c, tot_c = inp
+        s_new = s_prev * jnp.exp(tot_c)[:, :, None, None] + s_c
+        return s_new, s_prev
+
+    init = initial_state if initial_state is not None else jnp.zeros((b, H, N, P), x.dtype)
+    final, prev_states = jax.lax.scan(
+        step, init, (jnp.moveaxis(S_chunk, 1, 0), jnp.moveaxis(total, 1, 0))
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (b,nc,H,N,P) state entering each chunk
+
+    y_inter = jnp.einsum("bcqhn,bchnp,bcqh->bcqhp", Ch, prev_states, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(b, S_pad, H, P)[:, :S]
+    if return_final:
+        return y, final
+    return y
+
+
+def ssm_apply(p, x, cfg, mode: str = "train", impl: str = "einsum"):
+    """x: (B,S,d) -> (B,S,d) [, cache]."""
+    d_in, H, P, G, N = _dims(cfg)
+    h = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xbc, dt = _split_proj(cfg, h)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :d_in]
+    Bm = xbc[..., d_in : d_in + G * N].reshape(*x.shape[:2], G, N)
+    Cm = xbc[..., d_in + G * N :].reshape(*x.shape[:2], G, N)
+    dt = jax.nn.softplus(dt + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32)).astype(x.dtype)
+    xh = xs.reshape(*x.shape[:2], H, P)
+    if impl == "ssd_kernel":
+        from repro.kernels import ops as kops
+
+        y, final = kops.ssd_scan(xh, dt, A, Bm, Cm, chunk=cfg.ssm_chunk)
+    else:
+        y, final = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk, return_final=True)
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(*x.shape[:2], d_in)
+    y = rmsnorm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    if mode == "prefill":
+        W = cfg.ssm_conv_width
+        # store raw pre-conv trailing inputs
+        raw = jnp.einsum("bsd,de->bse", x, p["in_proj"])[..., d_in : 2 * d_in + 2 * G * N]
+        conv_state = raw[:, -(W - 1) :, :]
+        pad = W - 1 - conv_state.shape[1]
+        if pad > 0:
+            conv_state = jnp.pad(conv_state, ((0, 0), (pad, 0), (0, 0)))
+        return out, SSMCache(conv_state, final, jnp.asarray(x.shape[1], jnp.int32))
+    return out, None
+
+
+def init_ssm_cache(cfg, B: int, dtype=jnp.bfloat16) -> SSMCache:
+    d_in, H, P, G, N = _dims(cfg)
+    conv_ch = d_in + 2 * G * N
+    return SSMCache(
+        jnp.zeros((B, cfg.ssm_conv_width - 1, conv_ch), dtype),
+        jnp.zeros((B, H, N, P), dtype),
+        jnp.zeros((), jnp.int32),
+    )
+
+
+def ssm_decode(p, x, cfg, cache: SSMCache):
+    """One-token recurrent step. x: (B,1,d)."""
+    d_in, H, P, G, N = _dims(cfg)
+    h = jnp.einsum("bsd,de->bse", x, p["in_proj"])[:, 0]  # (B, e)
+    z = h[..., :d_in]
+    xbc_new = h[..., d_in : 2 * d_in + 2 * G * N]
+    dt = h[..., 2 * d_in + 2 * G * N :]
+    # conv over ring of last W inputs
+    inputs = jnp.concatenate([cache.conv, xbc_new[:, None, :]], axis=1)  # (B,W,C)
+    conv = jnp.einsum("bwc,wc->bc", inputs, p["conv_w"]) + p["conv_b"]
+    xbc = jax.nn.silu(conv)
+    xs = xbc[..., :d_in].reshape(-1, H, P)
+    Bm = xbc[..., d_in : d_in + G * N].reshape(-1, G, N)
+    Cm = xbc[..., d_in + G * N :].reshape(-1, G, N)
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1)  # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1)
+    dt = jax.nn.softplus(dt + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32)).astype(x.dtype)
+    decay = jnp.exp(dt * A)[:, :, None, None]  # (B,H,1,1)
+    upd = jnp.einsum("bh,bhn,bhp->bhnp", dt, Bh, xs)
+    state = cache.state * decay + upd
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, state) + p["D"][None, :, None] * xs
+    y = y.reshape(x.shape[0], d_in)
+    y = rmsnorm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"])[:, None, :]
+    return out, SSMCache(inputs[:, 1:], state, cache.pos + 1)

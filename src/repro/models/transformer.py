@@ -1,0 +1,395 @@
+"""Composable decoder-only stack covering dense / moe / ssm / hybrid / vlm.
+
+Layers are grouped into *segments* of identical block kind (e.g. DeepSeek-V3 =
+3x ``mla_mlp`` + 58x ``mla_moe``); each segment's parameters are stacked along
+a leading ``layers`` axis and executed with ``lax.scan`` (+ optional remat) so
+the HLO stays small for the 126-layer dry-runs.  Zamba2-style hybrids scan
+over SSM layers and apply a weight-shared attention block every
+``hybrid_attn_every`` layers (per-site KV caches).
+
+Entry points:
+  * ``model_init(rng, cfg)``                      -> (params, specs)
+  * ``forward(params, cfg, batch, mode)``         -> logits [, caches] (+aux)
+  * ``decode_step(params, cfg, tokens, caches)``  -> logits, caches
+  * ``init_caches(cfg, B, S_cache, window)``      -> cache pytree
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import mla as mla_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import ParamBuilder, mlp_init, mlp_apply, norm_apply, norm_init
+from .sharding import shard
+
+__all__ = ["segments_of", "model_init", "forward", "decode_step", "init_caches", "vlm_positions"]
+
+
+# --------------------------------------------------------------- segments --
+
+
+def segments_of(cfg) -> List[Tuple[str, int]]:
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return [("attn_mlp", cfg.n_layers)]
+    if fam == "moe":
+        a = "mla" if cfg.attn == "mla" else "attn"
+        segs = []
+        if cfg.n_dense_layers:
+            segs.append((f"{a}_mlp", cfg.n_dense_layers))
+        segs.append((f"{a}_moe", cfg.n_layers - cfg.n_dense_layers))
+        return segs
+    if fam == "ssm":
+        return [("ssm", cfg.n_layers)]
+    if fam == "hybrid":
+        return [("ssm", cfg.n_layers)]  # shared attn handled separately
+    raise ValueError(fam)
+
+
+def _block_init(rng, cfg, kind: str):
+    pb = ParamBuilder(rng, jnp.dtype(cfg.param_dtype).type)
+    if kind == "ssm":
+        norm_init(pb, "norm1", cfg.d_model, cfg.norm)
+        ssm_mod.ssm_init(pb.child("ssm"), cfg)
+        return pb.params, pb.specs
+    attn_kind, ffn_kind = kind.split("_")
+    norm_init(pb, "norm1", cfg.d_model, cfg.norm)
+    if attn_kind == "mla":
+        mla_mod.mla_init(pb.child("attn"), cfg)
+    else:
+        attn_mod.attn_init(pb.child("attn"), cfg)
+    norm_init(pb, "norm2", cfg.d_model, cfg.norm)
+    if ffn_kind == "moe":
+        moe_mod.moe_init(pb.child("ffn"), cfg)
+    else:
+        d_ff = cfg.d_ff_dense if (cfg.family == "moe" and cfg.d_ff_dense) else cfg.d_ff
+        mlp_init(pb.child("ffn"), cfg.d_model, d_ff, cfg.act)
+    return pb.params, pb.specs
+
+
+def _stack_init(rng, cfg, kind: str, n: int):
+    rngs = jax.random.split(rng, n)
+    params = jax.vmap(lambda r: _block_init(r, cfg, kind)[0])(rngs)
+    _, specs = _block_init(rng, cfg, kind)  # shapes only; re-used for axes
+    specs = jax.tree.map(lambda s: ("layers",) + s, specs, is_leaf=lambda s: isinstance(s, tuple))
+    return params, specs
+
+
+# ---------------------------------------------------------------- blocks ---
+
+
+def _block_apply(p, x, cfg, kind: str, positions, mode: str, window: int, cache, impl: str):
+    """Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = norm_apply(p, "norm1", x, cfg.norm, cfg.norm_eps, plus_one=cfg.emb_scale)
+    if kind == "ssm":
+        if mode == "decode":
+            y, cache = ssm_mod.ssm_decode(p["ssm"], h, cfg, cache)
+        else:
+            y, cache = ssm_mod.ssm_apply(p["ssm"], h, cfg, mode, impl)
+        return x + y, cache, aux
+    attn_kind, ffn_kind = kind.split("_")
+    if attn_kind == "mla":
+        if mode == "decode":
+            y, cache = mla_mod.mla_decode(p["attn"], h, cfg, cache, window)
+        else:
+            y, cache = mla_mod.mla_apply(p["attn"], h, cfg, positions, mode, window, impl)
+    else:
+        if mode == "decode":
+            y, cache = attn_mod.attn_decode(p["attn"], h, cfg, cache, window)
+        else:
+            y, cache = attn_mod.attn_apply(p["attn"], h, cfg, positions, mode, window, impl)
+    x = x + y
+    h = norm_apply(p, "norm2", x, cfg.norm, cfg.norm_eps, plus_one=cfg.emb_scale)
+    if ffn_kind == "moe":
+        y, aux = moe_mod.moe_apply(p["ffn"], h, cfg)
+    else:
+        y = mlp_apply(p["ffn"], h, cfg.act)
+    return x + y, cache, aux
+
+
+# ---------------------------------------------------------------- model ----
+
+
+def model_init(rng, cfg):
+    pb = ParamBuilder(rng, jnp.dtype(cfg.param_dtype).type)
+    pb.p("tok_emb", (cfg.vocab, cfg.d_model), ("vocab", "embed"), init="embed")
+    if not cfg.tie_embeddings:
+        pb.p("out_head", (cfg.d_model, cfg.vocab), ("embed", "vocab"), fan_in=cfg.d_model)
+    norm_init(pb, "final_norm", cfg.d_model, cfg.norm)
+    if cfg.family == "vlm":
+        pb.p("patch_proj", (cfg.d_patch, cfg.d_model), ("patch", "embed"), fan_in=cfg.d_patch)
+    if cfg.mtp:
+        pb.p("mtp_proj", (2 * cfg.d_model, cfg.d_model), (None, "embed"), fan_in=2 * cfg.d_model)
+        norm_init(pb, "mtp_norm", cfg.d_model, cfg.norm)
+    for si, (kind, n) in enumerate(segments_of(cfg)):
+        params, specs = _stack_init(jax.random.fold_in(rng, 1000 + si), cfg, kind, n)
+        pb.params[f"seg{si}"] = params
+        pb.specs[f"seg{si}"] = specs
+    if cfg.family == "hybrid":
+        sp, ss = _block_init(jax.random.fold_in(rng, 777), cfg, "attn_mlp")
+        spb = ParamBuilder(jax.random.fold_in(rng, 778), jnp.dtype(cfg.param_dtype).type)
+        spb.p("w_concat", (2 * cfg.d_model, cfg.d_model), (None, "embed"), fan_in=2 * cfg.d_model)
+        sp["w_concat"] = spb.params["w_concat"]
+        ss["w_concat"] = spb.specs["w_concat"]
+        pb.params["shared_attn"] = sp
+        pb.specs["shared_attn"] = ss
+    return pb.params, pb.specs
+
+
+def _embed(params, cfg, batch):
+    tokens = batch["tokens"]
+    x = params["tok_emb"][tokens]
+    if cfg.family == "vlm":
+        patches = jnp.einsum("bpd,de->bpe", batch["patch_embeds"].astype(x.dtype), params["patch_proj"])
+        x = jnp.concatenate([patches, x], axis=1)
+    if cfg.emb_scale:
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+    return shard(x.astype(jnp.dtype(cfg.dtype)), "batch", "seq", "act_embed")
+
+
+def _logits(params, cfg, x):
+    x = norm_apply(params, "final_norm", x, cfg.norm, cfg.norm_eps, plus_one=cfg.emb_scale)
+    head = params["tok_emb"].T if cfg.tie_embeddings else params["out_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def _hybrid_sites(cfg) -> int:
+    return cfg.n_layers // cfg.hybrid_attn_every if cfg.hybrid_attn_every else 0
+
+
+def _run_segment(params, cfg, si, kind, x, positions, mode, window, caches, impl, emb0=None):
+    """Scan a stacked segment. caches: stacked cache pytree or None."""
+    seg = params[f"seg{si}"]
+    n = jax.tree.leaves(seg)[0].shape[0]
+    hybrid = cfg.family == "hybrid" and cfg.hybrid_attn_every
+    shared = params.get("shared_attn")
+
+    def body(carry, scanned):
+        x, attn_caches, li = carry
+        layer_p, cache_in = scanned
+        x, cache_out, aux = _block_apply(layer_p, x, cfg, kind, positions, mode, window, cache_in, impl)
+        x = shard(x, "batch", "seq", "act_embed")
+        if hybrid:
+            site = (li + 1) // cfg.hybrid_attn_every - 1
+            apply_attn = (li + 1) % cfg.hybrid_attn_every == 0
+
+            def do_attn(op):
+                x, attn_caches = op
+                h = jnp.concatenate([x, emb0], axis=-1)
+                h = jnp.einsum("bsd,de->bse", h, shared["w_concat"])
+                if mode == "decode":
+                    c = jax.tree.map(lambda a: a[site], attn_caches)
+                    h2, c2, _ = _block_apply(shared, h, cfg, "attn_mlp", positions, mode, window, c, impl)
+                    attn_caches = jax.tree.map(lambda a, b: a.at[site].set(b), attn_caches, c2)
+                else:
+                    h2, c2, _ = _block_apply(shared, h, cfg, "attn_mlp", positions, mode, window, None, impl)
+                    if mode == "prefill":
+                        attn_caches = jax.tree.map(lambda a, b: a.at[site].set(b), attn_caches, c2)
+                return x + h2, attn_caches
+
+            x, attn_caches = jax.lax.cond(apply_attn, do_attn, lambda op: op, (x, attn_caches))
+        return (x, attn_caches, li + 1), (cache_out, aux)
+
+    fn = jax.checkpoint(body) if (cfg.remat and mode == "train") else body
+
+    attn_caches = caches.get("shared") if (hybrid and caches is not None) else None
+    seg_caches = caches.get(f"seg{si}") if (caches is not None and mode == "decode") else None
+    if cfg.scan_layers:
+        scan_xs = (seg, seg_caches) if seg_caches is not None else (seg, _dummy_caches(n))
+        (x, attn_caches, _), (new_caches, auxs) = jax.lax.scan(fn, (x, attn_caches, jnp.zeros((), jnp.int32)), scan_xs)
+        aux = jnp.sum(auxs)
+    else:
+        new_list, aux = [], jnp.zeros((), jnp.float32)
+        carry = (x, attn_caches, jnp.zeros((), jnp.int32))
+        for i in range(n):
+            layer_p = jax.tree.map(lambda a: a[i], seg)
+            c_in = jax.tree.map(lambda a: a[i], seg_caches) if seg_caches is not None else None
+            carry, (c_out, a) = fn(carry, (layer_p, c_in))
+            new_list.append(c_out)
+            aux = aux + a
+        x, attn_caches, _ = carry
+        new_caches = (
+            jax.tree.map(lambda *xs: jnp.stack(xs), *new_list) if new_list and new_list[0] is not None else None
+        )
+    return x, attn_caches, new_caches, aux
+
+
+class _DummyCache:
+    pass
+
+
+def _dummy_caches(n):
+    # lax.scan needs a scannable pytree even when the mode carries no caches;
+    # an integer placeholder array keeps the structure trivial.
+    return jnp.zeros((n, 1), jnp.int8)
+
+
+def forward(params, cfg, batch, mode: str = "train", window: int = 0, impl: str = "einsum"):
+    """Full-sequence forward. Returns (logits, caches, aux)."""
+    x = _embed(params, cfg, batch)
+    positions = batch.get("positions")
+    if positions is None:
+        B, S = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        if cfg.mrope_sections is not None:
+            positions = jnp.broadcast_to(positions[None], (3, B, S))
+    emb0 = x if cfg.family == "hybrid" else None
+    caches_out: Dict[str, Any] = {}
+    if mode == "prefill":
+        caches = init_caches(cfg, x.shape[0], x.shape[1], window, dtype=jnp.dtype(cfg.dtype))
+    else:
+        caches = None
+    aux_total = jnp.zeros((), jnp.float32)
+    attn_caches_final = None
+    for si, (kind, n) in enumerate(segments_of(cfg)):
+        x, attn_caches_final, new_caches, aux = _run_segment(
+            params, cfg, si, kind, x, positions, mode, window, caches, impl, emb0
+        )
+        aux_total = aux_total + aux
+        if mode == "prefill" and new_caches is not None and not isinstance(new_caches, jnp.ndarray):
+            caches_out[f"seg{si}"] = new_caches
+    if mode == "prefill" and attn_caches_final is not None:
+        caches_out["shared"] = attn_caches_final
+    logits = _logits(params, cfg, x)
+    if cfg.mtp and mode == "train":
+        # DeepSeek-style multi-token prediction: fuse h_t with emb(token_{t+1})
+        # to predict token_{t+2}; auxiliary logits returned via aux dict.
+        emb_next = params["tok_emb"][batch["tokens"]][:, 1:]
+        h = norm_apply(params, "mtp_norm", x[:, :-1], cfg.norm, cfg.norm_eps, plus_one=cfg.emb_scale)
+        fused = jnp.einsum(
+            "bsd,de->bse", jnp.concatenate([h, emb_next.astype(h.dtype)], -1), params["mtp_proj"]
+        )
+        mtp_logits = _logits(params, cfg, fused)
+        return logits, caches_out or None, (aux_total, mtp_logits)
+    return logits, (caches_out or None), (aux_total, None)
+
+
+def decode_step(params, cfg, tokens, caches, window: int = 0):
+    """tokens: (B, 1). caches: dict seg{i} -> stacked cache (+ 'shared')."""
+    batch = {"tokens": tokens}
+    x = params["tok_emb"][tokens]
+    if cfg.emb_scale:
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+    x = x.astype(jnp.dtype(cfg.dtype))
+    emb0 = x if cfg.family == "hybrid" else None
+    new_caches = {}
+    attn_caches = caches.get("shared")
+    positions = None
+    aux = jnp.zeros((), jnp.float32)
+    for si, (kind, n) in enumerate(segments_of(cfg)):
+        x, attn_caches, seg_new, _ = _run_segment(
+            params, cfg, si, kind, x, positions, "decode", window, {**caches, "shared": attn_caches}, "einsum", emb0
+        )
+        new_caches[f"seg{si}"] = seg_new
+    if attn_caches is not None:
+        new_caches["shared"] = attn_caches
+    logits = _logits(params, cfg, x)
+    return logits, new_caches
+
+
+def init_caches(cfg, B: int, S_cache: int, window: int = 0, dtype=jnp.bfloat16):
+    """Stacked decode caches per segment (+ hybrid shared-attn sites)."""
+    out = {}
+    for si, (kind, n) in enumerate(segments_of(cfg)):
+        if kind == "ssm":
+            c = ssm_mod.init_ssm_cache(cfg, B, dtype)
+        elif kind.startswith("mla"):
+            c = mla_mod.init_mla_cache(cfg, B, S_cache, window, dtype)
+        else:
+            c = attn_mod.init_kv_cache(cfg, B, S_cache, window, dtype)
+        out[f"seg{si}"] = jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), c)
+    if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+        sites = _hybrid_sites(cfg)
+        c = attn_mod.init_kv_cache(cfg, B, S_cache, window, dtype)
+        out["shared"] = jax.tree.map(lambda a: jnp.broadcast_to(a, (sites,) + a.shape), c)
+    return out
+
+
+def pad_caches(caches, margin: int, window: int = 0):
+    """Grow prefilled KV/latent caches by ``margin`` decode slots (seq axis=2
+    of the layer-stacked tensors).  Ring-buffer (windowed) and SSM caches are
+    fixed-size and pass through unchanged."""
+    if margin <= 0 or window > 0 or caches is None:
+        return caches
+
+    def pad(leaf):
+        c = leaf
+
+        def grow(a):
+            if a.ndim >= 3:
+                pad_width = [(0, 0)] * a.ndim
+                pad_width[2] = (0, margin)
+                return jnp.pad(a, pad_width)
+            return a
+
+        if isinstance(c, attn_mod.KVCache):
+            return attn_mod.KVCache(grow(c.k), grow(c.v), c.pos)
+        if isinstance(c, mla_mod.MLACache):
+            return mla_mod.MLACache(grow(c.c_kv), grow(c.k_rope), c.pos)
+        return c
+
+    return {
+        name: pad(c) for name, c in caches.items()
+    }
+
+
+def cache_specs(cfg):
+    """Logical-axis tuples mirroring ``init_caches`` structure."""
+    out = {}
+    for si, (kind, n) in enumerate(segments_of(cfg)):
+        if kind == "ssm":
+            c = ssm_mod.SSMCache(
+                ("layers", "batch", None, "ssm_inner"),
+                ("layers", "batch", "ssm_inner", "ssm_state", None),
+                ("layers",),
+            )
+        elif kind.startswith("mla"):
+            c = mla_mod.MLACache(
+                ("layers", "batch", "cache_seq", None),
+                ("layers", "batch", "cache_seq", None),
+                ("layers",),
+            )
+        else:
+            c = attn_mod.KVCache(
+                ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+                ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+                ("layers",),
+            )
+        out[f"seg{si}"] = c
+    if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+        out["shared"] = attn_mod.KVCache(
+            ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+            ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+            ("layers",),
+        )
+    return out
+
+
+def vlm_positions(cfg, B: int, S: int) -> jnp.ndarray:
+    """Qwen2-VL M-RoPE position ids (3, B, S): one image of n_patches in a
+    square grid followed by text."""
+    P = cfg.n_patches
+    import math
+
+    g = int(math.sqrt(P))
+    t_img = jnp.zeros((P,), jnp.int32)
+    h_img = (jnp.arange(P) // g).astype(jnp.int32)
+    w_img = (jnp.arange(P) % g).astype(jnp.int32)
+    n_text = S - P
+    text = jnp.arange(n_text, dtype=jnp.int32) + g  # offset past image extent
+    pos3 = jnp.stack(
+        [
+            jnp.concatenate([t_img, text]),
+            jnp.concatenate([h_img, text]),
+            jnp.concatenate([w_img, text]),
+        ]
+    )
+    return jnp.broadcast_to(pos3[:, None, :], (3, B, S))

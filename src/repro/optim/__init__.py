@@ -1,0 +1,4 @@
+from .optimizers import Optimizer, sgd, adamw
+from .schedules import constant, cosine_decay, warmup_cosine
+
+__all__ = ["Optimizer", "sgd", "adamw", "constant", "cosine_decay", "warmup_cosine"]

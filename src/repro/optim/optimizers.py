@@ -1,0 +1,92 @@
+"""Optimizers from scratch (no optax): SGD(+momentum) and AdamW.
+
+Functional API mirroring the rest of the framework:
+
+    opt = sgd(lr=1e-2, momentum=0.9)
+    state = opt.init(params)
+    params, state = opt.update(params, grads, state, step)
+
+``lr`` may be a float or a schedule ``step -> float``.  All state lives in
+the same dtype as the parameters unless ``fp32_state=True`` (recommended for
+bf16 training; the FL paper's SGD runs fp32 anyway).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "sgd", "adamw"]
+
+Schedule = Union[float, Callable]
+
+
+def _lr_at(lr: Schedule, step):
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def sgd(lr: Schedule = 1e-2, momentum: float = 0.0, nesterov: bool = False, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(params, grads, state, step=0):
+        lr_t = _lr_at(lr, step)
+        if weight_decay:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p.astype(g.dtype), grads, params)
+        if momentum == 0.0:
+            new_params = jax.tree.map(lambda p, g: (p - lr_t * g.astype(jnp.float32)).astype(p.dtype), params, grads)
+            return new_params, ()
+        new_state = jax.tree.map(lambda m, g: momentum * m + g.astype(m.dtype), state, grads)
+        eff = (
+            jax.tree.map(lambda m, g: g.astype(m.dtype) + momentum * m, new_state, grads)
+            if nesterov
+            else new_state
+        )
+        new_params = jax.tree.map(lambda p, m: (p - lr_t * m.astype(jnp.float32)).astype(p.dtype), params, eff)
+        return new_params, new_state
+
+    return Optimizer(init, update)
+
+
+class AdamWState(NamedTuple):
+    mu: object
+    nu: object
+
+
+def adamw(
+    lr: Schedule = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    fp32_state: bool = True,
+) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32 if fp32_state else p.dtype)
+        return AdamWState(jax.tree.map(z, params), jax.tree.map(z, params))
+
+    def update(params, grads, state, step=0):
+        lr_t = _lr_at(lr, step)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        c1 = 1.0 - b1**t
+        c2 = 1.0 - b2**t
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(m.dtype), state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(v.dtype)), state.nu, grads)
+
+        def upd(p, m, v):
+            mh = m / c1
+            vh = v / c2
+            step_ = lr_t * (mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(mh.dtype))
+            return (p.astype(jnp.float32) - step_).astype(p.dtype)
+
+        return jax.tree.map(upd, params, mu, nu), AdamWState(mu, nu)
+
+    return Optimizer(init, update)

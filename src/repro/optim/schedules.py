@@ -1,0 +1,28 @@
+"""Learning-rate schedules (pure functions of the step index)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["constant", "cosine_decay", "warmup_cosine"]
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_decay(lr: float, total_steps: int, final_frac: float = 0.1):
+    def f(step):
+        x = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        return jnp.asarray(lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * x))), jnp.float32)
+
+    return f
+
+
+def warmup_cosine(lr: float, warmup: int, total_steps: int, final_frac: float = 0.1):
+    cd = cosine_decay(lr, max(total_steps - warmup, 1), final_frac)
+
+    def f(step):
+        w = jnp.minimum(step / max(warmup, 1), 1.0)
+        return jnp.asarray(w, jnp.float32) * cd(jnp.maximum(step - warmup, 0))
+
+    return f

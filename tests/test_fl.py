@@ -1,0 +1,145 @@
+"""FL substrate tests: aggregation identities (property-based), masked local
+update, volatility models, and a small end-to-end learning run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import FLConfig, get_config
+from repro.core.volatility import BernoulliVolatility, MarkovVolatility, paper_success_rates
+from repro.data import ClientStore, make_image_dataset, partition_primary_label
+from repro.fl import FLServer, aggregate, make_local_update
+from repro.models import build_model
+from repro.optim import sgd
+
+
+class TestAggregation:
+    def _params(self, seed=0):
+        rng = np.random.default_rng(seed)
+        return {"w": jnp.asarray(rng.normal(size=(4, 3)), jnp.float32), "b": jnp.asarray(rng.normal(size=(3,)), jnp.float32)}
+
+    def test_all_failed_keeps_global(self):
+        g = self._params()
+        cohort = jax.tree.map(lambda a: jnp.stack([a + 1, a + 2]), g)
+        out = aggregate(g, cohort, jnp.zeros(2), jnp.ones(2), jnp.float32(10.0), 10, "fedavg")
+        for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(g)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+    def test_paper_substitution_semantics(self):
+        # theta' = theta + sum_i w_i mask_i (theta_i - theta): one success of K
+        g = self._params()
+        delta = jax.tree.map(jnp.ones_like, g)
+        cohort = jax.tree.map(lambda a, d: jnp.stack([a + d, a - 5 * d]), g, delta)
+        out = aggregate(g, cohort, jnp.asarray([1.0, 0.0]), jnp.ones(2), jnp.float32(4.0), 4, "mean")
+        for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(g)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b) + 1.0 / 4.0, rtol=1e-6)
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(1, 6), st.integers(0, 63))
+    def test_unbiased_estimator_is_unbiased(self, k, succ_bits):
+        # E_p[ sum w_i/p_i mask_i delta ] == sum w_i delta under full success
+        g = {"w": jnp.zeros((2,))}
+        delta = {"w": jnp.ones((2,))}
+        cohort = jax.tree.map(lambda a, d: jnp.stack([a + d] * k), g, delta)
+        p = jnp.full((k,), 0.5)
+        out = aggregate(g, cohort, jnp.ones(k), jnp.ones(k), jnp.float32(2 * k), 2 * k, "unbiased", sel_probs=p)
+        # w_i = (1/2k)/0.5 = 1/k each, k of them -> +1 total
+        np.testing.assert_allclose(np.asarray(out["w"]), 1.0, rtol=1e-5)
+
+    def test_epoch_weighted_upweights_fewer_epochs(self):
+        g = {"w": jnp.zeros(())}
+        cohort = {"w": jnp.asarray([1.0, 1.0])}
+        out_eq = aggregate(g, cohort, jnp.ones(2), jnp.ones(2), jnp.float32(2), 2, "epoch_weighted", epochs=jnp.asarray([1.0, 1.0]))
+        out_sk = aggregate(g, cohort, jnp.ones(2), jnp.ones(2), jnp.float32(2), 2, "epoch_weighted", epochs=jnp.asarray([1.0, 4.0]))
+        assert float(out_eq["w"]) == pytest.approx(1.0, rel=1e-5)  # total weight preserved
+        assert float(out_sk["w"]) == pytest.approx(1.0, rel=1e-5)
+
+
+class TestLocalUpdate:
+    def _setup(self):
+        cfg = get_config("emnist-cnn")
+        model = build_model(cfg)
+        params, _ = model.init(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(4, 8, 28, 28, 1)), jnp.float32)
+        y = jnp.asarray(rng.integers(0, 26, (4, 8)), jnp.int32)
+        return model, params, {"x": x, "y": y}
+
+    def test_masked_steps_are_noops(self):
+        model, params, batches = self._setup()
+        local = make_local_update(model, sgd(0.05, 0.9))
+        full_mask = jnp.ones((4,))
+        half_mask = jnp.asarray([1.0, 1.0, 0.0, 0.0])
+        p_half, _ = local(params, batches, half_mask, jax.random.PRNGKey(1))
+        b2 = jax.tree.map(lambda a: a[:2], batches)
+        p_two, _ = local(params, b2, jnp.ones((2,)), jax.random.PRNGKey(1))
+        for a, b in zip(jax.tree.leaves(p_half), jax.tree.leaves(p_two)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+    def test_fedprox_stays_closer_to_global(self):
+        model, params, batches = self._setup()
+        mask = jnp.ones((4,))
+        p_avg, _ = make_local_update(model, sgd(0.05, 0.9), "fedavg")(params, batches, mask, jax.random.PRNGKey(1))
+        p_prox, _ = make_local_update(model, sgd(0.05, 0.9), "fedprox", prox_coef=5.0)(
+            params, batches, mask, jax.random.PRNGKey(1)
+        )
+
+        def dist(a):
+            return float(
+                sum(jnp.sum((x - y) ** 2) for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(params)))
+            )
+
+        assert dist(p_prox) < dist(p_avg)
+
+
+class TestVolatility:
+    def test_bernoulli_marginal_rates(self):
+        rho = jnp.asarray(paper_success_rates(40))
+        vol = BernoulliVolatility(rho)
+        xs = []
+        vs = vol.init_state()
+        for i in range(400):
+            x, vs = vol.sample(jax.random.PRNGKey(i), vs)
+            xs.append(np.asarray(x))
+        emp = np.stack(xs).mean(0).reshape(4, -1).mean(1)
+        np.testing.assert_allclose(emp, [0.1, 0.3, 0.6, 0.9], atol=0.07)
+
+    def test_markov_stationary_matches_rho_but_correlated(self):
+        rho = jnp.full((20,), 0.5)
+        vol = MarkovVolatility(rho, stickiness=0.9)
+        vs = vol.init_state()
+        xs = []
+        for i in range(600):
+            x, vs = vol.sample(jax.random.PRNGKey(i), vs)
+            xs.append(np.asarray(x))
+        xs = np.stack(xs)
+        assert abs(xs.mean() - 0.5) < 0.06
+        # lag-1 autocorrelation strongly positive
+        a, b = xs[:-1].ravel(), xs[1:].ravel()
+        corr = np.corrcoef(a, b)[0, 1]
+        assert corr > 0.5
+
+
+@pytest.mark.slow
+def test_end_to_end_fl_learns():
+    cfg = get_config("emnist-cnn")
+    fl = FLConfig(K=40, k=8, rounds=16, scheme="e3cs", quota="const", quota_frac=0.5,
+                  samples_per_client=60, batch_size=20, local_epochs=(1,))
+    data = make_image_dataset(26, (28, 28, 1), 4000, 1500, seed=0)
+    idxs = partition_primary_label(data["y"], fl.K, fl.samples_per_client, seed=0)
+    store = ClientStore(data, idxs)
+    model = build_model(cfg)
+
+    def eval_fn(params):
+        x, y = store.eval_batch(800)
+        logits = model.forward(params, {"x": jnp.asarray(x), "y": jnp.asarray(y)})
+        from repro.models import cross_entropy
+
+        return float((jnp.argmax(logits, -1) == jnp.asarray(y)).mean()), float(cross_entropy(logits, jnp.asarray(y)))
+
+    srv = FLServer(model, fl, store, eval_fn)
+    state = srv.init_state(jax.random.PRNGKey(0))
+    state, hist = srv.run(state, eval_every=16)
+    assert hist["acc"][-1] > 0.15  # >> 1/26 chance
+    assert float(state.cep) > 0

@@ -1,0 +1,164 @@
+"""Property + unit tests for the paper's core: ProbAlloc, samplers, E3CS,
+quota schedules, regret bound (Theorem 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.selection import (
+    e3cs_init,
+    e3cs_round,
+    make_quota_schedule,
+    oracle_cep,
+    prob_alloc,
+    prob_alloc_reference,
+    regret,
+    sample_selection,
+    selection_mask,
+    theorem1_bound,
+    theorem1_eta,
+)
+from repro.core.selection.sampling import inclusion_probability_mc
+from repro.core.volatility import BernoulliVolatility, paper_success_rates
+
+
+@st.composite
+def alloc_case(draw):
+    K = draw(st.integers(3, 50))
+    k = draw(st.integers(1, K))
+    sigma_frac = draw(st.floats(0.0, 0.999))
+    weights = draw(
+        st.lists(st.floats(1e-4, 1e4, allow_nan=False, allow_infinity=False), min_size=K, max_size=K)
+    )
+    return K, k, sigma_frac * k / K, np.asarray(weights, np.float32)
+
+
+class TestProbAlloc:
+    @settings(max_examples=150, deadline=None)
+    @given(alloc_case())
+    def test_invariants_and_matches_reference(self, case):
+        K, k, sigma, w = case
+        p, capped = prob_alloc(jnp.asarray(w), k, sigma)
+        p = np.asarray(p)
+        # cardinality: sum p == k (Eq. 12 constraint)
+        assert abs(p.sum() - k) < 1e-3 * k + 1e-3
+        # fairness floor and ceiling: sigma <= p <= 1
+        assert p.min() >= sigma - 1e-5
+        assert p.max() <= 1.0 + 1e-5
+        pr, capped_r = prob_alloc_reference(w, k, sigma)
+        np.testing.assert_allclose(p, pr, rtol=3e-3, atol=1e-4)
+        assert (np.asarray(capped) == capped_r).all()
+
+    def test_monotone_in_weights(self):
+        w = jnp.asarray([1.0, 2.0, 3.0, 4.0, 100.0])
+        p, _ = prob_alloc(w, 2, 0.05)
+        assert bool(jnp.all(jnp.diff(p) >= -1e-7))
+
+    def test_uniform_weights_give_uniform_probs(self):
+        p, capped = prob_alloc(jnp.ones(10), 3, 0.1)
+        np.testing.assert_allclose(np.asarray(p), 0.3, atol=1e-6)
+        assert not bool(capped.any())
+
+    def test_capping_triggers_on_dominant_weight(self):
+        w = jnp.asarray([1e6, 1.0, 1.0, 1.0, 1.0, 1.0])
+        p, capped = prob_alloc(w, 3, 0.0)
+        assert float(p[0]) == pytest.approx(1.0, abs=1e-5)
+        assert bool(capped[0]) and not bool(capped[1:].any())
+
+
+class TestSampling:
+    def test_plackett_luce_returns_k_distinct(self):
+        p, _ = prob_alloc(jnp.asarray(np.random.default_rng(0).gamma(1, 1, 30).astype(np.float32)), 8, 0.1 * 8 / 30)
+        idx = sample_selection(jax.random.PRNGKey(0), p, 8, "plackett_luce")
+        assert len(set(np.asarray(idx).tolist())) == 8
+
+    def test_systematic_inclusion_probabilities_exact(self):
+        rng = np.random.default_rng(1)
+        p, _ = prob_alloc(jnp.asarray(rng.gamma(0.5, 2, 16).astype(np.float32)), 5, 0.2 * 5 / 16)
+        inc = inclusion_probability_mc(jax.random.PRNGKey(1), p, 5, 3000, "systematic")
+        # Madow sampling: E[1{i in A}] == p_i (3-sigma MC tolerance)
+        tol = 3 * np.sqrt(np.asarray(p) * (1 - np.asarray(p)) / 3000) + 1e-3
+        assert (np.abs(np.asarray(inc) - np.asarray(p)) <= tol).all()
+
+    def test_systematic_beats_plackett_luce_on_inclusion_error(self):
+        rng = np.random.default_rng(2)
+        p, _ = prob_alloc(jnp.asarray(rng.gamma(0.3, 5, 20).astype(np.float32)), 6, 0.0)
+        err = {}
+        for m in ("plackett_luce", "systematic"):
+            inc = inclusion_probability_mc(jax.random.PRNGKey(2), p, 6, 2000, m)
+            err[m] = float(jnp.abs(inc - p).max())
+        assert err["systematic"] < err["plackett_luce"]
+
+
+class TestE3CS:
+    def test_learns_stable_clients(self):
+        K, k, T = 40, 8, 300
+        rho = jnp.asarray(paper_success_rates(K))
+        vol = BernoulliVolatility(rho)
+
+        def step(carry, key):
+            stt, vs = carry
+            k1, k2 = jax.random.split(key)
+            x, vs = vol.sample(k1, vs)
+            stt, idx, mask, p = e3cs_round(stt, k2, x, k, jnp.float32(0.0), 0.5)
+            return (stt, vs), mask
+
+        (_, _), masks = jax.lax.scan(step, (e3cs_init(K), vol.init_state()), jax.random.split(jax.random.PRNGKey(0), T))
+        per_class = np.asarray(masks.sum(0)).reshape(4, -1).sum(1)
+        assert per_class[3] > 3 * per_class[0]  # rho=.9 class dominates rho=.1
+
+    def test_fairness_quota_floor_respected_in_expectation(self):
+        K, k = 20, 5
+        sigma = 0.8 * k / K
+        state = e3cs_init(K)
+        # skew weights heavily, then check allocation still >= sigma
+        state = state._replace(logw=jnp.linspace(0, 10, K))
+        from repro.core.selection import e3cs_probs
+
+        p, _ = e3cs_probs(state, k, jnp.float32(sigma))
+        assert float(p.min()) >= sigma - 1e-6
+
+    def test_regret_below_theorem1_bound(self):
+        # adversarial-ish sequence: class success flips mid-horizon
+        K, k, T = 16, 4, 400
+        rng = np.random.default_rng(0)
+        rho1 = np.concatenate([np.full(8, 0.9), np.full(8, 0.1)])
+        rho2 = np.concatenate([np.full(8, 0.1), np.full(8, 0.9)])
+        xs = np.stack([rng.binomial(1, rho1 if t < T // 2 else rho2) for t in range(T)]).astype(np.float32)
+        sigma = 0.2 * k / K
+        eta = theorem1_eta(K, k, np.full(T, sigma))
+        state = e3cs_init(K)
+        ps = []
+        key = jax.random.PRNGKey(3)
+        for t in range(T):
+            key, sub = jax.random.split(key)
+            state, idx, mask, p = e3cs_round(state, sub, jnp.asarray(xs[t]), k, jnp.float32(sigma), eta)
+            ps.append(np.asarray(p))
+        R = regret(np.stack(ps), xs, k, np.full(T, sigma), mode="static")
+        bound = theorem1_bound(K, k, np.full(T, sigma), eta)
+        assert R <= bound, (R, bound)
+
+    def test_quota_schedules_bounded(self):
+        for name in ("const", "inc", "linear", "cosine"):
+            q = make_quota_schedule(name, 20, 100, 400, frac=0.7)
+            vals = [float(q(jnp.asarray(t))) for t in [0, 100, 399]]
+            assert all(0 <= v <= 20 / 100 + 1e-6 for v in vals), (name, vals)
+
+    def test_e3cs_inc_schedule_switches_at_T4(self):
+        q = make_quota_schedule("inc", 20, 100, 400)
+        assert float(q(jnp.asarray(99))) == 0.0
+        assert float(q(jnp.asarray(100))) == pytest.approx(0.2)
+
+
+class TestOracle:
+    def test_per_round_oracle_upper_bounds_static(self):
+        rng = np.random.default_rng(5)
+        xs = rng.binomial(1, 0.5, (50, 12)).astype(np.float32)
+        assert oracle_cep(xs, 4, np.zeros(50), "per_round") >= oracle_cep(xs, 4, np.zeros(50), "static") - 1e-9
+
+    def test_full_fairness_oracle_equals_uniform(self):
+        xs = np.ones((10, 8), np.float32)
+        sigma = np.full(10, 4 / 8)
+        # sigma = k/K: everyone gets k/K, CEP* = T*k
+        assert oracle_cep(xs, 4, sigma, "static") == pytest.approx(40.0)

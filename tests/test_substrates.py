@@ -1,0 +1,105 @@
+"""Optimizers, schedules, data partitioners, pipeline, checkpoint."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import latest_checkpoint, restore, save
+from repro.data import (
+    ClientStore,
+    make_image_dataset,
+    partition_dirichlet,
+    partition_iid,
+    partition_primary_label,
+)
+from repro.optim import adamw, cosine_decay, sgd, warmup_cosine
+
+
+class TestOptim:
+    def test_sgd_momentum_matches_closed_form(self):
+        opt = sgd(0.1, 0.9)
+        p = {"w": jnp.asarray([1.0])}
+        st_ = opt.init(p)
+        g = {"w": jnp.asarray([1.0])}
+        p, st_ = opt.update(p, g, st_, 0)  # m=1, p=1-0.1
+        np.testing.assert_allclose(np.asarray(p["w"]), [0.9])
+        p, st_ = opt.update(p, g, st_, 1)  # m=1.9, p=0.9-0.19
+        np.testing.assert_allclose(np.asarray(p["w"]), [0.71], rtol=1e-6)
+
+    def test_adamw_decreases_quadratic(self):
+        opt = adamw(0.1, weight_decay=0.0)
+        p = {"w": jnp.asarray([5.0])}
+        s = opt.init(p)
+        for i in range(50):
+            g = {"w": 2 * p["w"]}
+            p, s = opt.update(p, g, s, i)
+        assert abs(float(p["w"][0])) < 1.0
+
+    def test_schedules(self):
+        cd = cosine_decay(1.0, 100)
+        assert float(cd(0)) == pytest.approx(1.0)
+        assert float(cd(100)) == pytest.approx(0.1, abs=1e-6)
+        wc = warmup_cosine(1.0, 10, 110)
+        assert float(wc(0)) == pytest.approx(0.0)
+        assert float(wc(10)) == pytest.approx(1.0)
+
+
+class TestData:
+    def test_primary_label_partition_is_skewed(self):
+        data = make_image_dataset(10, (8, 8, 1), 4000, 100, seed=0)
+        idxs = partition_primary_label(data["y"], K=20, per_client=100, primary_frac=0.8, seed=0)
+        for c in idxs:
+            labels, counts = np.unique(data["y"][c], return_counts=True)
+            assert counts.max() >= 0.7 * 100  # dominant primary label
+
+    def test_iid_partition_is_even(self):
+        data = make_image_dataset(10, (8, 8, 1), 4000, 100, seed=0)
+        idxs = partition_iid(data["y"], K=20, per_client=200, seed=0)
+        for c in idxs:
+            _, counts = np.unique(data["y"][c], return_counts=True)
+            assert counts.max() < 0.35 * 200
+
+    def test_dirichlet_partition_alpha_controls_skew(self):
+        data = make_image_dataset(10, (8, 8, 1), 4000, 100, seed=0)
+        skewed = partition_dirichlet(data["y"], 10, 200, alpha=0.05, seed=0)
+        even = partition_dirichlet(data["y"], 10, 200, alpha=100.0, seed=0)
+
+        def top_frac(idxs):
+            return np.mean([np.unique(data["y"][c], return_counts=True)[1].max() / len(c) for c in idxs])
+
+        assert top_frac(skewed) > top_frac(even) + 0.2
+
+    def test_image_dataset_is_learnable_structure(self):
+        # class prototypes must be separable: nearest-prototype acc >> chance
+        d = make_image_dataset(10, (8, 8, 1), 2000, 500, seed=0, noise=0.5)
+        protos = np.stack([d["x"][d["y"] == c].mean(0) for c in range(10)])
+        pred = np.argmin(((d["x_test"][:, None] - protos[None]) ** 2).sum((2, 3, 4)), 1)
+        assert (pred == d["y_test"]).mean() > 0.5
+
+    def test_round_batches_static_shapes(self):
+        data = make_image_dataset(5, (8, 8, 1), 1000, 100, seed=0)
+        idxs = partition_iid(data["y"], 10, 50, seed=0)
+        store = ClientStore(data, idxs)
+        epochs = np.asarray([1, 2] * 5)
+        xb, yb, mask = store.round_batches([0, 3, 5], epochs, batch_size=10, n_steps=10)
+        assert xb.shape == (3, 10, 10, 8, 8, 1) and mask.shape == (3, 10)
+        assert mask.sum(1).max() <= 10
+
+
+class TestCheckpoint:
+    def test_roundtrip_mixed_dtypes(self):
+        tree = {
+            "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": jnp.ones((4,), jnp.bfloat16) * 1.5,
+            "c": {"d": jnp.asarray([1, 2, 3], jnp.int32)},
+        }
+        with tempfile.TemporaryDirectory() as d:
+            path = save(os.path.join(d, "ckpt_7.ckpt"), tree, step=7)
+            back = restore(path, tree)
+            for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+                np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+            assert latest_checkpoint(d) == path

@@ -1,0 +1,120 @@
+"""End-to-end behaviour tests for the paper's system: the qualitative claims
+of the paper reproduced at simulation scale (selection-only, fast).
+
+These are the paper's §VI-B1 numerical results as assertions:
+  * CEP ordering: FedCS > E3CS-0 > E3CS-0.5 > E3CS-0.8 > Random  (Fig. 4)
+  * fairness ordering (Jain index) is the reverse                (Fig. 3)
+  * E3CS-inc switches from greedy to fair at T/4                 (Fig. 4 top)
+  * pow-d favours lossy (failure-prone) clients                  (Fig. 3 analysis)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import FLConfig
+from repro.core.fairness import cep, jain_index, success_ratio
+from repro.core.selection import make_quota_schedule
+from repro.core.volatility import BernoulliVolatility, paper_success_rates
+from repro.fl.round import ServerState, init_server_state, make_select_fn
+from repro.core.selection import e3cs_update, selection_mask
+
+K, k, T = 100, 20, 600
+
+
+def run_selection_sim(scheme, quota="const", frac=0.0, T=T, seed=0):
+    """Selection-only simulation (no model training) — mirrors Fig. 3/4."""
+    fl = FLConfig(K=K, k=k, rounds=T, scheme=scheme, quota=quota, quota_frac=frac)
+    rho = jnp.asarray(paper_success_rates(K))
+    vol = BernoulliVolatility(rho)
+    quota_fn = make_quota_schedule(quota, k, K, T, frac)
+    select = jax.jit(make_select_fn(fl, quota_fn, rho))
+    state = init_server_state({}, K, vol.init_state())
+    key = jax.random.PRNGKey(seed)
+    masks, xs = [], []
+    for t in range(T):
+        key, k1, k2 = jax.random.split(key, 3)
+        idx, p, capped, sigma = select(state, k1)
+        x, vs = vol.sample(k2, state.vol_state)
+        mask = selection_mask(idx, K)
+        e3cs = state.e3cs
+        if scheme == "e3cs":
+            e3cs = e3cs_update(state.e3cs, p, capped, mask, x, k, sigma, fl.eta)
+        # pow-d loss proxy: failure-prone clients have higher loss (paper's analysis)
+        loss_cache = jnp.where(mask > 0, 1.0 - x, state.loss_cache)
+        state = state._replace(
+            e3cs=e3cs, vol_state=vs, t=state.t + 1, sel_counts=state.sel_counts + mask, loss_cache=loss_cache
+        )
+        masks.append(np.asarray(mask))
+        xs.append(np.asarray(x))
+    masks, xs = np.stack(masks), np.stack(xs)
+    return dict(
+        cep=float((masks * xs).sum()),
+        jain=float(jain_index(jnp.asarray(masks.sum(0)))),
+        counts=masks.sum(0),
+        succ_ratio=float((masks * xs).sum() / masks.sum()),
+    )
+
+
+@pytest.fixture(scope="module")
+def sims():
+    return {
+        "fedcs": run_selection_sim("fedcs"),
+        "e3cs-0": run_selection_sim("e3cs", frac=0.0),
+        "e3cs-0.5": run_selection_sim("e3cs", frac=0.5),
+        "e3cs-0.8": run_selection_sim("e3cs", frac=0.8),
+        "random": run_selection_sim("random"),
+        "pow_d": run_selection_sim("pow_d"),
+    }
+
+
+def test_cep_ordering_matches_fig4(sims):
+    assert sims["fedcs"]["cep"] >= sims["e3cs-0"]["cep"] > sims["e3cs-0.5"]["cep"]
+    assert sims["e3cs-0.5"]["cep"] > sims["e3cs-0.8"]["cep"] > sims["random"]["cep"] * 0.99
+
+
+def test_fairness_ordering_matches_fig3(sims):
+    assert sims["random"]["jain"] > sims["e3cs-0.8"]["jain"] > sims["e3cs-0.5"]["jain"]
+    assert sims["e3cs-0.5"]["jain"] > sims["e3cs-0"]["jain"] > sims["fedcs"]["jain"]
+
+
+def test_e3cs0_learns_most_reliable_class(sims):
+    counts = sims["e3cs-0"]["counts"].reshape(4, -1).sum(1)
+    assert counts[3] > 0.7 * sims["e3cs-0"]["counts"].sum()
+
+
+def test_fedcs_dedicates_to_20_of_25_class1(sims):
+    counts = sims["fedcs"]["counts"]
+    assert (counts[75:] > 0).sum() >= 20 and counts[:75].sum() == 0
+
+
+def test_powd_prefers_failure_prone_clients(sims):
+    counts = sims["pow_d"]["counts"].reshape(4, -1).sum(1)
+    assert counts[0] > counts[3]  # rho=0.1 class selected more than rho=0.9
+
+
+def test_e3cs_inc_success_ratio_drops_after_T4():
+    fl = FLConfig(K=K, k=k, rounds=T, scheme="e3cs", quota="inc")
+    rho = jnp.asarray(paper_success_rates(K))
+    vol = BernoulliVolatility(rho)
+    quota_fn = make_quota_schedule("inc", k, K, T, 0)
+    select = jax.jit(make_select_fn(fl, quota_fn, rho))
+    state = init_server_state({}, K, vol.init_state())
+    key = jax.random.PRNGKey(0)
+    succ = []
+    for t in range(T):
+        key, k1, k2 = jax.random.split(key, 3)
+        idx, p, capped, sigma = select(state, k1)
+        x, vs = vol.sample(k2, state.vol_state)
+        mask = selection_mask(idx, K)
+        e3cs = e3cs_update(state.e3cs, p, capped, mask, x, k, sigma, fl.eta)
+        state = state._replace(e3cs=e3cs, vol_state=vs, t=state.t + 1)
+        succ.append(float((mask * x).sum() / k))
+    early = np.mean(succ[T // 8 : T // 4])  # after learning, before the switch
+    late = np.mean(succ[T // 2 :])  # uniform selection -> mean(rho) = 0.475
+    assert early > 0.8 and late < 0.62
+
+
+def test_selection_respects_cardinality(sims):
+    for name, s in sims.items():
+        assert s["counts"].sum() == T * k, name
