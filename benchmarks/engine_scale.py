@@ -1,0 +1,119 @@
+"""Engine-scale benchmark: scan simulator vs legacy loop, sharded (sort-free)
+ProbAlloc vs the sorted baseline across K, and multi-job batching across J.
+
+Rows (name,us_per_call,derived):
+  engine/scan_sim            — compiled whole-horizon sim at K=100
+  engine/loop_sim            — legacy per-round Python loop (baseline)
+  engine/prob_alloc/K=...    — bisection allocator; derived carries the sorted
+                               baseline time and (K <= 1e5) the max |p - ref|
+                               error vs the paper's literal case enumeration
+  engine/multi_job/J=...     — one batched dispatch vs J single dispatches
+
+CLI:  python benchmarks/engine_scale.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from .common import emit, save_json, time_fn
+except ImportError:  # running as a script: python benchmarks/engine_scale.py
+    from common import emit, save_json, time_fn
+
+from repro.core.selection import prob_alloc, prob_alloc_reference
+from repro.core.sim import selection_sim, selection_sim_loop
+from repro.engine.multi_job import make_multi_job, multi_job_init, pack_jobs
+from repro.engine.sharded import prob_alloc_sharded
+
+
+def bench_sim(T: int, out: dict):
+    t0 = time.perf_counter()
+    selection_sim("e3cs", K=100, k=20, T=T, frac=0.5, backend="scan")  # compile + run
+    scan_total = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    selection_sim("e3cs", K=100, k=20, T=T, frac=0.5, backend="scan")  # steady state
+    scan_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    selection_sim_loop("e3cs", K=100, k=20, T=T, frac=0.5)
+    loop_s = time.perf_counter() - t0
+    speedup = loop_s / scan_s
+    out["sim"] = {"T": T, "scan_s": scan_s, "scan_with_compile_s": scan_total, "loop_s": loop_s, "speedup": speedup}
+    emit("engine/scan_sim", scan_s / T * 1e6, f"T={T};speedup_vs_loop={speedup:.1f}x")
+    emit("engine/loop_sim", loop_s / T * 1e6, f"T={T}")
+    return speedup
+
+
+def bench_prob_alloc(K_list, out: dict):
+    rng = np.random.default_rng(0)
+    rows = {}
+    for K in K_list:
+        k = max(1, K // 50)
+        sigma = 0.5 * k / K
+        w = jnp.asarray(rng.gamma(0.3, 1.0, K).astype(np.float32))  # heavy tail => capping
+        sorted_jit = jax.jit(prob_alloc, static_argnums=(1,))  # fair compiled baseline
+        us_shard = time_fn(lambda: jax.block_until_ready(prob_alloc_sharded(w, k, sigma)[0]))
+        us_sorted = time_fn(lambda: jax.block_until_ready(sorted_jit(w, k, sigma)[0]))
+        derived = f"sorted_us={us_sorted:.1f}"
+        err = None
+        if K <= 100_000:  # the python reference enumerates K cases; skip at 1e6
+            p, capped = prob_alloc_sharded(w, k, sigma)
+            pr, cr = prob_alloc_reference(np.asarray(w), k, sigma)
+            err = float(np.abs(np.asarray(p) - pr).max())
+            derived += f";max_err_vs_ref={err:.2e};capped_match={bool((np.asarray(capped) == cr).all())}"
+        rows[K] = {"k": k, "sharded_us": us_shard, "sorted_us": us_sorted, "max_err_vs_ref": err}
+        emit(f"engine/prob_alloc/K={K}", us_shard, derived)
+    out["prob_alloc"] = rows
+
+
+def bench_multi_job(J_list, K: int, out: dict):
+    rng = np.random.default_rng(1)
+    rows = {}
+    for J in J_list:
+        Ks = [K] * J
+        ks = [max(4, K // 50)] * J
+        cfg, k_max = pack_jobs(Ks, ks, [0.5] * J, [0.5] * J)
+        job_step, batched = make_multi_job(k_max)
+        state = multi_job_init(cfg)
+        keys = jax.random.split(jax.random.PRNGKey(0), J)
+        xs = jnp.asarray((rng.random((J, K)) < 0.6).astype(np.float32))
+        us_batched = time_fn(lambda: jax.block_until_ready(batched(cfg, state, keys, xs)[0].logw))
+        single = jax.jit(job_step)
+        row0 = jax.tree.map(lambda a: a[0], cfg)
+        us_single = time_fn(lambda: jax.block_until_ready(single(row0, state.logw[0], state.t[0], keys[0], xs[0])[0]))
+        amortized = us_batched / J
+        rows[J] = {"batched_us": us_batched, "single_us": us_single, "amortized_us_per_job": amortized}
+        emit(f"engine/multi_job/J={J}", us_batched, f"K={K};single_us={us_single:.1f};per_job={amortized:.1f}")
+    out["multi_job"] = rows
+
+
+def run(smoke: bool = False):
+    out = {}
+    T = 300 if smoke else 2500
+    K_list = [1_000, 10_000] if smoke else [1_000, 10_000, 100_000, 1_000_000]
+    J_list = [1, 8] if smoke else [1, 8, 64]
+    speedup = bench_sim(T, out)
+    bench_prob_alloc(K_list, out)
+    bench_multi_job(J_list, 1_000 if smoke else 10_000, out)
+    save_json("engine_scale", out)
+    if speedup < 5.0:
+        print(f"engine_scale,0,WARN:scan_speedup_{speedup:.1f}x_below_5x", flush=True)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="reduced CPU/CI protocol")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, ".")
+    main()

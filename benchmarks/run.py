@@ -10,7 +10,7 @@ import traceback
 
 
 def main() -> None:
-    from . import fig3_selection, fig4_cep, fig7_cardinality, inclusion, kernels, regret, roofline, table_training
+    from . import engine_scale, fig3_selection, fig4_cep, fig7_cardinality, inclusion, kernels, regret, roofline, table_training
 
     benches = {
         "fig3": fig3_selection.run,
@@ -21,6 +21,7 @@ def main() -> None:
         "kernels": kernels.run,
         "roofline": roofline.run,
         "tables": table_training.run,
+        "engine": lambda: engine_scale.run(smoke=os.environ.get("REPRO_BENCH_QUICK", "1") == "1"),
     }
     only = os.environ.get("REPRO_BENCH_ONLY")
     names = only.split(",") if only else list(benches)

@@ -14,7 +14,33 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+import zlib
+
+try:  # optional: prefer zstd for new checkpoints when available
+    import zstandard
+except ModuleNotFoundError:
+    zstandard = None
+
+_CODEC = "zstd" if zstandard is not None else "zlib"
+
+
+def _compress(data: bytes) -> bytes:
+    if _CODEC == "zstd":
+        return zstandard.ZstdCompressor(level=3).compress(data)
+    return zlib.compress(data, 6)
+
+
+def _decompress(data: bytes, codec: str) -> bytes:
+    """Dispatch on the codec the checkpoint was *written* with: zlib is
+    always decodable (stdlib), zstd only when the module is importable."""
+    if codec == "zlib":
+        return zlib.decompress(data)
+    if codec == "zstd":
+        if zstandard is None:
+            raise RuntimeError("checkpoint is zstd-compressed; install 'zstandard' to restore")
+        return zstandard.ZstdDecompressor().decompress(data)
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
 
 __all__ = ["save", "restore", "latest_checkpoint"]
 
@@ -39,7 +65,8 @@ def save(path: str, tree: Any, step: int = 0) -> str:
         "treedef": str(treedef),
         "structure": msgpack.packb(jax.tree.map(lambda _: 0, host), default=_pack_default),
         "meta": meta,
-        "data": zstandard.ZstdCompressor(level=3).compress(buf.getvalue()),
+        "codec": _CODEC,
+        "data": _compress(buf.getvalue()),
     }
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     tmp = path + ".tmp"
@@ -57,7 +84,7 @@ def restore(path: str, like: Any) -> Any:
     """Restore into the structure of ``like`` (shapes/dtypes must match)."""
     with open(path, "rb") as f:
         payload = msgpack.unpackb(f.read(), strict_map_key=False)
-    raw = zstandard.ZstdDecompressor().decompress(payload["data"])
+    raw = _decompress(payload["data"], payload.get("codec", "zstd"))
     leaves_like, treedef = jax.tree.flatten(like)
     out = []
     off = 0

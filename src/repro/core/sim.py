@@ -3,6 +3,12 @@ numerical experiments (Figs. 3-4) and powers the regret benchmark.
 
 Runs any scheme for T rounds against a volatility model and returns the
 full (T, K) selection masks / success bits / probability allocations.
+
+``selection_sim`` is now a thin wrapper over the scan-compiled engine
+(``repro.engine.scan_sim``), which runs the whole horizon as one compiled
+program.  The legacy per-round Python loop is kept as
+``selection_sim_loop`` — it is the bit-exactness oracle for the engine tests
+and the baseline for ``benchmarks/engine_scale.py``.
 """
 from __future__ import annotations
 
@@ -17,10 +23,40 @@ from repro.core.selection import e3cs_update, make_quota_schedule, selection_mas
 from repro.core.volatility import BernoulliVolatility, MarkovVolatility, paper_success_rates
 from repro.fl.round import init_server_state, make_select_fn
 
-__all__ = ["selection_sim"]
+__all__ = ["selection_sim", "selection_sim_loop"]
 
 
 def selection_sim(
+    scheme: str,
+    K: int = 100,
+    k: int = 20,
+    T: int = 2500,
+    quota: str = "const",
+    frac: float = 0.0,
+    eta: float = 0.5,
+    sampler: str = "plackett_luce",
+    volatility: str = "bernoulli",
+    stickiness: float = 0.8,
+    seed: int = 0,
+    xs_override: Optional[np.ndarray] = None,
+    backend: str = "scan",
+) -> Dict[str, np.ndarray]:
+    """Run the numerical experiment; ``backend`` picks "scan" (compiled
+    engine, default) or "loop" (legacy per-round Python loop)."""
+    kw = dict(
+        scheme=scheme, K=K, k=k, T=T, quota=quota, frac=frac, eta=eta, sampler=sampler,
+        volatility=volatility, stickiness=stickiness, seed=seed, xs_override=xs_override,
+    )
+    if backend == "scan":
+        from repro.engine.scan_sim import scan_selection_sim
+
+        return scan_selection_sim(**kw)
+    if backend == "loop":
+        return selection_sim_loop(**kw)
+    raise ValueError(f"unknown sim backend {backend!r}")
+
+
+def selection_sim_loop(
     scheme: str,
     K: int = 100,
     k: int = 20,

@@ -1,0 +1,29 @@
+"""Fleet-scale selection engine.
+
+Sub-modules:
+  * ``scan_sim``  — whole-horizon ``lax.scan`` simulator (one compiled program)
+  * ``sharded``   — sort-free, tiled ProbAlloc for million-client populations
+  * ``multi_job`` — batched multi-tenant engine (vmap over J concurrent jobs)
+
+See ``README.md`` in this directory for the API and scaling model.
+"""
+from .scan_sim import make_sim_step, scan_selection_sim
+from .sharded import prob_alloc_sharded
+from .multi_job import (
+    MultiJobConfig,
+    MultiJobState,
+    make_multi_job,
+    multi_job_init,
+    pack_jobs,
+)
+
+__all__ = [
+    "make_sim_step",
+    "scan_selection_sim",
+    "prob_alloc_sharded",
+    "MultiJobConfig",
+    "MultiJobState",
+    "make_multi_job",
+    "multi_job_init",
+    "pack_jobs",
+]

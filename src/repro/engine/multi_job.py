@@ -1,0 +1,132 @@
+"""Batched multi-tenant selection engine: J concurrent FL jobs per dispatch.
+
+A selection service does not run one federated population — it runs many
+(different products, regions, cohort sizes) and each one only needs a few
+hundred microseconds of device time per round.  Dispatching them one by one
+wastes the machine on launch overhead.  This module vmaps one E3CS
+selection/update step over a ``(J, K_max)``-packed state so a *single* device
+program serves every job in the batch per tick.
+
+Heterogeneity (K_j, k_j, sigma_j, eta_j) is handled with padding masks:
+
+  * populations are padded to ``K_max``; ``active`` masks dead slots out of
+    the allocator, the sampler and the weight update,
+  * cohorts are padded to ``k_max``; selection indices beyond ``k_j`` are
+    returned as ``-1`` and contribute nothing to the update.
+
+``job_step`` on a padded row is the *definition* of the single-job engine, so
+the batched path is bit-identical to running J independent engines with the
+same per-job PRNG keys (pinned by ``tests/test_engine.py``).
+
+The allocator is the sort-free bisection of ``repro.engine.sharded`` — k and
+sigma stay traced, which is what makes one compiled program cover jobs of
+different shapes.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .sharded import masked_prob_alloc
+
+__all__ = ["MultiJobConfig", "MultiJobState", "pack_jobs", "multi_job_init", "make_multi_job"]
+
+_EPS = 1e-20
+
+
+class MultiJobConfig(NamedTuple):
+    """Per-job parameters, packed to ``(J,)`` / ``(J, K_max)`` arrays."""
+
+    k: jax.Array  # (J,) int32 cohort sizes, <= k_max
+    sigma: jax.Array  # (J,) float32 absolute fairness floors
+    eta: jax.Array  # (J,) float32 learning rates
+    active: jax.Array  # (J, K_max) {0,1} client-validity masks
+
+
+class MultiJobState(NamedTuple):
+    logw: jax.Array  # (J, K_max) E3CS log-weights
+    t: jax.Array  # (J,) int32 round counters
+
+
+def pack_jobs(
+    Ks: Sequence[int],
+    ks: Sequence[int],
+    sigma_fracs: Sequence[float],
+    etas: Sequence[float],
+    K_max: int | None = None,
+) -> Tuple[MultiJobConfig, int]:
+    """Pad J heterogeneous jobs into one batch; returns (config, k_max)."""
+    Ks, ks = list(Ks), list(ks)
+    K_max = K_max or max(Ks)
+    k_max = max(ks)
+    J = len(Ks)
+    active = np.zeros((J, K_max), np.float32)
+    for j, Kj in enumerate(Ks):
+        active[j, :Kj] = 1.0
+    sigma = np.asarray([f * kj / Kj for f, kj, Kj in zip(sigma_fracs, ks, Ks)], np.float32)
+    cfg = MultiJobConfig(
+        k=jnp.asarray(ks, jnp.int32),
+        sigma=jnp.asarray(sigma),
+        eta=jnp.asarray(etas, jnp.float32),
+        active=jnp.asarray(active),
+    )
+    return cfg, k_max
+
+
+def multi_job_init(cfg: MultiJobConfig) -> MultiJobState:
+    J, K_max = cfg.active.shape
+    return MultiJobState(logw=jnp.zeros((J, K_max), jnp.float32), t=jnp.zeros((J,), jnp.int32))
+
+
+def make_multi_job(k_max: int, n_iters: int = 48, tile: int = 8192):
+    """Build the engine step functions for a padded cohort size ``k_max``.
+
+    Returns ``(job_step, batched_step)``:
+
+      * ``job_step(cfg_row, logw, t, key, x)`` — one job, padded arrays;
+        the reference single-job engine.
+      * ``batched_step(cfg, state, keys, xs)`` — jitted vmap of ``job_step``
+        over the J axis; one device dispatch serves the whole fleet tick.
+
+    Outputs per job: ``idx`` (k_max,) int32 selection, ``-1`` beyond k_j;
+    ``mask`` (K_max,) 0/1; ``p`` (K_max,) the allocation used for the draw.
+    """
+
+    def job_step(cfg_row: MultiJobConfig, logw, t, key, x):
+        active = cfg_row.active
+        kf = cfg_row.k.astype(jnp.float32)
+        sigma, eta = cfg_row.sigma, cfg_row.eta
+        K_act = jnp.sum(active)
+
+        # ProbAlloc over the live slots (Algorithm 2, sort-free)
+        neg_inf = jnp.asarray(-jnp.inf, logw.dtype)
+        w = jnp.exp(logw - jnp.max(jnp.where(active > 0, logw, neg_inf)))
+        p, capped = masked_prob_alloc(w, kf, sigma, active=active, n_iters=n_iters, tile=tile)
+
+        # Plackett-Luce draw: Gumbel top-k over the padded row; slots beyond
+        # k_j are reported as -1 and dropped from the mask.
+        g = jax.random.gumbel(key, p.shape, p.dtype)
+        scores = jnp.where(active > 0, jnp.log(jnp.maximum(p, _EPS)) + g, -jnp.inf)
+        _, idx = jax.lax.top_k(scores, k_max)
+        idx = idx.astype(jnp.int32)
+        valid = jnp.arange(k_max, dtype=jnp.int32) < cfg_row.k
+        mask = jnp.zeros(p.shape, p.dtype).at[idx].max(valid.astype(p.dtype))
+        idx = jnp.where(valid, idx, -1)
+
+        # E3CS exponential-weight update (Eqs. 16-17) with traced (k, sigma)
+        xhat = mask * x / jnp.maximum(p, 1e-12)
+        residual = kf - K_act * sigma
+        step = jnp.minimum(residual * eta * xhat / jnp.maximum(K_act, 1.0), 1.0)
+        new_logw = logw + jnp.where(capped | (active == 0), 0.0, step)
+        new_logw = new_logw - jnp.max(jnp.where(active > 0, new_logw, neg_inf))
+        new_logw = new_logw * active  # keep dead slots pinned at 0
+        return new_logw, t + 1, {"idx": idx, "mask": mask, "p": p, "capped": capped}
+
+    def _batched(cfg: MultiJobConfig, state: MultiJobState, keys, xs):
+        logw, t, out = jax.vmap(job_step)(cfg, state.logw, state.t, keys, xs)
+        return MultiJobState(logw=logw, t=t), out
+
+    return job_step, jax.jit(_batched)

@@ -35,16 +35,27 @@ def build_volatility(fl_cfg: FLConfig, K: int):
         return MarkovVolatility(rho, fl_cfg.markov_stickiness), rho
     if fl_cfg.volatility == "deadline":
         rng = np.random.default_rng(fl_cfg.seed)
-        epochs = jnp.asarray(rng.choice(fl_cfg.local_epochs, K).astype(np.float32))
-        # calibrate base time so the marginal success rate matches rho
-        base = -np.log(np.asarray(rho)) * 0 + 1.0
+        epochs = np.asarray(rng.choice(fl_cfg.local_epochs, K), np.float32)
+        jitter = 0.25
+        deadline = float(np.median(epochs) * 1.5)
+        rho64 = np.asarray(rho, np.float64)
+        # Split each client's failure rate between network faults and deadline
+        # misses, then calibrate base_time so the *joint* marginal matches rho:
+        #   success = ok_time * ok_net,  P(ok_net) = 1 - p_net,
+        #   P(ok_time) = P(epochs*base*(1 + jitter*Exp(1)) <= deadline)
+        #              = 1 - exp(-(deadline/(epochs*base) - 1)/jitter)
+        # Setting P(ok_time) = rho/(1-p_net) =: q and inverting gives
+        #   base = deadline / (epochs * (1 - jitter*log(1-q))).
+        p_net = 0.5 * (1.0 - rho64)
+        q = np.clip(rho64 / (1.0 - p_net), 0.0, 1.0 - 1e-9)
+        base = deadline / (epochs.astype(np.float64) * (1.0 - jitter * np.log1p(-q)))
         return (
             DeadlineVolatility(
-                epochs=epochs,
+                epochs=jnp.asarray(epochs),
                 base_time=jnp.asarray(base, jnp.float32),
-                deadline=float(np.median(np.asarray(epochs)) * 1.5),
-                p_net_fail=1.0 - rho,
-                jitter=0.25,
+                deadline=deadline,
+                p_net_fail=jnp.asarray(p_net, jnp.float32),
+                jitter=jitter,
             ),
             rho,
         )

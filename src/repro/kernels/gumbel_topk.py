@@ -20,12 +20,21 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["gumbel_topk_kernel_call"]
+__all__ = ["gumbel_topk_kernel_call", "streaming_topk_body"]
 
 NEG_INF = -1e30
 
 
-def _kernel(s_ref, val_ref, idx_ref, best_v, best_i, *, k, tile, n_tiles, K):
+def streaming_topk_body(s, val_ref, idx_ref, best_v, best_i, *, k, tile, n_tiles):
+    """Shared streaming top-k merge used by every selection kernel.
+
+    Takes this tile's already-masked scores ``s`` (tile,), merges them into
+    the running (k,) [value, index] VMEM scratch by extracting the tile max k
+    times (each accepted only if it beats the current k-th best), and on the
+    last tile emits the buffers sorted descending.  Callers provide the score
+    prelude (masking, perturbation fusion); everything below the scores is
+    identical across kernels so it lives here once.
+    """
     ti = pl.program_id(0)
 
     @pl.when(ti == 0)
@@ -33,13 +42,8 @@ def _kernel(s_ref, val_ref, idx_ref, best_v, best_i, *, k, tile, n_tiles, K):
         best_v[...] = jnp.full_like(best_v, NEG_INF)
         best_i[...] = jnp.zeros_like(best_i)
 
-    s = s_ref[...].astype(jnp.float32)  # (tile,)
     base = ti * tile
-    pos = base + jax.lax.broadcasted_iota(jnp.int32, (tile,), 0)
-    s = jnp.where(pos < K, s, NEG_INF)
 
-    # merge this tile into the running top-k: extract the tile's max k times,
-    # each time only if it beats the current k-th best.
     def body(j, carry):
         s, bv, bi = carry
         m = jnp.max(s)
@@ -63,6 +67,14 @@ def _kernel(s_ref, val_ref, idx_ref, best_v, best_i, *, k, tile, n_tiles, K):
         order = jnp.argsort(-best_v[...])
         val_ref[...] = best_v[...][order]
         idx_ref[...] = best_i[...][order].astype(jnp.int32)
+
+
+def _kernel(s_ref, val_ref, idx_ref, best_v, best_i, *, k, tile, n_tiles, K):
+    ti = pl.program_id(0)
+    s = s_ref[...].astype(jnp.float32)  # (tile,)
+    pos = ti * tile + jax.lax.broadcasted_iota(jnp.int32, (tile,), 0)
+    s = jnp.where(pos < K, s, NEG_INF)
+    streaming_topk_body(s, val_ref, idx_ref, best_v, best_i, k=k, tile=tile, n_tiles=n_tiles)
 
 
 def gumbel_topk_kernel_call(scores: jax.Array, k: int, tile: int = 8192, interpret: bool = False):

@@ -12,11 +12,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from .e3cs_tiles import e3cs_update_kernel_call, fused_gumbel_topk_kernel_call
 from .flash_attention import flash_attention_kernel_call
 from .gumbel_topk import gumbel_topk_kernel_call
 from .ssd_scan import ssd_scan_kernel_call
 
-__all__ = ["flash_attention", "ssd_scan", "gumbel_topk_sample"]
+__all__ = ["flash_attention", "ssd_scan", "gumbel_topk_sample", "fused_gumbel_topk_sample", "e3cs_update_tiled"]
 
 
 def _interpret() -> bool:
@@ -51,3 +52,21 @@ def gumbel_topk_sample(rng, p, k: int, tile: int = 8192):
     scores = jnp.log(jnp.maximum(p.astype(jnp.float32), 1e-20)) + g
     _, idx = gumbel_topk_kernel_call(scores, k, tile=tile, interpret=_interpret())
     return idx
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tile"))
+def fused_gumbel_topk_sample(rng, p, k: int, tile: int = 8192):
+    """Single-pass Plackett-Luce sample: the Gumbel perturbation happens
+    inside the kernel, so scores never round-trip through HBM."""
+    u = jax.random.uniform(rng, p.shape, jnp.float32)
+    _, idx = fused_gumbel_topk_kernel_call(p.astype(jnp.float32), u, k, tile=tile, interpret=_interpret())
+    return idx
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def e3cs_update_tiled(logw, p, sel_mask, x, frozen, scale, tile: int = 8192):
+    """Fused, re-centered E3CS weight update (Eqs. 16-17) at fleet scale."""
+    new_logw, tmax = e3cs_update_kernel_call(
+        logw, p, sel_mask, x, frozen, scale, tile=tile, interpret=_interpret()
+    )
+    return new_logw - jnp.max(tmax)

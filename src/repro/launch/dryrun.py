@@ -318,6 +318,8 @@ def run_one(
             t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # older jaxlib returns [dict] per computation
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
         coll = collective_bytes(hlo)
         n_chips = mesh.devices.size

@@ -41,6 +41,8 @@ def _measure(cfg, shape, mesh, build_train, build_serve) -> Dict[str, float]:
         with use_rules(rules):
             compiled = jax.jit(fn).lower(*args).compile()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older jaxlib returns [dict] per computation
+        cost = cost[0] if cost else {}
     coll = collective_bytes(compiled.as_text())
     return {
         "flops": float(cost.get("flops", 0.0)),

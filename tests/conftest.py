@@ -1,5 +1,55 @@
 import pytest
 
+try:  # optional dev dependency (see requirements-dev.txt)
+    import hypothesis  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    # Fallback shim: `from hypothesis import given, settings, strategies as st`
+    # keeps importing, but every @given test is skipped with a clear reason.
+    # Non-property tests in the same modules still run.
+    import sys
+    import types
+
+    HAVE_HYPOTHESIS = False
+    _skip = pytest.mark.skip(reason="hypothesis not installed (pip install -r requirements-dev.txt)")
+
+    class _Strategy:
+        """Inert stand-in for hypothesis strategy objects."""
+
+        def __init__(self, *a, **k):
+            pass
+
+        def __call__(self, *a, **k):  # @st.composite-decorated fns get called
+            return self
+
+        def __getattr__(self, name):  # .map/.filter/.flatmap chains
+            return _Strategy()
+
+    def _given(*_a, **_k):
+        def deco(fn):
+            return _skip(fn)
+
+        return deco
+
+    def _settings(*_a, **_k):
+        return lambda fn: fn
+
+    _hyp = types.ModuleType("hypothesis")
+    _st = types.ModuleType("hypothesis.strategies")
+    for _name in (
+        "integers", "floats", "lists", "booleans", "sampled_from", "tuples",
+        "just", "one_of", "composite", "data",
+    ):
+        setattr(_st, _name, _Strategy())
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.assume = lambda *_a, **_k: True
+    _hyp.HealthCheck = types.SimpleNamespace(too_slow=None, data_too_large=None)
+    _hyp.strategies = _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
+
 
 def pytest_addoption(parser):
     parser.addoption("--runslow", action="store_true", default=False, help="run slow tests")

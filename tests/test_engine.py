@@ -1,0 +1,158 @@
+"""Fleet-scale engine tests: scan-sim equivalence with the legacy loop,
+sort-free sharded ProbAlloc vs the paper's literal case-enumeration oracle,
+and multi-job batching vs independent single-job engines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.selection import prob_alloc_reference
+from repro.core.sim import selection_sim, selection_sim_loop
+from repro.engine.multi_job import make_multi_job, multi_job_init, pack_jobs
+from repro.engine.sharded import prob_alloc_sharded
+
+
+class TestScanSim:
+    SCHEMES = [
+        ("e3cs", dict(frac=0.5)),
+        ("e3cs", dict(frac=0.0, volatility="markov")),
+        ("e3cs", dict(quota="inc")),
+        ("random", {}),
+        ("ucb", {}),
+        ("fedcs", {}),
+        ("pow_d", {}),
+    ]
+
+    @pytest.mark.parametrize("scheme,kw", SCHEMES, ids=[f"{s}-{i}" for i, (s, _) in enumerate(SCHEMES)])
+    def test_matches_legacy_loop_bitwise(self, scheme, kw):
+        a = selection_sim(scheme, K=100, k=20, T=200, backend="scan", **kw)
+        b = selection_sim_loop(scheme, K=100, k=20, T=200, **kw)
+        # discrete outputs must be bit-identical (same PRNG discipline)
+        assert np.array_equal(a["masks"], b["masks"])
+        assert np.array_equal(a["xs"], b["xs"])
+        assert np.array_equal(a["counts"], b["counts"])
+        np.testing.assert_allclose(a["sigmas"], b["sigmas"], atol=0)
+        # allocations may differ by XLA fusion roundoff only (~1 ulp)
+        np.testing.assert_allclose(a["ps"], b["ps"], atol=1e-6)
+
+    def test_xs_override_matches_legacy_loop(self):
+        rng = np.random.default_rng(0)
+        xs = rng.binomial(1, 0.5, (150, 100)).astype(np.float32)
+        a = selection_sim("e3cs", K=100, k=20, T=150, frac=0.25, xs_override=xs, backend="scan")
+        b = selection_sim_loop("e3cs", K=100, k=20, T=150, frac=0.25, xs_override=xs)
+        assert np.array_equal(a["masks"], b["masks"])
+        np.testing.assert_allclose(a["ps"], b["ps"], atol=1e-6)
+
+    def test_mask_cardinality_every_round(self):
+        out = selection_sim("e3cs", K=50, k=10, T=100, frac=0.5, backend="scan")
+        np.testing.assert_array_equal(out["masks"].sum(1), np.full(100, 10.0))
+
+
+class TestShardedProbAlloc:
+    @pytest.mark.parametrize("K", [7, 57, 1000, 100_000])
+    @pytest.mark.parametrize("sigma_frac", [0.0, 0.5, 0.9])
+    def test_matches_reference_oracle(self, K, sigma_frac):
+        rng = np.random.default_rng(K + int(sigma_frac * 10))
+        k = max(1, K // 5)
+        sigma = sigma_frac * k / K
+        w = rng.gamma(0.3, 1.0, K).astype(np.float32)  # heavy tail forces capping
+        p, capped = prob_alloc_sharded(jnp.asarray(w), k, sigma)
+        pr, cr = prob_alloc_reference(w, k, sigma)
+        np.testing.assert_allclose(np.asarray(p), pr, atol=1e-5)
+        assert (np.asarray(capped) == cr).all()
+        assert abs(float(np.asarray(p).sum()) - k) < 1e-3 * k + 1e-3
+
+    def test_degenerate_cases(self):
+        # dominant weight saturates at 1
+        p, capped = prob_alloc_sharded(jnp.asarray([1e6, 1.0, 1.0, 1.0, 1.0, 1.0], jnp.float32), 3, 0.0)
+        assert float(p[0]) == pytest.approx(1.0, abs=1e-5)
+        assert bool(capped[0]) and not bool(capped[1:].any())
+        # uniform weights, no overflow
+        p, capped = prob_alloc_sharded(jnp.ones(10), 3, 0.1)
+        np.testing.assert_allclose(np.asarray(p), 0.3, atol=1e-6)
+        assert not bool(capped.any())
+        # k == K with ties: everyone saturates (plateau of the alpha search)
+        p, capped = prob_alloc_sharded(jnp.full((8,), 2.0), 8, 0.5)
+        np.testing.assert_allclose(np.asarray(p), 1.0, atol=1e-5)
+
+    def test_no_global_sort_in_compiled_program(self):
+        # the whole point: the alpha-search lowers to reductions, not a sort
+        w = jnp.asarray(np.random.default_rng(0).gamma(0.3, 1.0, 4096).astype(np.float32))
+        hlo = jax.jit(lambda w: prob_alloc_sharded(w, 512, 0.05)).lower(w).compile().as_text()
+        assert "sort(" not in hlo, "sharded ProbAlloc must not materialise a global sort"
+
+
+class TestMultiJob:
+    def _setup(self):
+        Ks, ks = [37, 64, 100], [5, 9, 20]
+        cfg, k_max = pack_jobs(Ks, ks, [0.0, 0.5, 0.8], [0.5, 0.5, 0.3])
+        return Ks, ks, cfg, k_max
+
+    def test_batched_matches_independent_single_jobs(self):
+        Ks, ks, cfg, k_max = self._setup()
+        job_step, batched = make_multi_job(k_max)
+        state = multi_job_init(cfg)
+        J, K_max = cfg.active.shape
+        rng = np.random.default_rng(0)
+        base_keys = jax.random.split(jax.random.PRNGKey(42), J)
+        single = [(state.logw[j], state.t[j]) for j in range(J)]
+        for t in range(15):
+            keys = jax.vmap(lambda kk: jax.random.fold_in(kk, t))(base_keys)
+            xs = jnp.asarray((rng.random((J, K_max)) < 0.6).astype(np.float32))
+            state, out = batched(cfg, state, keys, xs)
+            for j in range(J):
+                row = jax.tree.map(lambda a: a[j], cfg)
+                lw, tt, o = job_step(row, single[j][0], single[j][1], keys[j], xs[j])
+                single[j] = (lw, tt)
+                # the acceptance criterion: selections are identical
+                assert np.array_equal(np.asarray(o["idx"]), np.asarray(out["idx"][j])), (t, j)
+                assert np.array_equal(np.asarray(o["mask"]), np.asarray(out["mask"][j])), (t, j)
+                np.testing.assert_allclose(np.asarray(lw), np.asarray(state.logw[j]), atol=1e-5)
+                np.testing.assert_allclose(np.asarray(o["p"]), np.asarray(out["p"][j]), atol=1e-6)
+
+    def test_padding_invariants(self):
+        Ks, ks, cfg, k_max = self._setup()
+        _, batched = make_multi_job(k_max)
+        state = multi_job_init(cfg)
+        J, K_max = cfg.active.shape
+        keys = jax.random.split(jax.random.PRNGKey(7), J)
+        xs = jnp.ones((J, K_max), jnp.float32)
+        state, out = batched(cfg, state, keys, xs)
+        idx, p, mask = np.asarray(out["idx"]), np.asarray(out["p"]), np.asarray(out["mask"])
+        for j in range(J):
+            # exactly k_j real selections, padded with -1
+            assert (idx[j] >= 0).sum() == ks[j]
+            assert (idx[j][idx[j] >= 0] < Ks[j]).all()
+            sel = idx[j][idx[j] >= 0]
+            assert len(set(sel.tolist())) == ks[j]  # duplicate-free
+            # allocation: sum p = k_j on live slots, zero off them
+            assert p[j, Ks[j]:].sum() == 0.0
+            assert abs(p[j].sum() - ks[j]) < 1e-3
+            assert mask[j].sum() == ks[j]
+            # fairness floor respected on live slots
+            assert p[j, : Ks[j]].min() >= float(cfg.sigma[j]) - 1e-6
+            # dead slots stay pinned in the carried state
+            assert np.asarray(state.logw)[j, Ks[j]:].sum() == 0.0
+
+    def test_fleet_learns_stable_clients(self):
+        # with 4 paper volatility classes, E3CS mass should concentrate on the
+        # rho=0.9 class in every job of the batch
+        from repro.core.volatility import paper_success_rates
+
+        Ks, ks = [40, 80], [8, 16]
+        cfg, k_max = pack_jobs(Ks, ks, [0.0, 0.0], [0.5, 0.5])
+        _, batched = make_multi_job(k_max)
+        state = multi_job_init(cfg)
+        J, K_max = cfg.active.shape
+        rng = np.random.default_rng(3)
+        rhos = np.stack([np.pad(paper_success_rates(Kj), (0, K_max - Kj)) for Kj in Ks])
+        counts = np.zeros((J, K_max))
+        base_keys = jax.random.split(jax.random.PRNGKey(0), J)
+        for t in range(300):
+            keys = jax.vmap(lambda kk: jax.random.fold_in(kk, t))(base_keys)
+            xs = jnp.asarray((rng.random((J, K_max)) < rhos).astype(np.float32))
+            state, out = batched(cfg, state, keys, xs)
+            counts += np.asarray(out["mask"])
+        for j in range(J):
+            per_class = counts[j, : Ks[j]].reshape(4, -1).sum(1)
+            assert per_class[3] > 2 * per_class[0], per_class

@@ -105,6 +105,22 @@ class TestVolatility:
         emp = np.stack(xs).mean(0).reshape(4, -1).mean(1)
         np.testing.assert_allclose(emp, [0.1, 0.3, 0.6, 0.9], atol=0.07)
 
+    def test_deadline_marginals_calibrated_to_rho(self):
+        # regression: base_time calibration used to be dead code (base == 1.0),
+        # so the deadline mechanism dragged marginals well below rho.
+        from repro.fl.server import build_volatility
+
+        fl = FLConfig(K=40, volatility="deadline")
+        vol, rho = build_volatility(fl, 40)
+
+        def one(key):
+            x, _ = vol.sample(key, vol.init_state())
+            return x
+
+        xs = jax.vmap(one)(jax.random.split(jax.random.PRNGKey(0), 3000))
+        emp = np.asarray(xs).mean(0).reshape(4, -1).mean(1)
+        np.testing.assert_allclose(emp, [0.1, 0.3, 0.6, 0.9], atol=0.05)
+
     def test_markov_stationary_matches_rho_but_correlated(self):
         rho = jnp.full((20,), 0.5)
         vol = MarkovVolatility(rho, stickiness=0.9)

@@ -84,6 +84,65 @@ def test_gumbel_topk_matches_lax_topk(K, k, tile):
     assert sorted(np.asarray(idx).tolist()) == sorted(np.asarray(idx_ref).tolist())
 
 
+# Non-divisible tile sizes on purpose: every K here leaves a ragged final tile
+# (K=7 pads 7 -> 8; 100 % 48 != 0; 10000 % 4096 != 0).
+GUMBEL_CASES = [(7, 3, 8192), (7, 7, 8192), (100, 20, 48), (10000, 64, 4096), (10000, 200, 8192)]
+
+
+@pytest.mark.parametrize("K,k,tile", GUMBEL_CASES, ids=[f"K{K}-k{k}-t{t}" for K, k, t in GUMBEL_CASES])
+def test_gumbel_topk_perturbed_scores_agree_with_lax(K, k, tile):
+    """Agreement with jax.lax.top_k on actual Gumbel-perturbed allocations."""
+    p = jnp.asarray(RNG.gamma(1.0, 1.0, K).astype(np.float32))
+    p = p / p.sum() * k
+    g = jax.random.gumbel(jax.random.PRNGKey(K + k), p.shape, jnp.float32)
+    scores = jnp.log(jnp.maximum(p, 1e-20)) + g
+    vals, idx = gumbel_topk_kernel_call(scores, k, tile=tile, interpret=True)
+    _, idx_ref = jax.lax.top_k(scores, k)
+    idx = np.asarray(idx)
+    assert sorted(idx.tolist()) == sorted(np.asarray(idx_ref).tolist())
+    # duplicate-free guarantee and in-range indices
+    assert len(set(idx.tolist())) == k
+    assert (idx >= 0).all() and (idx < K).all()
+    # values returned descending and consistent with the indices
+    v = np.asarray(vals)
+    assert (np.diff(v) <= 1e-6).all()
+    np.testing.assert_allclose(v, np.asarray(scores)[idx], atol=1e-6)
+
+
+@pytest.mark.parametrize("K,k,tile", [(7, 3, 8), (100, 20, 48), (10000, 64, 4096)])
+def test_fused_gumbel_topk_matches_unfused(K, k, tile):
+    """The fused perturb+topk kernel must agree with the jnp composition."""
+    from repro.kernels.e3cs_tiles import fused_gumbel_topk_kernel_call
+
+    p = jnp.asarray(RNG.gamma(1.0, 1.0, K).astype(np.float32))
+    p = p / p.sum() * k
+    u = jax.random.uniform(jax.random.PRNGKey(1), p.shape, jnp.float32)
+    _, idx = fused_gumbel_topk_kernel_call(p, u, k, tile=tile, interpret=True)
+    g = -jnp.log(-jnp.log(jnp.clip(u, 1e-20, 1.0 - 1e-7)))
+    _, idx_ref = jax.lax.top_k(jnp.log(jnp.maximum(p, 1e-20)) + g, k)
+    idx = np.asarray(idx)
+    assert sorted(idx.tolist()) == sorted(np.asarray(idx_ref).tolist())
+    assert len(set(idx.tolist())) == k
+
+
+@pytest.mark.parametrize("K,k,tile", [(100, 20, 48), (5000, 100, 1024)])
+def test_e3cs_update_kernel_matches_reference(K, k, tile):
+    from repro.core.selection import E3CSState, e3cs_update, prob_alloc
+    from repro.kernels.e3cs_tiles import e3cs_update_kernel_call
+
+    logw = jnp.asarray(RNG.normal(0, 1, K).astype(np.float32))
+    sigma = jnp.float32(0.3 * k / K)
+    eta = 0.5
+    w = jnp.exp(logw - jnp.max(logw))
+    p, capped = prob_alloc(w, k, sigma)
+    mask = jnp.zeros(K).at[jax.lax.top_k(p, k)[1]].set(1.0)
+    x = jnp.asarray((RNG.random(K) < 0.6).astype(np.float32))
+    expect = e3cs_update(E3CSState(logw=logw, t=jnp.zeros((), jnp.int32)), p, capped, mask, x, k, sigma, eta)
+    scale = (k - K * sigma) * eta / K
+    out, tmax = e3cs_update_kernel_call(logw, p, mask, x, capped.astype(jnp.float32), scale, tile=tile, interpret=True)
+    np.testing.assert_allclose(np.asarray(out - jnp.max(tmax)), np.asarray(expect.logw), atol=1e-6)
+
+
 def test_gumbel_topk_sampler_distribution():
     # inclusion frequency should favour high-probability arms
     p = jnp.asarray([0.05] * 16 + [0.8] * 4, jnp.float32)
