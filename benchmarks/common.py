@@ -1,7 +1,9 @@
 """Shared helpers for the benchmark suite.
 
 Every benchmark prints ``name,us_per_call,derived`` CSV rows (harness
-convention) plus richer JSON dropped under ``results/bench/``.
+convention) plus richer JSON dropped under ``results/bench/`` as
+``BENCH_<name>.json`` — the glob CI uploads as per-run artifacts so the
+perf trajectory is captured per-PR.
 """
 from __future__ import annotations
 
@@ -23,7 +25,7 @@ def emit(name: str, us_per_call: float, derived: str = ""):
 
 def save_json(name: str, obj):
     os.makedirs(RESULTS, exist_ok=True)
-    with open(os.path.join(RESULTS, name + ".json"), "w") as f:
+    with open(os.path.join(RESULTS, f"BENCH_{name}.json"), "w") as f:
         json.dump(obj, f, indent=1, default=float)
 
 

@@ -10,8 +10,9 @@ import traceback
 
 
 def main() -> None:
-    from . import engine_scale, fig3_selection, fig4_cep, fig7_cardinality, inclusion, kernels, regret, roofline, table_training
+    from . import engine_scale, fig3_selection, fig4_cep, fig7_cardinality, inclusion, kernels, regret, roofline, scenarios_bench, table_training
 
+    quick = os.environ.get("REPRO_BENCH_QUICK", "1") == "1"
     benches = {
         "fig3": fig3_selection.run,
         "fig4": fig4_cep.run,
@@ -21,7 +22,8 @@ def main() -> None:
         "kernels": kernels.run,
         "roofline": roofline.run,
         "tables": table_training.run,
-        "engine": lambda: engine_scale.run(smoke=os.environ.get("REPRO_BENCH_QUICK", "1") == "1"),
+        "engine": lambda: engine_scale.run(smoke=quick),
+        "scenarios": lambda: scenarios_bench.run(smoke=quick),
     }
     only = os.environ.get("REPRO_BENCH_ONLY")
     names = only.split(",") if only else list(benches)

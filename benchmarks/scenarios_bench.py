@@ -1,0 +1,159 @@
+"""Scenario-suite benchmark: bit-packed replay at scale + the selector x
+scenario evaluation grid.
+
+Rows (name,us_per_call,derived):
+  scenarios/replay/K=...       — e3cs whole-horizon scan fed by the packed
+                                 uint8 trace; derived carries packed vs dense
+                                 MB, rounds/sec, record time, and (at K where
+                                 the dense trace fits) bit-identity vs the
+                                 unpacked xs_override path
+  scenarios/grid/<sc>/<sel>    — one compiled run per cell; derived carries
+                                 CEP / effective participation / Jain
+  scenarios/multi_job/J=...    — the scenario axis on the batched engine:
+                                 one dispatch per round serves every scenario
+
+CLI:  python benchmarks/scenarios_bench.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from .common import emit, save_json
+except ImportError:  # running as a script: python benchmarks/scenarios_bench.py
+    from common import emit, save_json
+
+from repro.configs.base import FLConfig
+from repro.core.volatility import make_volatility
+from repro.engine.scan_sim import build_scan_runner, scan_selection_sim
+from repro.scenarios import (
+    format_grid,
+    make_scenario,
+    packed_nbytes,
+    record_trace,
+    run_grid,
+    run_grid_multi_job,
+    unpack_trace,
+)
+
+GRID_SCENARIOS = ("paper_iid", "markov_sticky", "diurnal", "regional_outage", "flash_crowd")
+GRID_SELECTORS = ("e3cs", "random", "fedcs")
+
+
+def bench_replay(K_list, T: int, out: dict):
+    rows = {}
+    for K in K_list:
+        k = max(1, K // 50)
+        vol, rho = make_scenario("regional_outage", K, T, seed=0)
+        t0 = time.perf_counter()
+        packed = record_trace(vol, T, seed=0, chunk=min(64, T))
+        record_s = time.perf_counter() - t0
+        packed_mb = packed.nbytes / 1e6
+        dense_mb = T * K * 4 / 1e6
+        # hold one compiled runner so steady-state timing excludes compilation
+        fl = FLConfig(K=K, k=k, rounds=T, scheme="e3cs", quota="const", quota_frac=0.5)
+        runner, state0 = build_scan_runner(fl, make_volatility("bernoulli", rho), rho, override="packed")
+        key = jax.random.PRNGKey(0)
+        xs_in = jnp.asarray(packed)
+        jax.block_until_ready(runner(state0, key, xs_in)[1])  # compile
+        t0 = time.perf_counter()
+        masks_packed = runner(state0, key, xs_in)[1]
+        jax.block_until_ready(masks_packed)
+        packed_s = time.perf_counter() - t0
+        # lean outputs: per-round scalars only, the full-horizon mode at K=1e6
+        # (full outputs would add ~T*K*4 bytes per emitted array)
+        lean_runner, lean_state0 = build_scan_runner(
+            fl, make_volatility("bernoulli", rho), rho, override="packed", outputs="lean"
+        )
+        jax.block_until_ready(lean_runner(lean_state0, key, xs_in)[1])  # compile
+        t0 = time.perf_counter()
+        jax.block_until_ready(lean_runner(lean_state0, key, xs_in)[1])
+        lean_s = time.perf_counter() - t0
+        derived = (
+            f"T={T};packed_mb={packed_mb:.1f};dense_mb={dense_mb:.1f}"
+            f";rounds_per_s={T / packed_s:.1f};lean_rounds_per_s={T / lean_s:.1f};record_s={record_s:.2f}"
+        )
+        bitident = None
+        if dense_mb <= 200:  # materialise the dense trace only where it is cheap
+            a = scan_selection_sim("e3cs", K=K, k=k, T=T, frac=0.5, rho=rho, packed_override=packed)
+            b = scan_selection_sim("e3cs", K=K, k=k, T=T, frac=0.5, rho=rho, xs_override=unpack_trace(packed, K))
+            bitident = bool(np.array_equal(a["masks"], b["masks"]) and np.array_equal(a["xs"], b["xs"]))
+            derived += f";bitident_vs_dense={bitident}"
+        rows[K] = {
+            "T": T, "k": k, "packed_mb": packed_mb, "dense_mb": dense_mb,
+            "record_s": record_s, "packed_s": packed_s, "rounds_per_s": T / packed_s,
+            "lean_s": lean_s, "lean_rounds_per_s": T / lean_s,
+            "bitident_vs_dense": bitident,
+        }
+        emit(f"scenarios/replay/K={K}", packed_s / T * 1e6, derived)
+        # full-horizon footprint at this K, the number the subsystem exists for
+        full_mb = packed_nbytes(2500, K) / 1e6
+        rows[K]["packed_mb_T2500"] = full_mb
+    out["replay"] = rows
+    return rows
+
+
+def bench_grid(K: int, T: int, out: dict):
+    t0 = time.perf_counter()
+    rows = run_grid(GRID_SELECTORS, GRID_SCENARIOS, K=K, k=max(1, K // 5), T=T, seed=0)
+    total_s = time.perf_counter() - t0
+    for r in rows:
+        emit(
+            f"scenarios/grid/{r['scenario']}/{r['selector']}",
+            total_s / len(rows) * 1e6,
+            f"cep={r['cep']:.0f};eff={r['eff_participation']:.3f};jain={r['jain']:.3f}",
+        )
+    print(format_grid(rows), file=sys.stderr)
+    out["grid"] = {"K": K, "T": T, "total_s": total_s, "rows": rows}
+    return rows
+
+
+def bench_multi_job(K: int, T: int, out: dict):
+    scenarios = list(GRID_SCENARIOS)
+    t0 = time.perf_counter()
+    rows = run_grid_multi_job(scenarios, K=K, k=max(1, K // 5), T=T, seed=0)
+    total_s = time.perf_counter() - t0
+    per_round_us = total_s / T * 1e6
+    emit(
+        f"scenarios/multi_job/J={len(scenarios)}",
+        per_round_us,
+        f"K={K};T={T};per_cell_round_us={per_round_us / len(scenarios):.1f}",
+    )
+    out["multi_job"] = {"J": len(scenarios), "K": K, "T": T, "total_s": total_s, "rows": rows}
+    return rows
+
+
+def run(smoke: bool = False):
+    out = {}
+    if smoke:
+        bench_replay([10_000], T=32, out=out)
+        bench_grid(K=64, T=200, out=out)
+        bench_multi_job(K=64, T=60, out=out)
+    else:
+        bench_replay([100_000, 1_000_000], T=64, out=out)
+        bench_grid(K=100, T=1000, out=out)
+        bench_multi_job(K=100, T=300, out=out)
+    save_json("scenarios", out)
+    rep = out["replay"]
+    if any(r["bitident_vs_dense"] is False for r in rep.values()):
+        print("scenarios,0,WARN:packed_replay_not_bit_identical", flush=True)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="reduced CPU/CI protocol")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, ".")
+    main()

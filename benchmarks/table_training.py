@@ -95,7 +95,9 @@ def run():
 
     from .common import RESULTS
 
-    cached = os.path.join(RESULTS, "table_training.json")
+    cached = os.path.join(RESULTS, "BENCH_table_training.json")
+    if not os.path.exists(cached) and os.path.exists(os.path.join(RESULTS, "table_training.json")):
+        cached = os.path.join(RESULTS, "table_training.json")  # pre-rename cache (~2h to regenerate)
     if QUICK and os.path.exists(cached) and os.environ.get("REPRO_BENCH_FORCE") != "1":
         # real-training tables take ~2h on this 1-core box; the harness run
         # re-emits the cached result (delete the json / set FORCE to re-run)

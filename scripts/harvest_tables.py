@@ -10,5 +10,5 @@ for line in open('results/bench_tables.log'):
         "rounds_to": eval(r2a), "wall_s": float(us)*60/1e6, "acc_curve": [],
     }
 os.makedirs('results/bench', exist_ok=True)
-json.dump(rows, open('results/bench/table_training.json','w'), indent=1)
+json.dump(rows, open('results/bench/BENCH_table_training.json','w'), indent=1)
 print({t: {g: list(v) for g, v in d.items()} for t, d in rows.items()})

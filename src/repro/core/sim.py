@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.configs.base import FLConfig
 from repro.core.selection import e3cs_update, make_quota_schedule, selection_mask
-from repro.core.volatility import BernoulliVolatility, MarkovVolatility, paper_success_rates
+from repro.core.volatility import make_volatility, paper_success_rates
 from repro.fl.round import init_server_state, make_select_fn
 
 __all__ = ["selection_sim", "selection_sim_loop"]
@@ -40,12 +40,22 @@ def selection_sim(
     seed: int = 0,
     xs_override: Optional[np.ndarray] = None,
     backend: str = "scan",
+    vol=None,
+    rho=None,
 ) -> Dict[str, np.ndarray]:
     """Run the numerical experiment; ``backend`` picks "scan" (compiled
-    engine, default) or "loop" (legacy per-round Python loop)."""
+    engine, default) or "loop" (legacy per-round Python loop).
+
+    ``volatility`` names a built-in generator (``bernoulli | markov |
+    deadline``; unknown names raise).  Alternatively pass ``vol`` — any object
+    with the ``(init_state, sample)`` protocol, e.g. a ``repro.scenarios``
+    model — plus optionally ``rho`` (the marginal-rate hint used by the
+    fedcs baseline; defaults to ``vol.rho`` or the paper classes).
+    """
     kw = dict(
         scheme=scheme, K=K, k=k, T=T, quota=quota, frac=frac, eta=eta, sampler=sampler,
         volatility=volatility, stickiness=stickiness, seed=seed, xs_override=xs_override,
+        vol=vol, rho=rho,
     )
     if backend == "scan":
         from repro.engine.scan_sim import scan_selection_sim
@@ -69,10 +79,15 @@ def selection_sim_loop(
     stickiness: float = 0.8,
     seed: int = 0,
     xs_override: Optional[np.ndarray] = None,
+    vol=None,
+    rho=None,
 ) -> Dict[str, np.ndarray]:
     fl = FLConfig(K=K, k=k, rounds=T, scheme=scheme, quota=quota, quota_frac=frac, eta=eta, sampler=sampler)
-    rho = jnp.asarray(paper_success_rates(K))
-    vol = MarkovVolatility(rho, stickiness) if volatility == "markov" else BernoulliVolatility(rho)
+    if rho is None:
+        rho = getattr(vol, "rho", None) if vol is not None else None
+    rho = jnp.asarray(paper_success_rates(K) if rho is None else rho, jnp.float32)
+    if vol is None:
+        vol = make_volatility(volatility, rho, stickiness=stickiness, seed=seed)
     quota_fn = make_quota_schedule(quota, k, K, T, frac)
     select = jax.jit(make_select_fn(fl, quota_fn, rho))
     state = init_server_state({}, K, vol.init_state())

@@ -24,16 +24,106 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["paper_success_rates", "BernoulliVolatility", "MarkovVolatility", "DeadlineVolatility"]
+__all__ = [
+    "paper_success_rates",
+    "calibrate_deadline",
+    "make_volatility",
+    "BernoulliVolatility",
+    "MarkovVolatility",
+    "DeadlineVolatility",
+]
 
 
-def paper_success_rates(K: int, rates=(0.1, 0.3, 0.6, 0.9)) -> np.ndarray:
-    """Paper §VI-A: equal split of K clients into len(rates) classes."""
-    per = K // len(rates)
-    out = np.concatenate([np.full(per, r) for r in rates])
-    if out.shape[0] < K:  # remainder goes to the most stable class
-        out = np.concatenate([out, np.full(K - out.shape[0], rates[-1])])
+def paper_success_rates(K: int, rates=(0.1, 0.3, 0.6, 0.9), remainder: str = "stable") -> np.ndarray:
+    """Paper §VI-A: equal split of K clients into len(rates) classes.
+
+    When ``K % len(rates) != 0`` the split cannot be exact and the leftover
+    clients have to land somewhere; ``remainder`` picks the policy:
+
+    * ``"stable"`` (default, the historical behaviour): every leftover client
+      joins the *most stable* class (``rates[-1]``).  This skews the fleet
+      optimistic at small K — e.g. K=10 with the paper's rates has mean
+      success 0.56 versus 0.475 for the ideal equal split — so results at
+      non-divisible K are not strictly comparable to the paper's K=100.
+    * ``"spread"`` — class sizes differ by at most one, extras assigned from
+      the least stable class upward.  The mean skew per leftover client is
+      bounded by ``max_r |r - mean(rates)| / K`` and is pessimistic rather
+      than optimistic (the extras land on low-rho classes first).
+
+    Clients remain ordered by class (contiguous blocks), which
+    ``class_selection_stats`` and the benchmarks rely on.
+    """
+    per, rem = divmod(K, len(rates))
+    if remainder == "stable":
+        counts = [per] * len(rates)
+        counts[-1] += rem
+    elif remainder == "spread":
+        counts = [per + (1 if i < rem else 0) for i in range(len(rates))]
+    else:
+        raise ValueError(f"unknown remainder policy {remainder!r} (want 'stable' or 'spread')")
+    out = np.concatenate([np.full(n, r) for n, r in zip(counts, rates)])
     return out.astype(np.float32)
+
+
+def calibrate_deadline(rho, epochs, deadline: float, jitter: float):
+    """Solve the deadline model for ``(base_time, p_net_fail)`` so the joint
+    marginal success probability equals ``rho`` per client.
+
+    Split each client's failure rate evenly between network faults and
+    deadline misses, then invert the time model:
+
+        success = ok_time * ok_net,  P(ok_net) = 1 - p_net,
+        P(ok_time) = P(epochs*base*(1 + jitter*Exp(1)) <= deadline)
+                   = 1 - exp(-(deadline/(epochs*base) - 1)/jitter)
+
+    Setting ``P(ok_time) = rho/(1-p_net) =: q`` and inverting gives
+    ``base = deadline / (epochs * (1 - jitter*log(1-q)))``.
+    Returns float64 arrays (callers cast to float32 at model construction).
+    """
+    rho64 = np.asarray(rho, np.float64)
+    p_net = 0.5 * (1.0 - rho64)
+    q = np.clip(rho64 / (1.0 - p_net), 0.0, 1.0 - 1e-9)
+    base = deadline / (np.asarray(epochs, np.float64) * (1.0 - jitter * np.log1p(-q)))
+    return base, p_net
+
+
+def make_volatility(
+    name: str,
+    rho,
+    *,
+    stickiness: float = 0.8,
+    seed: int = 0,
+    epochs_choices: Tuple[int, ...] = (1, 2, 3, 4),
+    deadline_slack: float = 1.5,
+    jitter: float = 0.25,
+):
+    """Construct a named volatility model over success rates ``rho`` (K,).
+
+    ``name`` must be one of ``bernoulli | markov | deadline``; anything else
+    raises (no silent Bernoulli fallback).  The deadline model draws
+    heterogeneous local-epoch counts with ``np.random.default_rng(seed)`` and
+    calibrates ``base_time`` so the joint marginal matches ``rho``
+    (``calibrate_deadline``).  Richer structured models (diurnal, regional
+    outages, flash crowds, trace replay) live in ``repro.scenarios``.
+    """
+    rho = jnp.asarray(rho, jnp.float32)
+    if name == "bernoulli":
+        return BernoulliVolatility(rho)
+    if name == "markov":
+        return MarkovVolatility(rho, stickiness)
+    if name == "deadline":
+        rng = np.random.default_rng(seed)
+        epochs = np.asarray(rng.choice(epochs_choices, rho.shape[0]), np.float32)
+        deadline = float(np.median(epochs) * deadline_slack)
+        base, p_net = calibrate_deadline(np.asarray(rho, np.float64), epochs, deadline, jitter)
+        return DeadlineVolatility(
+            epochs=jnp.asarray(epochs),
+            base_time=jnp.asarray(base, jnp.float32),
+            deadline=deadline,
+            p_net_fail=jnp.asarray(p_net, jnp.float32),
+            jitter=jitter,
+        )
+    raise ValueError(f"unknown volatility model {name!r} (want bernoulli | markov | deadline)")
 
 
 @dataclass(frozen=True)

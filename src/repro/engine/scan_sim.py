@@ -12,6 +12,20 @@ per-round Python overhead.
 The step replicates the legacy loop's PRNG discipline exactly (carry the key,
 ``split(key, 3)`` per round), so outputs are bit-identical to
 ``selection_sim_loop`` for every scheme; ``tests/test_engine.py`` pins this.
+
+Volatility inside the scan comes in three flavours, picked by ``override``:
+
+* ``"none"``   — a *stateful* model object (any ``(init_state, sample)``
+  implementer: the built-ins, or ``repro.scenarios`` diurnal / regional /
+  flash-crowd / replay models).  Its state rides in ``ServerState.vol_state``
+  (an arbitrary pytree), so Markov chains and latent regional factors compile
+  into the whole-horizon program.
+* ``"dense"``  — a recorded ``(T, K)`` float32 trace streamed through the
+  scan's xs input.
+* ``"packed"`` — the same trace bit-packed to ``(T, ceil(K/8))`` uint8 (32x
+  smaller; K=1e6, T=2500 fits in ~312 MB) and expanded row-by-row inside the
+  scan body by ``repro.kernels.unpack_bits`` — selections are bit-identical
+  to the dense path (``tests/test_scenarios.py``).
 """
 from __future__ import annotations
 
@@ -24,17 +38,32 @@ import numpy as np
 
 from repro.configs.base import FLConfig
 from repro.core.selection import e3cs_update, make_quota_schedule, selection_mask, ucb_update
-from repro.core.volatility import BernoulliVolatility, MarkovVolatility, paper_success_rates
+from repro.core.volatility import make_volatility, paper_success_rates
 from repro.fl.round import init_server_state, make_select_fn
+from repro.kernels.unpack_bits import unpack_bits
 
-__all__ = ["make_sim_step", "scan_selection_sim"]
+__all__ = ["make_sim_step", "build_scan_runner", "scan_selection_sim"]
+
+_OVERRIDE_MODES = ("none", "dense", "packed")
 
 
-def make_sim_step(fl: FLConfig, quota_fn, vol, rho, use_override: bool = False):
+def make_sim_step(
+    fl: FLConfig, quota_fn, vol, rho, use_override=False, override: Optional[str] = None, lean: bool = False
+):
     """Build the per-round scan body ``step((state, key), x_over) -> ...``.
 
     Mirrors the legacy loop body op-for-op so results stay bit-identical.
+    ``override`` picks the success-bit source (see module docstring);
+    ``use_override`` is the legacy bool spelling of ``"dense"``.  With
+    ``lean=True`` the step emits only per-round scalars (successes, sigma)
+    instead of the (K,)-wide mask/x/p rows — the state math is unchanged, so
+    cumulative counts stay bit-identical while scan outputs drop from
+    O(T*K) to O(T), which is what makes the full T=2500 horizon feasible at
+    K=1e6 (full outputs would be ~10 GB per (T, K) float32 array).
     """
+    mode = override if override is not None else ("dense" if use_override else "none")
+    if mode not in _OVERRIDE_MODES:
+        raise ValueError(f"unknown override mode {mode!r} (want one of {_OVERRIDE_MODES})")
     select = make_select_fn(fl, quota_fn, rho)
     K, k, scheme = fl.K, fl.k, fl.scheme
 
@@ -42,8 +71,10 @@ def make_sim_step(fl: FLConfig, quota_fn, vol, rho, use_override: bool = False):
         state, key = carry
         key, k1, k2 = jax.random.split(key, 3)
         idx, p, capped, sigma = select(state, k1)
-        if use_override:
+        if mode == "dense":
             x, vs = x_over, state.vol_state
+        elif mode == "packed":
+            x, vs = unpack_bits(x_over, K), state.vol_state
         else:
             x, vs = vol.sample(k2, state.vol_state)
         mask = selection_mask(idx, K)
@@ -58,28 +89,64 @@ def make_sim_step(fl: FLConfig, quota_fn, vol, rho, use_override: bool = False):
             e3cs=e3cs, ucb=ucb, vol_state=vs, t=state.t + 1,
             sel_counts=state.sel_counts + mask, loss_cache=loss_cache,
         )
-        return (state, key), (mask, x, p, sigma)
+        out = (jnp.vdot(mask, x), sigma) if lean else (mask, x, p, sigma)
+        return (state, key), out
 
     return step
 
 
+def build_scan_runner(fl: FLConfig, vol, rho, override: str = "none", outputs: str = "full"):
+    """Compile a whole-horizon runner for an arbitrary volatility model.
+
+    Returns ``(run, state0)``, jitted over ``fl.rounds`` rounds:
+
+    * ``outputs="full"`` — ``run(state, key, xs_in) -> (state, masks, xs, ps,
+      sigmas)`` with (T, K)-wide per-round outputs (what
+      ``scan_selection_sim`` post-processes).
+    * ``outputs="lean"`` — ``run(state, key, xs_in) -> (state, successes,
+      sigmas)`` with only (T,) per-round scalars; cumulative selection counts
+      live in ``state.sel_counts`` and are bit-identical to the full path.
+      Use this at K=1e6-scale horizons where a single (T, K) float32 output
+      would dwarf the packed input trace.
+
+    ``vol`` is any ``(init_state, sample)`` implementer — its (pytree) state
+    is carried through the scan, so stateful scenario models compile into the
+    program.  ``xs_in`` is ``(T, 0)`` for ``override="none"``, the float32
+    trace for ``"dense"``, or the uint8 bit-packed trace for ``"packed"``.
+
+    Unlike ``scan_selection_sim`` this builder is not memoised: hold on to the
+    returned ``run`` to amortise compilation across repeat calls (the
+    scenario harness and benchmarks do).
+    """
+    if outputs not in ("full", "lean"):
+        raise ValueError(f"unknown outputs mode {outputs!r} (want 'full' or 'lean')")
+    lean = outputs == "lean"
+    rho = jnp.asarray(rho, jnp.float32)
+    quota_fn = make_quota_schedule(fl.quota, fl.k, fl.K, fl.rounds, fl.quota_frac)
+    step = make_sim_step(fl, quota_fn, vol, rho, override=override, lean=lean)
+    state0 = init_server_state({}, fl.K, vol.init_state())
+    T = fl.rounds
+
+    @jax.jit
+    def run(state, key, xs_in):
+        (state, _), out = jax.lax.scan(step, (state, key), xs_in, length=T)
+        if lean:
+            successes, sigmas = out
+            return state, successes, sigmas
+        masks, xs, ps, sigmas = out
+        return state, masks, xs, ps, sigmas
+
+    return run, state0
+
+
 @functools.lru_cache(maxsize=64)
-def _compiled_runner(scheme, K, k, T, quota, frac, eta, sampler, volatility, stickiness, use_override):
+def _compiled_runner(scheme, K, k, T, quota, frac, eta, sampler, volatility, stickiness, seed, override):
     """Cache the jitted whole-horizon runner per static configuration, so
     repeat calls (sweeps, benchmarks) pay compilation once."""
     fl = FLConfig(K=K, k=k, rounds=T, scheme=scheme, quota=quota, quota_frac=frac, eta=eta, sampler=sampler)
     rho = jnp.asarray(paper_success_rates(K))
-    vol = MarkovVolatility(rho, stickiness) if volatility == "markov" else BernoulliVolatility(rho)
-    quota_fn = make_quota_schedule(quota, k, K, T, frac)
-    step = make_sim_step(fl, quota_fn, vol, rho, use_override)
-    state = init_server_state({}, K, vol.init_state())
-
-    @jax.jit
-    def run(state, key, xs_in):
-        (state, _), (masks, xs, ps, sigmas) = jax.lax.scan(step, (state, key), xs_in, length=T)
-        return state, masks, xs, ps, sigmas
-
-    return run, state
+    vol = make_volatility(volatility, rho, stickiness=stickiness, seed=seed)
+    return build_scan_runner(fl, vol, rho, override=override)
 
 
 def scan_selection_sim(
@@ -95,14 +162,39 @@ def scan_selection_sim(
     stickiness: float = 0.8,
     seed: int = 0,
     xs_override: Optional[np.ndarray] = None,
+    packed_override: Optional[np.ndarray] = None,
+    vol=None,
+    rho=None,
 ) -> Dict[str, np.ndarray]:
-    """Drop-in replacement for the legacy ``selection_sim`` loop."""
-    use_override = xs_override is not None
-    run, state = _compiled_runner(
-        scheme, K, k, T, quota, frac, eta, sampler, volatility, stickiness, use_override
-    )
+    """Drop-in replacement for the legacy ``selection_sim`` loop.
+
+    ``vol`` (an ``(init_state, sample)`` object) takes precedence over the
+    ``volatility`` name; ``packed_override`` streams a ``(T, ceil(K/8))``
+    uint8 bit-packed trace through the scan, unpacked on the fly.
+    """
+    if xs_override is not None and packed_override is not None:
+        raise ValueError("pass at most one of xs_override / packed_override")
+    override = "dense" if xs_override is not None else ("packed" if packed_override is not None else "none")
+    if vol is not None or rho is not None:
+        fl = FLConfig(K=K, k=k, rounds=T, scheme=scheme, quota=quota, quota_frac=frac, eta=eta, sampler=sampler)
+        if rho is None:
+            rho = getattr(vol, "rho", None)
+        if rho is None:
+            rho = paper_success_rates(K)
+        if vol is None:
+            vol = make_volatility(volatility, rho, stickiness=stickiness, seed=seed)
+        run, state = build_scan_runner(fl, vol, rho, override=override)
+    else:
+        run, state = _compiled_runner(
+            scheme, K, k, T, quota, frac, eta, sampler, volatility, stickiness, seed, override
+        )
     key = jax.random.PRNGKey(seed)
-    xs_in = jnp.asarray(xs_override, jnp.float32) if use_override else jnp.zeros((T, 0), jnp.float32)
+    if override == "dense":
+        xs_in = jnp.asarray(xs_override, jnp.float32)
+    elif override == "packed":
+        xs_in = jnp.asarray(packed_override, jnp.uint8)
+    else:
+        xs_in = jnp.zeros((T, 0), jnp.float32)
     _, masks, xs, ps, sigmas = run(state, key, xs_in)
     masks = np.asarray(masks)
     return {

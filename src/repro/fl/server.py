@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.configs.base import FLConfig
 from repro.core.selection import make_quota_schedule
-from repro.core.volatility import BernoulliVolatility, DeadlineVolatility, MarkovVolatility, paper_success_rates
+from repro.core.volatility import make_volatility, paper_success_rates
 
 from .round import ServerState, init_server_state, make_cohort_round
 
@@ -29,37 +29,14 @@ __all__ = ["FLServer", "build_volatility"]
 
 def build_volatility(fl_cfg: FLConfig, K: int):
     rho = jnp.asarray(paper_success_rates(K, fl_cfg.success_rates))
-    if fl_cfg.volatility == "bernoulli":
-        return BernoulliVolatility(rho), rho
-    if fl_cfg.volatility == "markov":
-        return MarkovVolatility(rho, fl_cfg.markov_stickiness), rho
-    if fl_cfg.volatility == "deadline":
-        rng = np.random.default_rng(fl_cfg.seed)
-        epochs = np.asarray(rng.choice(fl_cfg.local_epochs, K), np.float32)
-        jitter = 0.25
-        deadline = float(np.median(epochs) * 1.5)
-        rho64 = np.asarray(rho, np.float64)
-        # Split each client's failure rate between network faults and deadline
-        # misses, then calibrate base_time so the *joint* marginal matches rho:
-        #   success = ok_time * ok_net,  P(ok_net) = 1 - p_net,
-        #   P(ok_time) = P(epochs*base*(1 + jitter*Exp(1)) <= deadline)
-        #              = 1 - exp(-(deadline/(epochs*base) - 1)/jitter)
-        # Setting P(ok_time) = rho/(1-p_net) =: q and inverting gives
-        #   base = deadline / (epochs * (1 - jitter*log(1-q))).
-        p_net = 0.5 * (1.0 - rho64)
-        q = np.clip(rho64 / (1.0 - p_net), 0.0, 1.0 - 1e-9)
-        base = deadline / (epochs.astype(np.float64) * (1.0 - jitter * np.log1p(-q)))
-        return (
-            DeadlineVolatility(
-                epochs=jnp.asarray(epochs),
-                base_time=jnp.asarray(base, jnp.float32),
-                deadline=deadline,
-                p_net_fail=jnp.asarray(p_net, jnp.float32),
-                jitter=jitter,
-            ),
-            rho,
-        )
-    raise ValueError(fl_cfg.volatility)
+    vol = make_volatility(
+        fl_cfg.volatility,
+        rho,
+        stickiness=fl_cfg.markov_stickiness,
+        seed=fl_cfg.seed,
+        epochs_choices=fl_cfg.local_epochs,
+    )
+    return vol, rho
 
 
 class FLServer:

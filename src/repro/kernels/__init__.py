@@ -1,2 +1,3 @@
 from . import ops, ref
 from .ops import flash_attention, ssd_scan, gumbel_topk_sample
+from .unpack_bits import unpack_bits, unpack_bits_kernel_call, unpack_bits_ref

@@ -1,0 +1,73 @@
+"""Bit-unpack as a Pallas kernel — streaming packed availability traces.
+
+Recorded volatility traces store one success bit per client per round
+(``repro.scenarios.replay``): a ``(T, ceil(K/8))`` uint8 array, 8 clients per
+byte, little-endian bit order (bit ``j`` of byte ``b`` is client ``8*b + j``,
+matching ``np.packbits(..., bitorder="little")``).  At replay time the scan
+simulator needs the round's ``(K,)`` float32 bit-vector; materialising the
+whole ``(T, K)`` float32 trace would be 32x the packed footprint (10 GB at
+K=1e6, T=2500 vs ~312 MB packed), so each row is expanded on the fly.
+
+This kernel does the expansion tile-by-tile: the grid walks byte tiles, each
+program reads ``tile_b`` bytes from VMEM, shifts out the 8 bit-planes on the
+VPU and writes the ``8 * tile_b`` float32 lane block.  The op is purely
+bandwidth-bound (1 byte in, 32 bytes out) and fuses under the scan body so the
+unpacked row never round-trips through HBM on a real backend.
+
+``unpack_bits_ref`` is the jnp reference (also the CPU fast path — the
+interpreter would dominate a T-round scan); ``tests/test_scenarios.py`` pins
+kernel == reference in interpret mode, ragged shapes included.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["unpack_bits_ref", "unpack_bits_kernel_call", "unpack_bits"]
+
+
+def unpack_bits_ref(packed: jax.Array, K: int) -> jax.Array:
+    """Little-endian bit expansion: ``(..., B)`` uint8 -> ``(..., K)`` float32."""
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    bits = (packed[..., None] >> shifts) & jnp.uint8(1)
+    flat = bits.reshape(*packed.shape[:-1], packed.shape[-1] * 8)
+    return flat[..., :K].astype(jnp.float32)
+
+
+def _kernel(p_ref, x_ref, *, tile_b):
+    b = p_ref[...].astype(jnp.int32)  # (tile_b,)
+    shifts = jax.lax.broadcasted_iota(jnp.int32, (tile_b, 8), 1)
+    bits = jnp.right_shift(b[:, None], shifts) & 1
+    x_ref[...] = bits.reshape(tile_b * 8).astype(jnp.float32)
+
+
+def unpack_bits_kernel_call(packed: jax.Array, K: int, tile_b: int = 1024, interpret: bool = False):
+    """packed: (B,) uint8 with ``B >= ceil(K/8)``. Returns (K,) float32."""
+    B = packed.shape[0]
+    tile_b = min(tile_b, max(B, 1))
+    B_p = math.ceil(B / tile_b) * tile_b
+    if B_p != B:
+        packed = jnp.pad(packed, (0, B_p - B))
+    n_tiles = B_p // tile_b
+    kernel = functools.partial(_kernel, tile_b=tile_b)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((tile_b,), lambda t: (t,))],
+        out_specs=pl.BlockSpec((tile_b * 8,), lambda t: (t,)),
+        out_shape=jax.ShapeDtypeStruct((B_p * 8,), jnp.float32),
+        interpret=interpret,
+    )(packed)
+    return out[:K]
+
+
+def unpack_bits(packed: jax.Array, K: int, tile_b: int = 1024) -> jax.Array:
+    """Backend-dispatching row unpack: Pallas kernel on accelerators, jnp
+    reference on CPU (where the interpreter would be the bottleneck)."""
+    if jax.default_backend() == "cpu":
+        return unpack_bits_ref(packed, K)
+    return unpack_bits_kernel_call(packed, K, tile_b=tile_b)

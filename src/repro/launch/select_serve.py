@@ -5,7 +5,10 @@ Each FL job posts a *tick* request carrying last round's success-bit feedback;
 the server drains up to J requests from the queue, packs them into one
 ``MultiJobEngine`` dispatch (a single compiled vmap over jobs), and answers
 every request with its cohort (selected client ids + the allocation used).
-Volatile clients are simulated per job with the paper's Bernoulli classes.
+Volatile clients are simulated per job with the paper's Bernoulli classes, or
+— with ``--scenario <name>`` — replayed from a bit-packed trace of any
+``repro.scenarios`` regime (diurnal, regional_outage, flash_crowd, ...),
+recorded per job and unpacked row-by-row at enqueue time.
 
 Reports throughput (ticks/s and client-decisions/s) and per-request latency
 percentiles.  Runs genuinely on this CPU box:
@@ -37,6 +40,7 @@ def run_service(
     seed: int = 0,
     n_iters: int = 48,
     tile: int = 8192,
+    scenario: str | None = None,
 ):
     """Simulate the service loop; returns the throughput/latency report."""
     rng = np.random.default_rng(seed)
@@ -55,17 +59,36 @@ def run_service(
     # request queue: (enqueue_time, job_id, feedback bits)
     queue: collections.deque = collections.deque()
     latencies, n_ticks = [], 0
-    xs_host = (rng.random((rounds, J, K_max)) < rhos[None]).astype(np.float32)
+    if scenario is None:
+        xs_host = (rng.random((rounds, J, K_max)) < rhos[None]).astype(np.float32)
+
+        def feedback(t, j):
+            return xs_host[t, j]
+
+    else:
+        from repro.scenarios import make_scenario, record_trace, unpack_trace
+
+        # one bit-packed trace per job (jobs get distinct seeds); rows are
+        # expanded only at enqueue time, the dense (rounds, J, K_max) trace
+        # never exists
+        traces = [
+            record_trace(make_scenario(scenario, Kj, rounds, seed=seed + j)[0], rounds, seed=seed + j, chunk=min(64, rounds))
+            for j, Kj in enumerate(Ks)
+        ]
+
+        def feedback(t, j):
+            return np.pad(unpack_trace(traces[j][t], Ks[j]), (0, K_max - Ks[j]))
 
     # warm-up dispatch (compile once, off the clock)
     keys0 = jax.vmap(lambda kk: jax.random.fold_in(kk, rounds))(base_keys)
-    jax.block_until_ready(batched_step(cfg, state, keys0, jnp.asarray(xs_host[0]))[0].logw)
+    xs0 = jnp.asarray(np.stack([feedback(0, j) for j in range(J)]))
+    jax.block_until_ready(batched_step(cfg, state, keys0, xs0)[0].logw)
 
     t_start = time.perf_counter()
     n_decisions = 0
     for t in range(rounds):
         for j in range(J):
-            queue.append((time.perf_counter(), j, xs_host[t, j]))
+            queue.append((time.perf_counter(), j, feedback(t, j)))
         # drain one full batch of J requests into a single engine dispatch
         batch = [queue.popleft() for _ in range(min(J, len(queue)))]
         keys = jax.vmap(lambda kk: jax.random.fold_in(kk, t))(base_keys)
@@ -86,6 +109,7 @@ def run_service(
         "jobs": J,
         "K_max": K_max,
         "rounds": rounds,
+        "scenario": scenario or "paper_iid(static)",
         "ticks": n_ticks,
         "ticks_per_s": round(n_ticks / elapsed, 1),
         "client_decisions_per_s": round(n_decisions / elapsed, 1),
@@ -106,11 +130,12 @@ def main():
     ap.add_argument("--clients", type=int, default=4096, help="K_max: largest job population")
     ap.add_argument("--rounds", type=int, default=30)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scenario", type=str, default=None, help="repro.scenarios name to replay as feedback")
     ap.add_argument("--smoke", action="store_true", help="tiny CPU-friendly run")
     args = ap.parse_args()
     if args.smoke:
         args.jobs, args.clients, args.rounds = 4, 512, 10
-    report = run_service(J=args.jobs, K_max=args.clients, rounds=args.rounds, seed=args.seed)
+    report = run_service(J=args.jobs, K_max=args.clients, rounds=args.rounds, seed=args.seed, scenario=args.scenario)
     print(json.dumps(report, indent=1))
 
 

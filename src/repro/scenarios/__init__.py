@@ -1,0 +1,46 @@
+"""Scenario subsystem: volatility as a first-class, compiled workload axis.
+
+Sub-modules:
+  * ``traces``   — structured generators (diurnal, regional outages, flash
+    crowds) behind the core ``(init_state, sample)`` protocol
+  * ``replay``   — bit-packed trace recording + replay (8 clients/byte;
+    K=1e6, T=2500 in ~312 MB) streamed through ``engine.scan_sim``
+  * ``registry`` — named scenario configurations
+  * ``harness``  — selector x scenario evaluation grid (per-cell compiled
+    scans, plus the batched ``engine.multi_job`` dispatch)
+
+See ``README.md`` in this directory for the trace format and scenario names.
+"""
+from .traces import DiurnalVolatility, FlashCrowdVolatility, RegionalOutageVolatility
+from .replay import (
+    ReplayVolatility,
+    pack_trace,
+    packed_nbytes,
+    packed_width,
+    record_trace,
+    unpack_trace,
+)
+from .registry import SCENARIOS, Scenario, get_scenario, list_scenarios, make_scenario
+from .harness import evaluate_cell, format_grid, run_grid, run_grid_multi_job, run_replay
+
+__all__ = [
+    "DiurnalVolatility",
+    "FlashCrowdVolatility",
+    "RegionalOutageVolatility",
+    "ReplayVolatility",
+    "pack_trace",
+    "packed_nbytes",
+    "packed_width",
+    "record_trace",
+    "unpack_trace",
+    "SCENARIOS",
+    "Scenario",
+    "get_scenario",
+    "list_scenarios",
+    "make_scenario",
+    "evaluate_cell",
+    "format_grid",
+    "run_grid",
+    "run_grid_multi_job",
+    "run_replay",
+]

@@ -1,0 +1,155 @@
+"""Selector x scenario evaluation grid.
+
+Two dispatch paths over the same metric surface:
+
+* ``run_grid`` — every (selector, scenario) cell is one whole-horizon
+  compiled run (``engine.scan_sim`` with the scenario's stateful model carried
+  inside the ``lax.scan``).  Covers every selection scheme.
+* ``run_grid_multi_job`` — the scenario axis mapped onto the batched
+  multi-tenant engine (``engine.multi_job``): one vmapped E3CS engine row per
+  scenario, one device dispatch per round serves the whole grid, success bits
+  streamed per scenario from its generator.  This is the fleet-shaped way to
+  evaluate one selector against many regimes at once.
+
+Cells report CEP (Eq. 8), effective participation (CEP / T*k), Jain fairness
+and normalized selection entropy; ``format_grid`` renders the table the
+``scenarios`` benchmark suite and ``examples/scenarios_demo.py`` print.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fairness import cep, jain_index, selection_entropy, success_ratio
+from repro.engine.multi_job import make_multi_job, multi_job_init, pack_jobs
+from repro.engine.scan_sim import scan_selection_sim
+
+from .registry import make_scenario
+from .replay import pack_trace, record_trace
+
+__all__ = ["evaluate_cell", "run_grid", "run_grid_multi_job", "run_replay", "format_grid"]
+
+DEFAULT_SELECTORS = ("e3cs", "random", "fedcs")
+
+
+def _metrics(masks: np.ndarray, xs: np.ndarray) -> Dict[str, float]:
+    counts = masks.sum(0)
+    return {
+        "cep": float(cep(jnp.asarray(masks), jnp.asarray(xs))),
+        "eff_participation": float(success_ratio(jnp.asarray(masks), jnp.asarray(xs))),
+        "jain": float(jain_index(jnp.asarray(counts))),
+        "entropy": float(selection_entropy(jnp.asarray(counts))),
+    }
+
+
+def evaluate_cell(
+    selector: str, scenario: str, K: int = 100, k: int = 20, T: int = 500,
+    seed: int = 0, frac: float = 0.5,
+) -> Dict[str, float]:
+    """One (selector, scenario) cell through the compiled scan engine."""
+    vol, rho = make_scenario(scenario, K, T, seed)
+    out = scan_selection_sim(selector, K=K, k=k, T=T, frac=frac, seed=seed, vol=vol, rho=rho)
+    row = {"selector": selector, "scenario": scenario, "K": K, "k": k, "T": T}
+    row.update(_metrics(out["masks"], out["xs"]))
+    return row
+
+
+def run_grid(
+    selectors: Sequence[str] = DEFAULT_SELECTORS,
+    scenarios: Sequence[str] = ("paper_iid", "markov", "diurnal"),
+    K: int = 100, k: int = 20, T: int = 500, seed: int = 0, frac: float = 0.5,
+) -> List[Dict[str, float]]:
+    """The full grid, one compiled run per cell."""
+    return [
+        evaluate_cell(sel, sc, K=K, k=k, T=T, seed=seed, frac=frac)
+        for sc in scenarios
+        for sel in selectors
+    ]
+
+
+def run_grid_multi_job(
+    scenarios: Sequence[str], K: int = 100, k: int = 20, T: int = 300,
+    seed: int = 0, sigma_frac: float = 0.5, eta: float = 0.5,
+) -> List[Dict[str, float]]:
+    """E3CS vs every scenario in ONE batched engine: job j == scenario j.
+
+    Per round: each scenario's generator produces its (K,) success bits
+    (jitted per scenario — their state pytrees differ), the rows are stacked
+    and a single ``multi_job`` dispatch advances all J selectors.
+    """
+    J = len(scenarios)
+    cfg, k_max = pack_jobs([K] * J, [k] * J, [sigma_frac] * J, [eta] * J)
+    _, batched = make_multi_job(k_max)
+    state = multi_job_init(cfg)
+
+    vols = [make_scenario(sc, K, T, seed)[0] for sc in scenarios]
+    samplers = [jax.jit(v.sample) for v in vols]
+    vol_states = [v.init_state() for v in vols]
+    base_keys = jax.random.split(jax.random.PRNGKey(seed), J)
+    vol_keys = jax.random.split(jax.random.PRNGKey(seed + 1), J)
+
+    ceps = np.zeros(J)
+    counts = np.zeros((J, K))
+    for t in range(T):
+        keys = jax.vmap(lambda kk: jax.random.fold_in(kk, t))(base_keys)
+        xs_rows = []
+        for j in range(J):
+            x, vol_states[j] = samplers[j](jax.random.fold_in(vol_keys[j], t), vol_states[j])
+            xs_rows.append(x)
+        xs = jnp.stack(xs_rows)
+        state, out = batched(cfg, state, keys, xs)
+        mask = np.asarray(out["mask"])
+        ceps += (mask * np.asarray(xs)).sum(1)
+        counts += mask
+    rows = []
+    for j, sc in enumerate(scenarios):
+        rows.append({
+            "selector": "e3cs(multi_job)",
+            "scenario": sc,
+            "K": K, "k": k, "T": T,
+            "cep": float(ceps[j]),
+            "eff_participation": float(ceps[j] / (T * k)),
+            "jain": float(jain_index(jnp.asarray(counts[j]))),
+            "entropy": float(selection_entropy(jnp.asarray(counts[j]))),
+        })
+    return rows
+
+
+def run_replay(
+    selector, scenario: str, K: int = 100, k: int = 20, T: int = 500,
+    seed: int = 0, frac: float = 0.5, chunk: int = 256,
+):
+    """Record the scenario ONCE (bit-packed), then evaluate selector(s)
+    against the frozen trace via the packed scan path — the scenario
+    subsystem's A/B primitive: every selector sees identical bits.
+
+    ``selector`` may be a single scheme name (returns ``(row, packed)``) or a
+    sequence of names (returns ``(rows, packed)``); either way the trace is
+    recorded a single time and reused.
+    """
+    single = isinstance(selector, str)
+    selectors = (selector,) if single else tuple(selector)
+    vol, rho = make_scenario(scenario, K, T, seed)
+    packed = record_trace(vol, T, seed=seed, chunk=min(chunk, T))
+    rows = []
+    for sel in selectors:
+        out = scan_selection_sim(sel, K=K, k=k, T=T, frac=frac, seed=seed, rho=rho, packed_override=packed)
+        row = {"selector": sel, "scenario": f"{scenario}(replay)", "K": K, "k": k, "T": T}
+        row.update(_metrics(out["masks"], out["xs"]))
+        rows.append(row)
+    return (rows[0] if single else rows), packed
+
+
+def format_grid(rows: List[Dict[str, float]]) -> str:
+    """Fixed-width table: scenarios x selectors with the four metrics."""
+    hdr = f"{'scenario':<22} {'selector':<16} {'cep':>9} {'eff_part':>9} {'jain':>6} {'entropy':>8}"
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['scenario']:<22} {r['selector']:<16} {r['cep']:>9.0f} "
+            f"{r['eff_participation']:>9.3f} {r['jain']:>6.3f} {r['entropy']:>8.3f}"
+        )
+    return "\n".join(lines)

@@ -1,0 +1,107 @@
+"""Named scenario configurations: one id per volatility regime.
+
+A *scenario* is a recipe ``make(K, T, seed) -> (vol, rho_hint)``: a volatility
+model sized to the population/horizon plus the marginal-rate hint handed to
+rate-omniscient baselines (fedcs).  Everything downstream — the evaluation
+harness, the ``scenarios`` benchmark suite, the examples — addresses
+scenarios by these names, so adding a row here automatically adds it to the
+selector x scenario grid.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.volatility import MarkovVolatility, make_volatility, paper_success_rates
+
+from .traces import DiurnalVolatility, FlashCrowdVolatility, RegionalOutageVolatility
+
+__all__ = ["Scenario", "SCENARIOS", "get_scenario", "list_scenarios", "make_scenario"]
+
+
+@dataclass(frozen=True)
+class Scenario:
+    name: str
+    make: Callable  # (K: int, T: int, seed: int) -> (vol, rho_hint)
+    description: str
+
+
+def _paper_rho(K: int) -> jnp.ndarray:
+    return jnp.asarray(paper_success_rates(K))
+
+
+def _paper_iid(K, T, seed):
+    rho = _paper_rho(K)
+    return make_volatility("bernoulli", rho), rho
+
+
+def _markov(K, T, seed, stickiness=0.8):
+    rho = _paper_rho(K)
+    return MarkovVolatility(rho, stickiness), rho
+
+
+def _deadline(K, T, seed):
+    rho = _paper_rho(K)
+    return make_volatility("deadline", rho, seed=seed), rho
+
+
+def _diurnal(K, T, seed):
+    rho = _paper_rho(K)
+    # timezones: K clients spread uniformly around the day, shuffled so a
+    # volatility class is not confounded with a longitude band
+    phase = np.random.default_rng(seed).permutation(K).astype(np.float32) / K
+    vol = DiurnalVolatility(rho=rho, phase=jnp.asarray(phase), amplitude=0.35, period=max(8, min(48, T // 4)))
+    return vol, vol.marginal_rate()
+
+
+def _regional(K, T, seed, n_regions=8):
+    rho = _paper_rho(K)
+    # contiguous client blocks per region (clients stay ordered by class
+    # within a region because classes repeat across regions at this scale)
+    region = jnp.asarray(np.arange(K) * n_regions // K, jnp.int32)
+    vol = RegionalOutageVolatility(rho=rho, region=region, n_regions=n_regions)
+    return vol, vol.marginal_rate()
+
+
+def _flash_crowd(K, T, seed):
+    rho = _paper_rho(K)
+    crowd = (np.random.default_rng(seed).random(K) < 0.3).astype(np.float32)
+    t_start, t_end = T // 4, T // 4 + max(2, T // 4)
+    vol = FlashCrowdVolatility(rho=rho, crowd=jnp.asarray(crowd), t_start=t_start, t_end=t_end)
+    return vol, vol.marginal_rate()
+
+
+SCENARIOS: Dict[str, Scenario] = {
+    s.name: s
+    for s in [
+        Scenario("paper_iid", _paper_iid, "paper §VI-A: iid Bernoulli, 4 rate classes"),
+        Scenario("markov", _markov, "Gilbert-Elliott per client, stickiness 0.8"),
+        Scenario(
+            "markov_sticky",
+            lambda K, T, seed: _markov(K, T, seed, stickiness=0.95),
+            "Gilbert-Elliott per client, stickiness 0.95 (long outages)",
+        ),
+        Scenario("deadline", _deadline, "mechanistic deadline misses + network faults, calibrated to rho"),
+        Scenario("diurnal", _diurnal, "timezone-phased sinusoidal availability"),
+        Scenario("regional_outage", _regional, "8-region correlated Gilbert-Elliott outages"),
+        Scenario("flash_crowd", _flash_crowd, "30% crowd surges in for a window, churns out"),
+    ]
+}
+
+
+def get_scenario(name: str) -> Scenario:
+    if name not in SCENARIOS:
+        raise KeyError(f"unknown scenario {name!r}; known: {sorted(SCENARIOS)}")
+    return SCENARIOS[name]
+
+
+def make_scenario(name: str, K: int, T: int, seed: int = 0) -> Tuple[object, jnp.ndarray]:
+    """Instantiate scenario ``name`` -> ``(vol, rho_hint)``."""
+    return get_scenario(name).make(K, T, seed)
+
+
+def list_scenarios() -> List[str]:
+    return sorted(SCENARIOS)

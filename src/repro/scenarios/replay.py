@@ -1,0 +1,128 @@
+"""Bit-packed availability traces: record once, replay at fleet scale.
+
+A success-bit trace is one bit per client per round, but the naive float32
+``(T, K)`` representation is 32 bits each — 10 GB at K=1e6, T=2500.  Packed
+uint8 (8 clients/byte, little-endian within the byte, the ``np.packbits``
+``bitorder="little"`` convention) the same trace is ~312 MB and fits on one
+device, where ``engine.scan_sim``'s packed override expands each round's row
+on the fly (``repro.kernels.unpack_bits``) without ever materialising the
+dense *input* trace.  At that scale the per-round scan *outputs* are the
+remaining (T, K) hazard — pair the packed override with
+``build_scan_runner(..., outputs="lean")``, which emits only per-round
+scalars and keeps cumulative counts in the carried state.
+``tests/test_scenarios.py`` pins packed replay bit-identical to the dense
+``xs_override`` path, and lean counts bit-identical to full outputs.
+
+``record_trace`` rolls any ``(init_state, sample)`` volatility model forward
+and packs on-device in round chunks, so recording a million-client trace
+never holds more than ``chunk * K`` float32 at once.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.unpack_bits import unpack_bits_ref
+
+__all__ = [
+    "packed_width",
+    "packed_nbytes",
+    "pack_trace",
+    "unpack_trace",
+    "pack_bits_jnp",
+    "record_trace",
+    "ReplayVolatility",
+]
+
+
+def packed_width(K: int) -> int:
+    """Bytes per packed round row: ceil(K / 8)."""
+    return (K + 7) // 8
+
+
+def packed_nbytes(T: int, K: int) -> int:
+    """Total bytes of a packed (T, K) trace."""
+    return T * packed_width(K)
+
+
+def pack_trace(xs: np.ndarray) -> np.ndarray:
+    """(..., K) {0,1} -> (..., ceil(K/8)) uint8, little-endian bit order."""
+    return np.packbits(np.asarray(xs).astype(np.uint8), axis=-1, bitorder="little")
+
+
+def unpack_trace(packed: np.ndarray, K: int) -> np.ndarray:
+    """(..., B) uint8 -> (..., K) float32; inverse of ``pack_trace``."""
+    bits = np.unpackbits(np.asarray(packed, np.uint8), axis=-1, bitorder="little")
+    return bits[..., :K].astype(np.float32)
+
+
+def pack_bits_jnp(x: jax.Array) -> jax.Array:
+    """On-device pack: (..., K) {0,1} float -> (..., ceil(K/8)) uint8."""
+    K = x.shape[-1]
+    pad = (-K) % 8
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((*x.shape[:-1], pad), x.dtype)], axis=-1)
+    b = x.reshape(*x.shape[:-1], -1, 8).astype(jnp.uint8)
+    weights = (jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8))
+    return jnp.sum(b * weights, axis=-1, dtype=jnp.uint8)
+
+
+def record_trace(vol, T: int, seed: int = 0, chunk: int = 256) -> np.ndarray:
+    """Roll ``vol`` forward T rounds and return the packed (T, ceil(K/8))
+    uint8 trace.  Sampling and packing happen on device in ``chunk``-round
+    scans, so peak memory is ``chunk * K`` float32 regardless of T."""
+
+    def step(carry, _):
+        key, vs = carry
+        key, k2 = jax.random.split(key)
+        x, vs = vol.sample(k2, vs)
+        return (key, vs), pack_bits_jnp(x)
+
+    @jax.jit
+    def run_chunk(carry):
+        return jax.lax.scan(step, carry, None, length=chunk)
+
+    carry = (jax.random.PRNGKey(seed), vol.init_state())
+    rows = []
+    done = 0
+    while done < T:
+        carry, packed = run_chunk(carry)
+        rows.append(np.asarray(packed))
+        done += chunk
+    return np.concatenate(rows)[:T]
+
+
+@dataclass(frozen=True)
+class ReplayVolatility:
+    """Replay a recorded packed trace through the ``(init_state, sample)``
+    protocol: state is the round index, ``sample`` ignores the rng and
+    expands row t on the fly (the packed array stays uint8 on device).
+
+    Rounds past the end of the trace repeat the last row
+    (``dynamic_index_in_dim`` clamps); size the trace to the horizon.
+    """
+
+    packed: jnp.ndarray  # (T, ceil(K/8)) uint8
+    K: int
+
+    @property
+    def rho(self) -> jnp.ndarray:
+        """Empirical marginal of the recorded trace (the fedcs hint),
+        accumulated in row chunks so the dense (T, K) trace never exists."""
+        packed = np.asarray(self.packed)
+        T = packed.shape[0]
+        total = np.zeros(self.K, np.float64)
+        chunk = max(1, min(1024, T))
+        for i in range(0, T, chunk):
+            total += unpack_trace(packed[i : i + chunk], self.K).sum(0, dtype=np.float64)
+        return jnp.asarray(total / T, jnp.float32)
+
+    def init_state(self):
+        return jnp.zeros((), jnp.int32)
+
+    def sample(self, rng: jax.Array, state):
+        row = jax.lax.dynamic_index_in_dim(self.packed, state, keepdims=False)
+        return unpack_bits_ref(row, self.K), state + 1

@@ -1,0 +1,139 @@
+"""Structured volatility: the availability patterns real device fleets show.
+
+The paper's synthetic generators (``repro.core.volatility``) draw each
+client's success bit from a *static* marginal.  Cross-device fleets are not
+like that: phones charge overnight (diurnal cycles phase-shifted by
+timezone), a datacenter or cell outage takes a whole region down at once
+(correlated failures), and a viral event makes a crowd of devices appear and
+then churn away.  Each model here is one of those mechanisms, expressed in
+the same ``(init_state, sample)`` protocol, so it drops into the legacy loop,
+``engine.scan_sim`` (state carried through the ``lax.scan``) and the trace
+recorder (``repro.scenarios.replay``) unchanged.
+
+All models expose ``rho`` — the *base* per-client rate the structure
+modulates — and ``marginal_rate()``, the long-run marginal an omniscient
+baseline (fedcs) should be handed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["DiurnalVolatility", "RegionalOutageVolatility", "FlashCrowdVolatility"]
+
+
+@dataclass(frozen=True)
+class DiurnalVolatility:
+    """Timezone-phased sinusoidal availability: rho_i(t) = rho_i + A sin(...).
+
+    Client i's success probability oscillates around its base rate with a
+    shared period (rounds per simulated day) and a per-client phase offset
+    (its timezone).  State is the round index.  The marginal over whole
+    periods equals ``rho`` wherever the sinusoid stays inside [lo, hi];
+    clipping (very low/high base rates) pulls it toward the clip point.
+    """
+
+    rho: jnp.ndarray  # (K,) base success rates
+    phase: jnp.ndarray  # (K,) in [0, 1): fraction-of-day offset
+    amplitude: float = 0.35
+    period: int = 48  # rounds per day
+    lo: float = 0.005
+    hi: float = 0.995
+
+    def init_state(self):
+        return jnp.zeros((), jnp.int32)
+
+    def rate(self, t) -> jnp.ndarray:
+        ang = 2.0 * jnp.pi * (t.astype(jnp.float32) / self.period + self.phase)
+        return jnp.clip(self.rho + self.amplitude * jnp.sin(ang), self.lo, self.hi)
+
+    def marginal_rate(self) -> jnp.ndarray:
+        ts = jnp.arange(self.period, dtype=jnp.int32)
+        return jax.vmap(self.rate)(ts).mean(0)
+
+    def sample(self, rng: jax.Array, state):
+        x = jax.random.bernoulli(rng, self.rate(state)).astype(jnp.float32)
+        return x, state + 1
+
+
+@dataclass(frozen=True)
+class RegionalOutageVolatility:
+    """Correlated regional outages: a shared per-region Gilbert-Elliott latent
+    factor crossed with per-client noise.
+
+    Each of ``n_regions`` regions carries a 2-state up/down chain (up->down
+    w.p. ``p_fail``, down->up w.p. ``p_recover``); while a client's region is
+    down its success rate collapses to ``rho * (1 - severity)``.  Failures
+    within a region are therefore strongly correlated — the regime FedCS-style
+    deadline schedulers and Oort's utility selection are stress-tested on.
+    State is the (n_regions,) up/down vector (init: all up).
+    """
+
+    rho: jnp.ndarray  # (K,) base success rates
+    region: jnp.ndarray  # (K,) int32 region ids in [0, n_regions)
+    n_regions: int
+    p_fail: float = 0.02
+    p_recover: float = 0.25
+    severity: float = 0.9
+
+    def init_state(self):
+        return jnp.ones((self.n_regions,), jnp.float32)
+
+    def availability(self) -> float:
+        """Stationary P(region up) of the Gilbert-Elliott chain."""
+        return self.p_recover / (self.p_fail + self.p_recover)
+
+    def marginal_rate(self) -> jnp.ndarray:
+        a = self.availability()
+        return self.rho * (a + (1.0 - a) * (1.0 - self.severity))
+
+    def sample(self, rng: jax.Array, state):
+        r_reg, r_cli = jax.random.split(rng)
+        p_up = state * (1.0 - self.p_fail) + (1.0 - state) * self.p_recover
+        up = jax.random.bernoulli(r_reg, p_up).astype(jnp.float32)
+        factor = up[self.region]  # (K,)
+        rate = self.rho * (1.0 - self.severity * (1.0 - factor))
+        x = jax.random.bernoulli(r_cli, rate).astype(jnp.float32)
+        return x, up
+
+
+@dataclass(frozen=True)
+class FlashCrowdVolatility:
+    """Flash-crowd churn: a cohort surges in for a window, then churns away.
+
+    Clients with ``crowd == 1`` sit at ``base_avail`` outside the window
+    ``[t_start, t_end)``; at ``t_start`` they all arrive (availability
+    ``peak``) and each round of the window they independently leave for good
+    w.p. ``churn`` — the classic arrive-together/decay-out shape of event
+    traffic.  Non-crowd clients keep their static ``rho``.  State is the
+    (K,) still-present vector plus the round index.
+    """
+
+    rho: jnp.ndarray  # (K,) base rates (used for non-crowd clients)
+    crowd: jnp.ndarray  # (K,) {0,1} flash-crowd membership
+    t_start: int
+    t_end: int
+    churn: float = 0.05
+    base_avail: float = 0.1
+    peak: float = 0.95
+
+    def init_state(self):
+        return jnp.ones(self.rho.shape, jnp.float32), jnp.zeros((), jnp.int32)
+
+    def marginal_rate(self) -> jnp.ndarray:
+        # crowd clients spend most of a long horizon outside the window
+        return jnp.where(self.crowd > 0, self.base_avail, self.rho)
+
+    def sample(self, rng: jax.Array, state):
+        alive, t = state
+        r_x, r_leave = jax.random.split(rng)
+        in_w = ((t >= self.t_start) & (t < self.t_end)).astype(jnp.float32)
+        alive = jnp.where(t == self.t_start, jnp.ones_like(alive), alive)
+        crowd_rate = in_w * (alive * self.peak + (1.0 - alive) * self.base_avail) + (1.0 - in_w) * self.base_avail
+        rate = jnp.where(self.crowd > 0, crowd_rate, self.rho)
+        x = jax.random.bernoulli(r_x, rate).astype(jnp.float32)
+        leave = jax.random.bernoulli(r_leave, jnp.full(alive.shape, self.churn)).astype(jnp.float32) * in_w
+        alive = alive * (1.0 - leave)
+        return x, (alive, t + 1)
