@@ -1,0 +1,152 @@
+"""Async-engine benchmark: staleness-aware scan rounds at scale and the
+compiled steady-state serving loop vs the per-tick host loop.
+
+Rows (name,us_per_call,derived):
+  async/scan/K=...        — whole-horizon async engine (CompletionLag outcome
+                            draw, S-round staleness ring, lean outputs);
+                            derived carries rounds/sec, the sync lean
+                            baseline, and the recovered effective
+                            participation (staleness-aware CEP vs on-time)
+  async/overhead/K=...    — S=0 BinaryLag async runner vs the legacy sync
+                            runner: the price of the generalised round body
+                            when the buffer is disabled (should be ~1x)
+  async/serve/J=...       — compiled lax.scan service loop (sync and async)
+                            vs the per-tick host loop, ticks/sec
+
+The full protocol (no ``--smoke``) runs the K=1e6, T=2500 lean-mode horizon
+at S=2 on one CPU host — the acceptance scale.
+
+CLI:  python benchmarks/async_bench.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+try:
+    from .common import emit, save_json
+except ImportError:  # running as a script: python benchmarks/async_bench.py
+    from common import emit, save_json
+
+from repro.configs.base import FLConfig
+from repro.core.volatility import BinaryLag, CompletionLag, make_volatility, paper_success_rates
+from repro.engine.scan_sim import build_scan_runner
+from repro.launch.select_serve import run_service, run_service_compiled
+
+
+def _time_runner(run, state0, key, xs_in, reps: int = 3):
+    jax.block_until_ready(run(state0, key, xs_in)[0].sel_counts)  # compile
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = run(state0, key, xs_in)
+        jax.block_until_ready(out[0].sel_counts)
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def bench_async_scan(K_list, T: int, S: int, alpha: float, out: dict, reps: int = 3):
+    rows = {}
+    for K in K_list:
+        k = max(1, K // 50)
+        rho = jnp.asarray(paper_success_rates(K))
+        fl = FLConfig(K=K, k=k, rounds=T, scheme="e3cs", quota="const", quota_frac=0.5)
+        xs_in = jnp.zeros((T, 0), jnp.float32)
+        key = jax.random.PRNGKey(0)
+
+        lag = CompletionLag(make_volatility("bernoulli", rho), p_late=0.7, lag_decay=0.5, max_lag=S)
+        run_a, st_a = build_scan_runner(fl, lag, rho, outputs="lean", staleness=S, alpha=alpha)
+        async_s, aout = _time_runner(run_a, st_a, key, xs_in, reps)
+        state = aout[0]
+        acep, on_time = float(state.cep), float(state.succ_hist)
+
+        sync_vol = make_volatility("bernoulli", rho)
+        run_s, st_s = build_scan_runner(fl, sync_vol, rho, outputs="lean")
+        sync_s, _ = _time_runner(run_s, st_s, key, xs_in, reps)
+
+        recovered = (acep - on_time) / max(on_time, 1.0)
+        derived = (
+            f"T={T};S={S};rounds_per_s={T / async_s:.1f};sync_rounds_per_s={T / sync_s:.1f}"
+            f";stale_recovered_frac={recovered:.3f}"
+        )
+        rows[K] = {
+            "T": T, "k": k, "S": S, "alpha": alpha,
+            "async_s": async_s, "rounds_per_s": T / async_s,
+            "sync_s": sync_s, "sync_rounds_per_s": T / sync_s,
+            "async_cep": acep, "on_time": on_time, "stale_recovered_frac": recovered,
+        }
+        emit(f"async/scan/K={K}", async_s / T * 1e6, derived)
+    out["scan"] = rows
+    return rows
+
+
+def bench_overhead(K: int, T: int, out: dict, reps: int = 3):
+    """S=0 BinaryLag vs the legacy sync runner: same semantics, same bits —
+    the async round body must not tax the synchronous configuration."""
+    k = max(1, K // 50)
+    rho = jnp.asarray(paper_success_rates(K))
+    fl = FLConfig(K=K, k=k, rounds=T, scheme="e3cs", quota="const", quota_frac=0.5)
+    xs_in = jnp.zeros((T, 0), jnp.float32)
+    key = jax.random.PRNGKey(0)
+
+    run_b, st_b = build_scan_runner(
+        fl, BinaryLag(make_volatility("bernoulli", rho)), rho, outputs="lean", staleness=0
+    )
+    s0_s, _ = _time_runner(run_b, st_b, key, xs_in, reps)
+    run_s, st_s = build_scan_runner(fl, make_volatility("bernoulli", rho), rho, outputs="lean")
+    sync_s, _ = _time_runner(run_s, st_s, key, xs_in, reps)
+    ratio = s0_s / sync_s
+    out["overhead"] = {"K": K, "T": T, "s0_s": s0_s, "sync_s": sync_s, "ratio": ratio}
+    emit(f"async/overhead/K={K}", s0_s / T * 1e6, f"T={T};vs_sync_ratio={ratio:.2f}")
+    return ratio
+
+
+def bench_serve(J: int, K_max: int, rounds: int, S: int, out: dict):
+    host = run_service(J=J, K_max=K_max, rounds=rounds, seed=0)
+    sync = run_service_compiled(J=J, K_max=K_max, rounds=rounds, seed=0, staleness=0)
+    asyn = run_service_compiled(J=J, K_max=K_max, rounds=rounds, seed=0, staleness=S)
+    speed_sync = sync["ticks_per_s"] / host["ticks_per_s"]
+    speed_async = asyn["ticks_per_s"] / host["ticks_per_s"]
+    out["serve"] = {"host": host, "compiled_sync": sync, "compiled_async": asyn,
+                    "speedup_sync": speed_sync, "speedup_async": speed_async}
+    emit(
+        f"async/serve/J={J}",
+        asyn["tick_us"],
+        f"K_max={K_max};ticks_per_s={asyn['ticks_per_s']};host_ticks_per_s={host['ticks_per_s']}"
+        f";speedup_vs_host={speed_async:.1f}x;sync_speedup={speed_sync:.1f}x",
+    )
+    return speed_async
+
+
+def run(smoke: bool = False):
+    out = {}
+    if smoke:
+        bench_async_scan([10_000], T=128, S=2, alpha=0.5, out=out)
+        bench_overhead(K=10_000, T=128, out=out)
+        bench_serve(J=4, K_max=512, rounds=10, S=2, out=out)
+    else:
+        # acceptance scale: the full K=1e6 x T=2500 horizon, S=2, on one host
+        bench_async_scan([100_000, 1_000_000], T=2500, S=2, alpha=0.5, out=out, reps=1)
+        bench_overhead(K=100_000, T=500, out=out)
+        bench_serve(J=8, K_max=65_536, rounds=30, S=2, out=out)
+    save_json("async", out)
+    if out["overhead"]["ratio"] > 1.5:
+        print(f"async,0,WARN:s0_overhead_{out['overhead']['ratio']:.2f}x_above_1.5x", flush=True)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="reduced CPU/CI protocol")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, ".")
+    main()

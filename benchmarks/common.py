@@ -12,8 +12,6 @@ import os
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 RESULTS = os.environ.get("REPRO_BENCH_OUT", "results/bench")
 QUICK = os.environ.get("REPRO_BENCH_QUICK", "1") == "1"

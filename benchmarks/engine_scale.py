@@ -43,7 +43,10 @@ def bench_sim(T: int, out: dict):
     selection_sim_loop("e3cs", K=100, k=20, T=T, frac=0.5)
     loop_s = time.perf_counter() - t0
     speedup = loop_s / scan_s
-    out["sim"] = {"T": T, "scan_s": scan_s, "scan_with_compile_s": scan_total, "loop_s": loop_s, "speedup": speedup}
+    out["sim"] = {
+        "T": T, "scan_s": scan_s, "scan_with_compile_s": scan_total, "loop_s": loop_s,
+        "speedup": speedup, "scan_rounds_per_s": T / scan_s,
+    }
     emit("engine/scan_sim", scan_s / T * 1e6, f"T={T};speedup_vs_loop={speedup:.1f}x")
     emit("engine/loop_sim", loop_s / T * 1e6, f"T={T}")
     return speedup

@@ -4,7 +4,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from repro.core.fairness import class_selection_stats, jain_index
 from repro.core.sim import selection_sim

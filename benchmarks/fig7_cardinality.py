@@ -3,7 +3,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from repro.core.sim import selection_sim
 

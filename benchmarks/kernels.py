@@ -28,7 +28,6 @@ def run():
     err = float(jnp.abs(o - o_ref).max())
     us_k = time_fn(lambda: ops.flash_attention(q, k, v, block_q=64, block_k=64), iters=3, warmup=1)
     us_r = time_fn(lambda: ref.flash_attention_ref(q, k, v), iters=3, warmup=1)
-    ai = 2 * S / (2 + 2 * KV / H)  # flops/byte vs naive S^2 materialisation
     out["flash_attention"] = {"max_err": err, "us_interpret": us_k, "us_ref": us_r}
     emit("kernel/flash_attention", us_k, f"err={err:.1e};ref_us={us_r:.0f}")
 

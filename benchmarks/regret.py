@@ -9,7 +9,6 @@ import numpy as np
 
 from repro.core.selection import regret, theorem1_bound, theorem1_eta
 from repro.core.sim import selection_sim
-from repro.core.volatility import paper_success_rates
 
 from .common import QUICK, emit, save_json
 

@@ -10,7 +10,7 @@ import traceback
 
 
 def main() -> None:
-    from . import engine_scale, fig3_selection, fig4_cep, fig7_cardinality, inclusion, kernels, regret, roofline, scenarios_bench, table_training
+    from . import async_bench, engine_scale, fig3_selection, fig4_cep, fig7_cardinality, inclusion, kernels, regret, roofline, scenarios_bench, table_training
 
     quick = os.environ.get("REPRO_BENCH_QUICK", "1") == "1"
     benches = {
@@ -24,6 +24,7 @@ def main() -> None:
         "tables": table_training.run,
         "engine": lambda: engine_scale.run(smoke=quick),
         "scenarios": lambda: scenarios_bench.run(smoke=quick),
+        "async": lambda: async_bench.run(smoke=quick),
     }
     only = os.environ.get("REPRO_BENCH_ONLY")
     names = only.split(",") if only else list(benches)

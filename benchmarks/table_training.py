@@ -13,7 +13,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import FLConfig, get_config
 from repro.data import ClientStore, make_image_dataset, partition_iid, partition_primary_label

@@ -1,0 +1,127 @@
+#!/usr/bin/env python
+"""Bench regression gate: compare the smoke ``BENCH_*.json`` results against a
+baseline and fail on throughput regressions.
+
+Usage:
+    python scripts/check_bench.py [--results results/bench]
+                                  [--baseline results/bench/baseline]
+                                  [--tolerance 0.30] [--soft] [--update]
+
+For every ``BENCH_<name>.json`` present in both trees, every numeric leaf
+whose key looks like a throughput (``*_per_s``, ``ticks_per_s``, ``speedup*``)
+is compared at its dotted path; the gate fails (exit 1) when
+``new < baseline * (1 - tolerance)`` for any of them.  Latency-like keys are
+deliberately ignored — only "bigger is better" metrics gate.
+
+* ``--update`` copies the current results over the baseline (CI does this on
+  pushes to main, then saves the baseline to the actions cache; the committed
+  ``results/bench/baseline/`` seeds the very first comparison).
+* ``--soft`` reports regressions but exits 0 — used when the baseline came
+  from a different machine (the committed seed) rather than the CI cache, so
+  hardware deltas don't fail PRs.
+* env ``BENCH_GATE_TOL`` overrides the default 30% tolerance.
+
+Files without a baseline counterpart are skipped with a note, so adding a new
+benchmark never fails the gate before its first baseline lands on main.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+THROUGHPUT_KEYS = ("_per_s", "ticks_per_s", "rounds_per_s")
+# speedup_* ratios compound the noise of two measurements, and the .host.
+# reference timings inside the async serve report are a baseline for the
+# compiled path, not a gated product — both flap on shared CI runners
+EXCLUDE_PATH_PARTS = (".host.", "speedup")
+
+
+def is_throughput_key(key: str) -> bool:
+    return any(pat in key for pat in THROUGHPUT_KEYS)
+
+
+def numeric_leaves(obj, prefix=""):
+    """Yield (dotted_path, value) for numeric leaves under throughput keys."""
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            yield from numeric_leaves(v, f"{prefix}.{k}" if prefix else str(k))
+    elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        if is_throughput_key(prefix.rsplit(".", 1)[-1]) and not any(p in prefix for p in EXCLUDE_PATH_PARTS):
+            yield prefix, float(obj)
+
+
+def compare_file(name: str, new_path: str, base_path: str, tol: float):
+    with open(new_path) as f:
+        new = json.load(f)
+    with open(base_path) as f:
+        base = json.load(f)
+    new_leaves = dict(numeric_leaves(new))
+    regressions, improvements, checked = [], [], 0
+    for path, base_v in numeric_leaves(base):
+        if path not in new_leaves or base_v <= 0:
+            continue
+        checked += 1
+        new_v = new_leaves[path]
+        ratio = new_v / base_v
+        if new_v < base_v * (1.0 - tol):
+            regressions.append((path, base_v, new_v, ratio))
+        elif ratio > 1.0 + tol:
+            improvements.append((path, base_v, new_v, ratio))
+    return checked, regressions, improvements
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--results", default=os.environ.get("REPRO_BENCH_OUT", "results/bench"))
+    ap.add_argument("--baseline", default=None, help="default: <results>/baseline")
+    ap.add_argument("--tolerance", type=float, default=float(os.environ.get("BENCH_GATE_TOL", "0.30")))
+    ap.add_argument("--soft", action="store_true", help="report regressions but exit 0")
+    ap.add_argument("--update", action="store_true", help="copy current results over the baseline")
+    args = ap.parse_args()
+    baseline = args.baseline or os.path.join(args.results, "baseline")
+
+    names = sorted(
+        f for f in (os.listdir(args.results) if os.path.isdir(args.results) else [])
+        if f.startswith("BENCH_") and f.endswith(".json")
+    )
+    if not names:
+        print(f"check_bench: no BENCH_*.json under {args.results}; nothing to do")
+        return 0
+
+    if args.update:
+        os.makedirs(baseline, exist_ok=True)
+        for f in names:
+            shutil.copy2(os.path.join(args.results, f), os.path.join(baseline, f))
+        print(f"check_bench: baseline updated with {len(names)} file(s): {', '.join(names)}")
+        return 0
+
+    any_regression = False
+    for f in names:
+        base_path = os.path.join(baseline, f)
+        if not os.path.exists(base_path):
+            print(f"check_bench: {f}: no baseline yet, skipping")
+            continue
+        checked, regs, imps = compare_file(f, os.path.join(args.results, f), base_path, args.tolerance)
+        status = "OK" if not regs else "REGRESSION"
+        print(f"check_bench: {f}: {checked} metric(s) checked, {status}")
+        for path, b, n, r in regs:
+            any_regression = True
+            print(f"  REGRESSION {path}: {b:.1f} -> {n:.1f} ({r:.2f}x, tolerance {1 - args.tolerance:.2f}x)")
+        for path, b, n, r in imps:
+            print(f"  improved   {path}: {b:.1f} -> {n:.1f} ({r:.2f}x)")
+
+    if any_regression and args.soft:
+        print("check_bench: regressions found, but --soft set (cross-machine baseline) — not failing")
+        return 0
+    if any_regression:
+        print(f"check_bench: FAILED — throughput regressed by more than {args.tolerance:.0%}")
+        return 1
+    print("check_bench: all gated metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

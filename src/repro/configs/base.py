@@ -5,9 +5,8 @@ reduced *smoke* variants derived mechanically from any full config.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
-from typing import Dict, Optional, Sequence, Tuple
+from dataclasses import dataclass, replace
+from typing import Dict, Optional, Tuple
 
 __all__ = [
     "ModelConfig",
@@ -193,8 +192,13 @@ class FLConfig:
     momentum: float = 0.9
     # aggregation (o2)
     aggregation: str = "fedavg"  # fedavg (data-size weighted) | mean | epoch_weighted
+    # async rounds: late-but-alive updates kept for S rounds, credited alpha**lag
+    staleness_rounds: int = 0  # S: staleness buffer depth; 0 = sync deadline drop
+    staleness_alpha: float = 0.5  # decay per round of lag
+    late_prob: float = 0.7  # P(a missed-deadline client still completes)
+    lag_decay: float = 0.5  # geometric lag tail: P(one more round) = 1 - lag_decay
     # volatility
-    volatility: str = "bernoulli"  # bernoulli | markov | deadline
+    volatility: str = "bernoulli"  # builtin (bernoulli | markov | deadline) or a repro.scenarios name
     success_rates: Tuple[float, ...] = (0.1, 0.3, 0.6, 0.9)
     markov_stickiness: float = 0.8
     # data
@@ -230,7 +234,6 @@ def register(cfg: ModelConfig) -> ModelConfig:
 
 def get_config(name: str) -> ModelConfig:
     # import registers all known archs lazily
-    from repro import configs as _c  # noqa: F401
 
     if name not in _REGISTRY:
         raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
@@ -238,7 +241,6 @@ def get_config(name: str) -> ModelConfig:
 
 
 def list_archs():
-    from repro import configs as _c  # noqa: F401
 
     return sorted(_REGISTRY)
 

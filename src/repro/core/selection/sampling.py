@@ -17,7 +17,6 @@ million-client scale.
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -14,10 +14,32 @@ The paper simulates ``x_{i,t} ~ Bern(rho_i)`` with four client classes
 
 All generators are pure: ``x = model.sample(rng, t)`` returns the full (K,)
 bit-vector for round t (the scheduler only ever observes selected entries).
+
+Async extension: the paper's deadline mechanism treats "past the deadline" as
+"dead", but production FL aggregates late-but-alive updates with a staleness
+decay instead.  The *lag models* here generalise the success bit to a
+completion lag, in the same ``(init_state, sample)`` protocol (so they carry
+through ``engine.scan_sim``'s ``lax.scan`` and compose with every scenario
+generator):
+
+* ``sample`` returns a (K,) **int32 lag vector** instead of float bits:
+  ``0`` = completed within the deadline (the old ``x=1``), ``l >= 1`` =
+  completes ``l`` rounds late, ``DEAD_LAG`` (= -1) = never completes.
+* ``BinaryLag`` wraps any success-bit model 1:1 (``x=1 -> 0``, ``x=0 ->
+  DEAD_LAG``) and consumes *exactly* the base model's randomness, so the
+  async engine with a ``BinaryLag`` reproduces the synchronous engine
+  bit-for-bit at any buffer depth.
+* ``CompletionLag`` is the generative model: a client that misses the
+  deadline still completes with probability ``p_late``, after ``1 +
+  Geometric(lag_decay)`` rounds (truncated at ``max_lag``); otherwise it is
+  dead, which recovers the paper's drop semantics as ``p_late -> 0``.
+* ``OnTimeBits`` is the inverse adapter: the success-bit view ``x = 1{lag ==
+  0}`` of any lag model, consuming the lag model's randomness — the S=0
+  synchronous reference for the async engine.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Tuple
 
 import jax
@@ -31,7 +53,13 @@ __all__ = [
     "BernoulliVolatility",
     "MarkovVolatility",
     "DeadlineVolatility",
+    "DEAD_LAG",
+    "BinaryLag",
+    "CompletionLag",
+    "OnTimeBits",
 ]
+
+DEAD_LAG = -1  # lag value of a client that never completes
 
 
 def paper_success_rates(K: int, rates=(0.1, 0.3, 0.6, 0.9), remainder: str = "stable") -> np.ndarray:
@@ -188,3 +216,87 @@ class DeadlineVolatility:
         ok_time = (t_i <= self.deadline).astype(jnp.float32)
         ok_net = (~jax.random.bernoulli(r_n, self.p_net_fail)).astype(jnp.float32)
         return ok_time * ok_net, state
+
+
+@dataclass(frozen=True)
+class BinaryLag:
+    """Degenerate lag view of a success-bit model: on time iff ``x=1``, dead
+    otherwise.  No extra randomness is drawn — ``rng`` goes straight to the
+    base model — so the async engine driven by a ``BinaryLag`` is bit-identical
+    to the synchronous engine driven by ``base`` (pinned in tests)."""
+
+    base: object  # any (init_state, sample) success-bit model
+
+    @property
+    def rho(self):
+        return getattr(self.base, "rho", None)
+
+    def init_state(self):
+        return self.base.init_state()
+
+    def sample(self, rng: jax.Array, state):
+        x, vs = self.base.sample(rng, state)
+        return jnp.where(x > 0, 0, DEAD_LAG).astype(jnp.int32), vs
+
+
+@dataclass(frozen=True)
+class CompletionLag:
+    """Completion-lag draw over any success-bit model.
+
+    ``base.sample`` decides who finishes within the deadline (``lag=0``, the
+    paper's ``x=1``).  A client that misses it is not necessarily dead: with
+    probability ``p_late`` it still completes, ``1 + Geometric(lag_decay)``
+    rounds late (truncated at ``max_lag``); otherwise ``DEAD_LAG``.  Because
+    the on-time set is exactly ``base``'s success set, the marginal on-time
+    rate stays the base model's ``rho`` and ``p_late -> 0`` recovers the
+    paper's synchronous drop semantics.
+    """
+
+    base: object  # any (init_state, sample) success-bit model
+    p_late: float = 0.7
+    lag_decay: float = 0.5  # P(one more round late) = 1 - lag_decay
+    max_lag: int = 4
+
+    @property
+    def rho(self):
+        return getattr(self.base, "rho", None)
+
+    def on_time_model(self) -> "OnTimeBits":
+        """The sync-drop view of this model (for S=0 equivalence tests)."""
+        return OnTimeBits(self)
+
+    def init_state(self):
+        return self.base.init_state()
+
+    def sample(self, rng: jax.Array, state):
+        r_base, r_late, r_lag = jax.random.split(rng, 3)
+        x, vs = self.base.sample(r_base, state)
+        late = jax.random.bernoulli(r_late, jnp.full(x.shape, self.p_late, jnp.float32))
+        u = jax.random.uniform(r_lag, x.shape, minval=1e-7, maxval=1.0)
+        extra = jnp.floor(jnp.log(u) / jnp.log1p(-min(self.lag_decay, 1.0 - 1e-7))).astype(jnp.int32)
+        lag_late = 1 + jnp.clip(extra, 0, self.max_lag - 1)
+        lag = jnp.where(x > 0, 0, jnp.where(late, lag_late, DEAD_LAG))
+        return lag.astype(jnp.int32), vs
+
+
+@dataclass(frozen=True)
+class OnTimeBits:
+    """Success-bit view of a lag model: ``x = 1{lag == 0}``.
+
+    Consumes the lag model's randomness verbatim, so a synchronous run under
+    this model is the exact S=0 reference for the async engine under
+    ``lag_model`` — same PRNG keys, same on-time sets.
+    """
+
+    lag_model: object
+
+    @property
+    def rho(self):
+        return getattr(self.lag_model, "rho", None)
+
+    def init_state(self):
+        return self.lag_model.init_state()
+
+    def sample(self, rng: jax.Array, state):
+        lag, vs = self.lag_model.sample(rng, state)
+        return (lag == 0).astype(jnp.float32), vs

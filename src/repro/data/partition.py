@@ -9,7 +9,7 @@ Each client reserves 10% of its shard for local testing, as in the paper.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import List
 
 import numpy as np
 

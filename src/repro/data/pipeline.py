@@ -11,7 +11,7 @@ non-iid) and emits (k, n_steps, B, S) token blocks.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Sequence
 
 import numpy as np
 

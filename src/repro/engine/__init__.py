@@ -7,7 +7,7 @@ Sub-modules:
 
 See ``README.md`` in this directory for the API and scaling model.
 """
-from .scan_sim import build_scan_runner, make_sim_step, scan_selection_sim
+from .scan_sim import async_selection_sim, build_scan_runner, make_sim_step, scan_selection_sim
 from .sharded import prob_alloc_sharded
 from .multi_job import (
     MultiJobConfig,
@@ -18,6 +18,7 @@ from .multi_job import (
 )
 
 __all__ = [
+    "async_selection_sim",
     "build_scan_runner",
     "make_sim_step",
     "scan_selection_sim",

@@ -26,6 +26,19 @@ Volatility inside the scan comes in three flavours, picked by ``override``:
   smaller; K=1e6, T=2500 fits in ~312 MB) and expanded row-by-row inside the
   scan body by ``repro.kernels.unpack_bits`` — selections are bit-identical
   to the dense path (``tests/test_scenarios.py``).
+
+Async rounds (``staleness=S``): per-round outcomes generalise from binary
+success/fail to a *completion lag* drawn by a lag model
+(``repro.core.volatility.CompletionLag`` / ``BinaryLag`` — same
+``(init_state, sample)`` protocol, int32 lags).  A bounded ring of ``S``
+pending rounds rides in the scan carry: a client selected at round t that
+completes ``l`` rounds late (``1 <= l <= S``) is credited at round ``t+l``
+with decay weight ``alpha**l`` instead of being dropped; lag beyond ``S`` (or
+``DEAD_LAG``) is dropped exactly like today.  The selector keeps the paper's
+deadline-based feedback (it observes the on-time bits ``1{lag==0}`` — the
+server cannot wait for stragglers before choosing the next cohort), so with
+``S=0`` — or with a ``BinaryLag`` at any S — selections, counts and E3CS
+weights are **bit-identical** to the synchronous path (``tests/test_async.py``).
 """
 from __future__ import annotations
 
@@ -42,13 +55,50 @@ from repro.core.volatility import make_volatility, paper_success_rates
 from repro.fl.round import init_server_state, make_select_fn
 from repro.kernels.unpack_bits import unpack_bits
 
-__all__ = ["make_sim_step", "build_scan_runner", "scan_selection_sim"]
+__all__ = [
+    "make_sim_step",
+    "build_scan_runner",
+    "scan_selection_sim",
+    "async_selection_sim",
+    "staleness_ring_step",
+]
+
+
+def staleness_ring_step(pending, mask, lag, S: int, alpha: float):
+    """One update of the bounded staleness ring; returns ``(arriving,
+    new_pending)``.
+
+    ``pending`` is ``(..., S, K)`` — slot s holds the decayed credit arriving
+    s rounds from now; ``mask`` / ``lag`` are ``(..., K)`` (any leading batch
+    axes, e.g. the multi-job J axis).  Pops slot 0 (this round's arrivals),
+    shifts, and pushes the newly selected late completions (``1 <= lag <= S``)
+    with credit ``alpha**lag`` into their arrival slots.  The single source of
+    the ring semantics for both the scan engine and the compiled service loop.
+    """
+    if S == 0:
+        return jnp.zeros_like(mask), pending
+    decay = jnp.asarray([alpha ** (s + 1) for s in range(S)], jnp.float32)
+    lag_rows = jnp.arange(1, S + 1, dtype=jnp.int32)
+    sched = mask[..., None, :] * (lag[..., None, :] == lag_rows[:, None]) * decay[:, None]
+    arriving = pending[..., 0, :]
+    shifted = jnp.concatenate(
+        [pending[..., 1:, :], jnp.zeros_like(pending[..., :1, :])], axis=-2
+    )
+    return arriving, shifted + sched
 
 _OVERRIDE_MODES = ("none", "dense", "packed")
 
 
 def make_sim_step(
-    fl: FLConfig, quota_fn, vol, rho, use_override=False, override: Optional[str] = None, lean: bool = False
+    fl: FLConfig,
+    quota_fn,
+    vol,
+    rho,
+    use_override=False,
+    override: Optional[str] = None,
+    lean: bool = False,
+    staleness: Optional[int] = None,
+    alpha: float = 0.5,
 ):
     """Build the per-round scan body ``step((state, key), x_over) -> ...``.
 
@@ -60,12 +110,27 @@ def make_sim_step(
     cumulative counts stay bit-identical while scan outputs drop from
     O(T*K) to O(T), which is what makes the full T=2500 horizon feasible at
     K=1e6 (full outputs would be ~10 GB per (T, K) float32 array).
+
+    With ``staleness=S`` (an int, 0 allowed) the step becomes the *async*
+    round body: ``vol`` must be a lag model (int32 lags, see
+    ``repro.core.volatility.CompletionLag``), the carry gains a ``(S, K)``
+    pending-credit ring, and the step returns
+    ``((state, key, pending), out)`` where ``out`` is ``(on_time, stale,
+    sigma)`` per round when lean or ``(mask, lag, p, sigma, arriving)`` when
+    full.  ``state.cep`` accumulates the staleness-aware effective
+    participation (on-time + decayed late credit) and ``state.succ_hist`` the
+    on-time part, so lean runs keep both without O(T*K) outputs.
     """
     mode = override if override is not None else ("dense" if use_override else "none")
     if mode not in _OVERRIDE_MODES:
         raise ValueError(f"unknown override mode {mode!r} (want one of {_OVERRIDE_MODES})")
     select = make_select_fn(fl, quota_fn, rho)
     K, k, scheme = fl.K, fl.k, fl.scheme
+
+    if staleness is not None:
+        if mode != "none":
+            raise ValueError("async rounds (staleness != None) need a stateful lag model, not a trace override")
+        return _make_async_sim_step(fl, select, vol, int(staleness), alpha, lean)
 
     def step(carry, x_over):
         state, key = carry
@@ -95,7 +160,50 @@ def make_sim_step(
     return step
 
 
-def build_scan_runner(fl: FLConfig, vol, rho, override: str = "none", outputs: str = "full"):
+def _make_async_sim_step(fl: FLConfig, select, lag_model, S: int, alpha: float, lean: bool):
+    """The async round body (see ``make_sim_step``).  Same PRNG discipline as
+    the sync step — ``split(key, 3)`` per round, ``k2`` to the lag model — so
+    a ``BinaryLag`` (which forwards ``k2`` verbatim to its base model)
+    reproduces the synchronous masks/weights bit-for-bit at any S."""
+    K, k, scheme = fl.K, fl.k, fl.scheme
+
+    def step(carry, _):
+        state, key, pending = carry
+        key, k1, k2 = jax.random.split(key, 3)
+        idx, p, capped, sigma = select(state, k1)
+        lag, vs = lag_model.sample(k2, state.vol_state)
+        mask = selection_mask(idx, K)
+        x = (lag == 0).astype(jnp.float32)  # deadline-based selector feedback
+        e3cs = state.e3cs
+        if scheme == "e3cs":
+            e3cs = e3cs_update(state.e3cs, p, capped, mask, x, k, sigma, fl.eta)
+        loss_cache = jnp.where(mask > 0, 1.0 - x, state.loss_cache)  # pow-d loss proxy
+        ucb = state.ucb
+        if scheme == "ucb":
+            ucb = ucb_update(state.ucb, idx, x)
+        arriving, pending = staleness_ring_step(pending, mask, lag, S, alpha)
+        on_time = jnp.vdot(mask, x)
+        stale = jnp.sum(arriving)
+        state = state._replace(
+            e3cs=e3cs, ucb=ucb, vol_state=vs, t=state.t + 1,
+            sel_counts=state.sel_counts + mask, loss_cache=loss_cache,
+            cep=state.cep + on_time + stale, succ_hist=state.succ_hist + on_time,
+        )
+        out = (on_time, stale, sigma) if lean else (mask, lag, p, sigma, arriving)
+        return (state, key, pending), out
+
+    return step
+
+
+def build_scan_runner(
+    fl: FLConfig,
+    vol,
+    rho,
+    override: str = "none",
+    outputs: str = "full",
+    staleness: Optional[int] = None,
+    alpha: float = 0.5,
+):
     """Compile a whole-horizon runner for an arbitrary volatility model.
 
     Returns ``(run, state0)``, jitted over ``fl.rounds`` rounds:
@@ -114,6 +222,21 @@ def build_scan_runner(fl: FLConfig, vol, rho, override: str = "none", outputs: s
     program.  ``xs_in`` is ``(T, 0)`` for ``override="none"``, the float32
     trace for ``"dense"``, or the uint8 bit-packed trace for ``"packed"``.
 
+    With ``staleness=S`` (int >= 0) the runner compiles the *async* round
+    body instead: ``vol`` must be a lag model, a ``(S, K)`` pending-credit
+    ring (initialised to zero inside the program) rides in the scan carry,
+    and the signatures become
+
+    * full — ``run(state, key, xs_in) -> (state, masks, lags, ps, sigmas,
+      arrived)`` where ``arrived[t]`` is the (K,) decayed late credit landing
+      at round t;
+    * lean — ``run(state, key, xs_in) -> (state, on_time, stale, sigmas)``
+      with only (T,) scalars; the staleness-aware CEP accumulates in
+      ``state.cep`` (``state.succ_hist`` keeps the on-time part).
+
+    ``S=0`` reproduces today's synchronous drop semantics exactly (late work
+    is never credited), and the program stays free of any (S, K) buffer.
+
     Unlike ``scan_selection_sim`` this builder is not memoised: hold on to the
     returned ``run`` to amortise compilation across repeat calls (the
     scenario harness and benchmarks do).
@@ -123,9 +246,24 @@ def build_scan_runner(fl: FLConfig, vol, rho, override: str = "none", outputs: s
     lean = outputs == "lean"
     rho = jnp.asarray(rho, jnp.float32)
     quota_fn = make_quota_schedule(fl.quota, fl.k, fl.K, fl.rounds, fl.quota_frac)
-    step = make_sim_step(fl, quota_fn, vol, rho, override=override, lean=lean)
+    step = make_sim_step(fl, quota_fn, vol, rho, override=override, lean=lean, staleness=staleness, alpha=alpha)
     state0 = init_server_state({}, fl.K, vol.init_state())
     T = fl.rounds
+
+    if staleness is not None:
+        S = int(staleness)
+
+        @jax.jit
+        def run_async(state, key, xs_in):
+            pending = jnp.zeros((S, fl.K), jnp.float32)
+            (state, _, _), out = jax.lax.scan(step, (state, key, pending), None, length=T)
+            if lean:
+                on_time, stale, sigmas = out
+                return state, on_time, stale, sigmas
+            masks, lags, ps, sigmas, arrived = out
+            return state, masks, lags, ps, sigmas, arrived
+
+        return run_async, state0
 
     @jax.jit
     def run(state, key, xs_in):
@@ -204,3 +342,72 @@ def scan_selection_sim(
         "sigmas": np.asarray(sigmas),
         "counts": masks.sum(0),
     }
+
+
+def async_selection_sim(
+    scheme: str,
+    K: int = 100,
+    k: int = 20,
+    T: int = 2500,
+    quota: str = "const",
+    frac: float = 0.0,
+    eta: float = 0.5,
+    sampler: str = "plackett_luce",
+    volatility: str = "bernoulli",
+    stickiness: float = 0.8,
+    seed: int = 0,
+    staleness: int = 2,
+    alpha: float = 0.5,
+    p_late: float = 0.7,
+    lag_decay: float = 0.5,
+    lag_model=None,
+    rho=None,
+    outputs: str = "full",
+) -> Dict[str, np.ndarray]:
+    """Whole-horizon *async* numerical experiment: completion-lag outcomes,
+    bounded staleness buffer of ``staleness`` rounds, late credit
+    ``alpha**lag``.
+
+    ``lag_model`` is any ``(init_state, sample)`` lag implementer (e.g.
+    ``CompletionLag`` over a scenario generator); by default the named
+    ``volatility`` model is wrapped in ``CompletionLag(p_late, lag_decay,
+    max_lag=max(staleness, 1))``.  Returns per-round ``on_time`` / ``stale``
+    credit, the staleness-aware ``cep`` (= on_time + stale, accumulated in
+    the carried state so it is exact in lean mode too), and — in full mode —
+    the (T, K) masks and lags.
+    """
+    from repro.core.volatility import CompletionLag  # local: avoid cycles at import time
+
+    fl = FLConfig(K=K, k=k, rounds=T, scheme=scheme, quota=quota, quota_frac=frac, eta=eta, sampler=sampler)
+    if lag_model is None:
+        if rho is None:
+            rho = paper_success_rates(K)
+        base = make_volatility(volatility, rho, stickiness=stickiness, seed=seed)
+        lag_model = CompletionLag(base, p_late=p_late, lag_decay=lag_decay, max_lag=max(int(staleness), 1))
+    if rho is None:
+        rho = getattr(lag_model, "rho", None)
+    if rho is None:
+        rho = paper_success_rates(K)
+    run, state = build_scan_runner(fl, lag_model, rho, outputs=outputs, staleness=int(staleness), alpha=alpha)
+    key = jax.random.PRNGKey(seed)
+    xs_in = jnp.zeros((T, 0), jnp.float32)
+    if outputs == "lean":
+        state, on_time, stale, sigmas = run(state, key, xs_in)
+        out = {}
+    else:
+        state, masks, lags, ps, sigmas, arrived = run(state, key, xs_in)
+        masks = np.asarray(masks)
+        arrived = np.asarray(arrived)
+        on_time = (masks * (np.asarray(lags) == 0)).sum(1)
+        stale = arrived.sum(1)
+        out = {"masks": masks, "lags": np.asarray(lags), "ps": np.asarray(ps), "arrived": arrived,
+               "counts": masks.sum(0)}
+    out.update({
+        "on_time": np.asarray(on_time),
+        "stale": np.asarray(stale),
+        "sigmas": np.asarray(sigmas),
+        "cep": float(state.cep),
+        "on_time_total": float(state.succ_hist),
+        "sel_counts": np.asarray(state.sel_counts),
+    })
+    return out

@@ -1,10 +1,11 @@
 from .client import make_local_update, prox_penalty
-from .aggregation import aggregate
+from .aggregation import aggregate, aggregate_async, staleness_weights
 from .round import (
     ServerState,
     init_server_state,
     make_select_fn,
     make_cohort_round,
+    make_async_cohort_round,
     make_silo_steps,
 )
 from .server import FLServer, build_volatility

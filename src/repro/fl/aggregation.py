@@ -16,15 +16,52 @@ unselected clients contribute zero delta by construction):
 * ``unbiased``       — w_i = q_i / (q * p_i): inverse-propensity estimator
   (Chen et al. [19]); beyond-paper option that removes selection bias in
   expectation — experiments quantify its variance cost.
+
+``aggregate_async`` is the staleness-aware generalisation: instead of a
+binary success mask it takes per-client completion *lags* (``0`` = on time,
+``l >= 1`` = l rounds late, negative = dead), applies the on-time deltas
+immediately and returns the late-but-alive deltas as ``staleness`` deferred
+contributions, already scaled by ``alpha**lag`` — the standard decay-weighted
+async aggregation.  ``staleness=0`` with ``lag = 0/−1`` reproduces
+``aggregate`` exactly (the paper's drop semantics).
 """
 from __future__ import annotations
-
-from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["aggregate"]
+__all__ = ["aggregate", "aggregate_async", "staleness_weights"]
+
+
+def _scheme_weights(
+    scheme: str,
+    data_sizes: jax.Array,
+    total_data: jax.Array,
+    K: int,
+    k: int,
+    epochs: jax.Array = None,
+    sel_probs: jax.Array = None,
+) -> jax.Array:
+    """The (k,) base cohort weights w_i of each aggregation scheme."""
+    if scheme == "mean":
+        return jnp.full((k,), 1.0 / K)
+    if scheme == "fedavg":
+        return data_sizes / jnp.maximum(total_data, 1e-9)
+    if scheme == "epoch_weighted":
+        base = data_sizes / jnp.maximum(total_data, 1e-9)
+        inv = 1.0 / jnp.maximum(epochs.astype(jnp.float32), 1.0)
+        # renormalise so the cohort's total weight is preserved
+        return base.sum() * (base * inv) / jnp.maximum((base * inv).sum(), 1e-9)
+    if scheme == "unbiased":
+        return data_sizes / jnp.maximum(total_data, 1e-9) / jnp.clip(sel_probs, 1e-3, 1.0)
+    raise ValueError(scheme)
+
+
+def staleness_weights(lag: jax.Array, alpha: float, staleness: int) -> jax.Array:
+    """Decay credit ``alpha**lag`` for ``0 <= lag <= staleness``, else 0."""
+    lagf = jnp.maximum(lag.astype(jnp.float32), 0.0)
+    ok = (lag >= 0) & (lag <= staleness)
+    return jnp.where(ok, jnp.asarray(alpha, jnp.float32) ** lagf, 0.0)
 
 
 def aggregate(
@@ -40,19 +77,7 @@ def aggregate(
 ):
     """cohort_params: pytree with leading cohort axis (k, ...)."""
     k = success.shape[0]
-    if scheme == "mean":
-        w = jnp.full((k,), 1.0 / K)
-    elif scheme == "fedavg":
-        w = data_sizes / jnp.maximum(total_data, 1e-9)
-    elif scheme == "epoch_weighted":
-        base = data_sizes / jnp.maximum(total_data, 1e-9)
-        inv = 1.0 / jnp.maximum(epochs.astype(jnp.float32), 1.0)
-        # renormalise so the cohort's total weight is preserved
-        w = base.sum() * (base * inv) / jnp.maximum((base * inv).sum(), 1e-9)
-    elif scheme == "unbiased":
-        w = data_sizes / jnp.maximum(total_data, 1e-9) / jnp.clip(sel_probs, 1e-3, 1.0)
-    else:
-        raise ValueError(scheme)
+    w = _scheme_weights(scheme, data_sizes, total_data, K, k, epochs, sel_probs)
     w = w * success  # failed clients contribute the global model (zero delta)
 
     def upd(g, c):
@@ -61,3 +86,49 @@ def aggregate(
         return (g.astype(jnp.float32) + contrib).astype(g.dtype)
 
     return jax.tree.map(upd, global_params, cohort_params)
+
+
+def aggregate_async(
+    global_params,
+    cohort_params,
+    lag: jax.Array,  # (k,) int32 completion lags (0 on time, >=1 late, <0 dead)
+    data_sizes: jax.Array,  # (k,) q_i of the selected clients
+    total_data: jax.Array,  # scalar q
+    K: int,
+    scheme: str = "fedavg",
+    *,
+    alpha: float = 0.5,
+    staleness: int = 0,
+    epochs: jax.Array = None,
+    sel_probs: jax.Array = None,
+):
+    """Staleness-aware aggregation: returns ``(new_params, late_deltas)``.
+
+    On-time clients (``lag == 0``) are aggregated into ``new_params`` now with
+    their full scheme weight, exactly like ``aggregate``.  A late-but-alive
+    client (``1 <= lag <= staleness``) contributes ``alpha**lag * w_i *
+    (theta_i - theta_t)`` — its delta is still relative to the global model it
+    was handed at selection time — returned in ``late_deltas``: a pytree whose
+    leaves carry a leading ``(staleness,)`` axis, slice ``s`` being the summed
+    contribution that lands ``s+1`` rounds from now.  The server adds slice
+    ``s`` to the global model at round ``t+s+1`` (see ``FLServer``).  Clients
+    with ``lag`` negative or beyond ``staleness`` are dropped (the paper's
+    deadline semantics).
+    """
+    k = lag.shape[0]
+    w = _scheme_weights(scheme, data_sizes, total_data, K, k, epochs, sel_probs)
+    s_idx = jnp.arange(staleness + 1, dtype=lag.dtype)
+    arrive = (lag[None, :] == s_idx[:, None]).astype(jnp.float32)  # (S+1, k) one-hot by lag
+    decay = jnp.asarray(alpha, jnp.float32) ** s_idx.astype(jnp.float32)
+    A = arrive * decay[:, None] * w[None, :]  # (S+1, k) credit matrix
+
+    def contribs(g, c):
+        delta = c.astype(jnp.float32) - g.astype(jnp.float32)[None]
+        return jnp.tensordot(A, delta, axes=(1, 0))  # (S+1, ...)
+
+    parts = jax.tree.map(contribs, global_params, cohort_params)
+    new_params = jax.tree.map(
+        lambda g, part: (g.astype(jnp.float32) + part[0]).astype(g.dtype), global_params, parts
+    )
+    late_deltas = jax.tree.map(lambda part: part[1:], parts)
+    return new_params, late_deltas

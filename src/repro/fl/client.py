@@ -14,7 +14,7 @@ with ``spmd_axis_name`` so each mesh data-slice trains its own client.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict
 
 import jax
 import jax.numpy as jnp

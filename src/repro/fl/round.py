@@ -15,32 +15,25 @@ Two builders per DESIGN.md §3:
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Dict, NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.selection import (
-    E3CSState,
-    e3cs_init,
-    e3cs_probs,
-    e3cs_update,
-    fedcs_select,
-    prob_alloc,
-    random_select,
-    sample_selection,
-    selection_mask,
-    ucb_init,
-    ucb_select,
-    ucb_update,
-)
+from repro.core.selection import E3CSState, e3cs_init, e3cs_probs, e3cs_update, fedcs_select, random_select, sample_selection, selection_mask, ucb_init, ucb_select, ucb_update
 from repro.optim import sgd
 
-from .aggregation import aggregate
+from .aggregation import aggregate, aggregate_async
 from .client import make_local_update
 
-__all__ = ["ServerState", "init_server_state", "make_select_fn", "make_cohort_round", "make_silo_steps"]
+__all__ = [
+    "ServerState",
+    "init_server_state",
+    "make_select_fn",
+    "make_cohort_round",
+    "make_async_cohort_round",
+    "make_silo_steps",
+]
 
 
 class ServerState(NamedTuple):
@@ -179,6 +172,85 @@ def make_cohort_round(
             succ_hist=state.succ_hist + n_succ,
         )
         return new_state, metrics
+
+    return select, round_fn
+
+
+def make_async_cohort_round(
+    model,
+    fl_cfg,
+    quota_fn,
+    lag_model,
+    rho=None,
+    spmd_axes=None,
+    aggregation: Optional[str] = None,
+):
+    """Staleness-aware variant of ``make_cohort_round``.
+
+    ``lag_model`` draws per-client completion lags (``repro.core.volatility``
+    lag protocol: int32, 0 = on time, l>=1 = late, negative = dead).  The
+    jitted ``round_fn`` aggregates on-time deltas immediately and returns the
+    decayed late contributions as a third output — a pytree with a leading
+    ``(S,)`` axis, slice ``s`` due ``s+1`` rounds later — which the host loop
+    schedules and applies when they arrive (``FLServer.run``).  The selector
+    keeps the paper's deadline-based feedback: it observes the on-time bits
+    ``1{lag == 0}``, matching the async scan engine's semantics.
+    """
+    S = int(fl_cfg.staleness_rounds)
+    alpha = float(fl_cfg.staleness_alpha)
+    opt = sgd(fl_cfg.lr, fl_cfg.momentum)
+    local = make_local_update(model, opt, fl_cfg.local_update, fl_cfg.prox_coef)
+    vlocal = jax.vmap(local, in_axes=(None, 0, 0, 0), spmd_axis_name=spmd_axes)
+    agg_scheme = aggregation or fl_cfg.aggregation
+    select = make_select_fn(fl_cfg, quota_fn, rho)
+
+    def round_fn(state: ServerState, idx, p, capped, sigma, batches, step_mask, data_sizes, total_data, epochs, rng):
+        K = fl_cfg.K
+        r_vol, r_local = jax.random.split(jax.random.fold_in(rng, 1))
+        lag_full, vol_state = lag_model.sample(r_vol, state.vol_state)  # (K,) int32
+        x_full = (lag_full == 0).astype(jnp.float32)  # deadline-based feedback
+        mask = selection_mask(idx, K)
+        success = x_full[idx]
+        lag_sel = lag_full[idx]
+
+        cohort_params, stats = vlocal(state.params, batches, step_mask, jax.random.split(r_local, fl_cfg.k))
+        new_params, late_deltas = aggregate_async(
+            state.params,
+            cohort_params,
+            lag_sel,
+            data_sizes,
+            total_data,
+            K,
+            agg_scheme,
+            alpha=alpha,
+            staleness=S,
+            epochs=epochs,
+            sel_probs=p[idx],
+        )
+        new_e3cs, new_ucb, loss_cache = _selector_update(
+            state, fl_cfg, idx, p, capped, mask, x_full, sigma, stats["local_loss"]
+        )
+        n_succ = jnp.sum(success)
+        n_late = jnp.sum(((lag_sel >= 1) & (lag_sel <= S)).astype(jnp.float32))
+        metrics = {
+            "cep": state.cep + n_succ,
+            "n_success": n_succ,
+            "n_late": n_late,
+            "mean_local_loss": jnp.mean(stats["local_loss"]),
+            "sigma": sigma,
+        }
+        new_state = ServerState(
+            params=new_params,
+            e3cs=new_e3cs,
+            ucb=new_ucb,
+            loss_cache=loss_cache,
+            vol_state=vol_state,
+            t=state.t + 1,
+            sel_counts=state.sel_counts + mask,
+            cep=state.cep + n_succ,
+            succ_hist=state.succ_hist + n_succ,
+        )
+        return new_state, metrics, late_deltas
 
     return select, round_fn
 

@@ -7,11 +7,22 @@ distribution (``select`` + data gather), (2) local training, (3) model
 transmission, (4) force stop — stages 2-4 collapse into the success-mask
 semantics of the jitted round (volatile clients' deltas are masked out, which
 *is* the deadline drop) — and (5) aggregation.
+
+With ``staleness_rounds=S > 0`` the loop runs *async* rounds instead: stage 4
+no longer discards late-but-alive clients — their deltas (still relative to
+the global model they were handed) are held in a pending buffer and added to
+the global model when they arrive, decayed by ``staleness_alpha**lag``
+(``aggregate_async``).  The selector still sees deadline-based feedback, so
+the selection trajectory at S=0 is exactly the synchronous one.
+
+Volatility can be specified three ways (``build_volatility``): a builtin name
+(``bernoulli | markov | deadline``), a ``repro.scenarios`` name (diurnal,
+regional_outage, flash_crowd, ...), or any ``(init_state, sample)`` model
+object passed straight through — so the accuracy tables run under structured
+regimes too.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import asdict
 from typing import Dict, List, Optional
 
 import jax
@@ -20,37 +31,92 @@ import numpy as np
 
 from repro.configs.base import FLConfig
 from repro.core.selection import make_quota_schedule
-from repro.core.volatility import make_volatility, paper_success_rates
+from repro.core.volatility import CompletionLag, make_volatility, paper_success_rates
 
-from .round import ServerState, init_server_state, make_cohort_round
+from .round import ServerState, init_server_state, make_async_cohort_round, make_cohort_round
 
 __all__ = ["FLServer", "build_volatility"]
 
 
-def build_volatility(fl_cfg: FLConfig, K: int):
-    rho = jnp.asarray(paper_success_rates(K, fl_cfg.success_rates))
-    vol = make_volatility(
-        fl_cfg.volatility,
-        rho,
-        stickiness=fl_cfg.markov_stickiness,
-        seed=fl_cfg.seed,
-        epochs_choices=fl_cfg.local_epochs,
-    )
-    return vol, rho
+def build_volatility(fl_cfg: FLConfig, K: int, volatility=None):
+    """Resolve the run's volatility spec to ``(vol, rho)``.
+
+    ``volatility`` (or, when omitted, ``fl_cfg.volatility``) may be:
+
+    * a builtin generator name — ``bernoulli | markov | deadline`` — built
+      over the paper's class rates (the historical string path);
+    * a ``repro.scenarios`` scenario name (e.g. ``diurnal``,
+      ``regional_outage``), instantiated at ``(K, fl_cfg.rounds,
+      fl_cfg.seed)`` with its own marginal-rate hint;
+    * any ``(init_state, sample)`` model object, passed through unchanged
+      (``rho`` from its ``rho`` / ``marginal_rate()`` if present, else the
+      paper classes).
+    """
+    spec = fl_cfg.volatility if volatility is None else volatility
+    if not isinstance(spec, str):
+        vol = spec
+        rho = getattr(vol, "rho", None)
+        if rho is None and hasattr(vol, "marginal_rate"):
+            rho = vol.marginal_rate()
+        if rho is None:
+            rho = paper_success_rates(K, fl_cfg.success_rates)
+        return vol, jnp.asarray(rho, jnp.float32)
+    if spec in ("bernoulli", "markov", "deadline"):
+        rho = jnp.asarray(paper_success_rates(K, fl_cfg.success_rates))
+        vol = make_volatility(
+            spec,
+            rho,
+            stickiness=fl_cfg.markov_stickiness,
+            seed=fl_cfg.seed,
+            epochs_choices=fl_cfg.local_epochs,
+        )
+        return vol, rho
+    from repro.scenarios import make_scenario  # deferred: scenarios imports the engine
+
+    try:
+        vol, rho = make_scenario(spec, K, fl_cfg.rounds, seed=fl_cfg.seed)
+    except KeyError as e:
+        raise ValueError(
+            f"unknown volatility {spec!r}: not a builtin (bernoulli | markov | deadline) "
+            f"and not a repro.scenarios name ({e})"
+        ) from None
+    return vol, jnp.asarray(rho, jnp.float32)
 
 
 class FLServer:
-    """Runs paper-scale FL (CNN / small-LM workloads, cohort mapping)."""
+    """Runs paper-scale FL (CNN / small-LM workloads, cohort mapping).
 
-    def __init__(self, model, fl_cfg: FLConfig, store, eval_fn=None, spmd_axes=None):
+    ``volatility`` overrides ``fl_cfg.volatility`` with a scenario name or a
+    model object (see ``build_volatility``).
+    """
+
+    def __init__(self, model, fl_cfg: FLConfig, store, eval_fn=None, spmd_axes=None, volatility=None):
         self.model = model
         self.cfg = fl_cfg
         self.store = store
         self.quota = make_quota_schedule(fl_cfg.quota, fl_cfg.k, fl_cfg.K, fl_cfg.rounds, fl_cfg.quota_frac)
-        self.vol, self.rho = build_volatility(fl_cfg, fl_cfg.K)
-        select, round_fn = make_cohort_round(model, fl_cfg, self.quota, self.vol, self.rho, spmd_axes)
+        self.vol, self.rho = build_volatility(fl_cfg, fl_cfg.K, volatility=volatility)
+        self.staleness = int(fl_cfg.staleness_rounds)
+        if self.staleness > 0:
+            self.lag_model = CompletionLag(
+                self.vol,
+                p_late=fl_cfg.late_prob,
+                lag_decay=fl_cfg.lag_decay,
+                max_lag=self.staleness,
+            )
+            select, round_fn = make_async_cohort_round(
+                model, fl_cfg, self.quota, self.lag_model, self.rho, spmd_axes
+            )
+        else:
+            self.lag_model = None
+            select, round_fn = make_cohort_round(model, fl_cfg, self.quota, self.vol, self.rho, spmd_axes)
         self._select = jax.jit(select)
         self._round = jax.jit(round_fn)
+        self._apply_delta = jax.jit(
+            lambda params, delta: jax.tree.map(
+                lambda g, d: (g.astype(jnp.float32) + d).astype(g.dtype), params, delta
+            )
+        )
         self._eval_fn = eval_fn
         rng = np.random.default_rng(fl_cfg.seed)
         self.epochs = rng.choice(fl_cfg.local_epochs, fl_cfg.K).astype(np.int32)
@@ -63,7 +129,8 @@ class FLServer:
 
     def init_state(self, rng) -> ServerState:
         params, _ = self.model.init(rng)
-        return init_server_state(params, self.cfg.K, self.vol.init_state())
+        vol_state = self.lag_model.init_state() if self.lag_model is not None else self.vol.init_state()
+        return init_server_state(params, self.cfg.K, vol_state)
 
     def _report_candidate_losses(self, state: ServerState, rng):
         """pow-d stage: d uniform candidates report loss on the global model."""
@@ -82,7 +149,12 @@ class FLServer:
         history: Dict[str, List] = {"round": [], "acc": [], "loss": [], "cep": [], "succ_ratio": []}
         key = jax.random.PRNGKey(cfg.seed + 1)
         total_q = float(self.store.sizes().sum())
+        pending: Dict[int, List] = {}  # arrival round -> [late delta trees]
+        n_late_total = 0.0
         for t in range(rounds):
+            # async: stale updates scheduled for this round land first
+            for delta in pending.pop(t, []):
+                state = state._replace(params=self._apply_delta(state.params, delta))
             key, k_sel, k_round, k_cand = jax.random.split(key, 4)
             if cfg.scheme == "pow_d":
                 state = self._report_candidate_losses(state, k_cand)
@@ -90,7 +162,7 @@ class FLServer:
             idx_np = np.asarray(idx)
             xb, yb, mask = self.store.round_batches(idx_np, self.epochs, cfg.batch_size, self.n_steps)
             batches = {"x": jnp.asarray(xb), "y": jnp.asarray(yb)}
-            state, metrics = self._round(
+            round_args = (
                 state,
                 idx,
                 p,
@@ -103,6 +175,15 @@ class FLServer:
                 jnp.asarray(self.epochs[idx_np], jnp.float32),
                 k_round,
             )
+            if self.staleness > 0:
+                state, metrics, late_deltas = self._round(*round_args)
+                n_late_total += float(metrics["n_late"])
+                for s in range(self.staleness):
+                    pending.setdefault(t + s + 1, []).append(
+                        jax.tree.map(lambda a, s=s: a[s], late_deltas)
+                    )
+            else:
+                state, metrics = self._round(*round_args)
             if self._eval_fn is not None and ((t + 1) % eval_every == 0 or t == rounds - 1):
                 acc, loss = self._eval_fn(state.params)
                 history["round"].append(t + 1)
@@ -110,4 +191,6 @@ class FLServer:
                 history["loss"].append(float(loss))
                 history["cep"].append(float(state.cep))
                 history["succ_ratio"].append(float(state.cep) / ((t + 1) * cfg.k))
+        if self.staleness > 0:
+            history["n_late"] = n_late_total
         return state, history

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ASSIGNED, INPUT_SHAPES, get_config
-from repro.configs.base import FLConfig, InputShape, ModelConfig
+from repro.configs.base import InputShape, ModelConfig
 from repro.core.selection import e3cs_init, e3cs_probs, e3cs_update, sample_selection, selection_mask
 from repro.launch.hlo import collective_bytes, count_ops
 from repro.launch.mesh import axis_sizes, make_production_mesh
@@ -128,8 +128,6 @@ def build_train_program(cfg: ModelConfig, shape: InputShape, mesh, n_micro_overr
         opt = sgd(1e-2, 0.9)
 
         def train_step(params, opt_state, batch, rng):
-            B = batch["tokens"].shape[0]
-            mb = B // n_micro
 
             def micro(acc, i):
                 sl = {

@@ -19,7 +19,7 @@ program's ``memory_analysis()``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 

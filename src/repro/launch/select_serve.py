@@ -15,22 +15,35 @@ percentiles.  Runs genuinely on this CPU box:
 
     python -m repro.launch.select_serve --jobs 8 --clients 4096 --rounds 30
     python -m repro.launch.select_serve --smoke
+
+``--async`` switches to the *compiled steady-state* path
+(``run_service_compiled``): the whole serving horizon folds into one
+``jax.lax.scan`` over ticks — no host round-trip per tick, engine state
+donated — with overlapping in-flight rounds: each job's round outcome is a
+completion-lag draw, and late-but-alive cohorts are credited ``alpha**lag``
+from a bounded ``(J, S, K)`` staleness ring instead of being dropped while
+the engine keeps issuing the next cohorts.  ``--staleness 0`` gives the
+compiled synchronous loop (the ROADMAP "compiled service loop" item on its
+own).  Reports are written to ``results/bench/BENCH_select_serve*.json`` so
+CI uploads them with the benchmark artifacts.
 """
 from __future__ import annotations
 
 import argparse
 import collections
 import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.volatility import paper_success_rates
+from repro.core.volatility import BernoulliVolatility, BinaryLag, CompletionLag, paper_success_rates
 from repro.engine.multi_job import make_multi_job, multi_job_init, pack_jobs
+from repro.engine.scan_sim import staleness_ring_step
 
-__all__ = ["run_service", "main"]
+__all__ = ["run_service", "run_service_compiled", "main"]
 
 
 def run_service(
@@ -45,10 +58,7 @@ def run_service(
     """Simulate the service loop; returns the throughput/latency report."""
     rng = np.random.default_rng(seed)
     # heterogeneous fleet: population, cohort, fairness and learning rate vary
-    Ks = [int(K_max // (2 ** (j % 3))) for j in range(J)]
-    ks = [max(4, Kj // 50) for Kj in Ks]
-    fracs = [float(rng.choice([0.0, 0.5, 0.8])) for _ in range(J)]
-    etas = [float(rng.choice([0.3, 0.5])) for _ in range(J)]
+    Ks, ks, fracs, etas = _heterogeneous_fleet(J, K_max, rng)
     cfg, k_max = pack_jobs(Ks, ks, fracs, etas, K_max=K_max)
     _, batched_step = make_multi_job(k_max, n_iters=n_iters, tile=tile)
     state = multi_job_init(cfg)
@@ -124,6 +134,124 @@ def run_service(
     return report
 
 
+def _heterogeneous_fleet(J: int, K_max: int, rng):
+    """The service's standard heterogeneous job mix (shared by both paths)."""
+    Ks = [int(K_max // (2 ** (j % 3))) for j in range(J)]
+    ks = [max(4, Kj // 50) for Kj in Ks]
+    fracs = [float(rng.choice([0.0, 0.5, 0.8])) for _ in range(J)]
+    etas = [float(rng.choice([0.3, 0.5])) for _ in range(J)]
+    return Ks, ks, fracs, etas
+
+
+def run_service_compiled(
+    J: int = 8,
+    K_max: int = 4096,
+    rounds: int = 30,
+    seed: int = 0,
+    staleness: int = 2,
+    alpha: float = 0.5,
+    p_late: float = 0.7,
+    lag_decay: float = 0.5,
+    n_iters: int = 48,
+    tile: int = 8192,
+    reps: int = 3,
+):
+    """Compiled steady-state serving: the whole horizon in ONE ``lax.scan``.
+
+    Per tick, inside the compiled program: a batched multi-job engine dispatch
+    issues every job's next cohort, a completion-lag model decides which
+    selected clients return on time / late / never, on-time bits feed the
+    E3CS update, and a ``(J, S, K_max)`` staleness ring credits late arrivals
+    ``alpha**lag`` ticks later — rounds overlap in flight instead of the
+    service blocking on stragglers.  Engine state and the ring are donated,
+    so steady-state serving runs allocation-free across ticks.
+
+    ``staleness=0`` is the compiled *synchronous* loop (same drop semantics
+    as ``run_service``, no ring in the program).  Returns the throughput
+    report; per-request latency percentiles don't exist here (there is no
+    host queue) — the per-tick cost is the latency.
+    """
+    S = int(staleness)
+    rng = np.random.default_rng(seed)
+    Ks, ks, fracs, etas = _heterogeneous_fleet(J, K_max, rng)
+    cfg, k_max = pack_jobs(Ks, ks, fracs, etas, K_max=K_max)
+    _, batched_step = make_multi_job(k_max, n_iters=n_iters, tile=tile)
+
+    rhos = jnp.asarray(np.stack([np.pad(paper_success_rates(Kj), (0, K_max - Kj)) for Kj in Ks]))
+    base = BernoulliVolatility(rhos)  # (J, K_max) marginals, one draw serves the fleet tick
+    lag_model = (
+        CompletionLag(base, p_late=p_late, lag_decay=lag_decay, max_lag=max(S, 1)) if S else BinaryLag(base)
+    )
+    base_keys = jax.random.split(jax.random.PRNGKey(seed), J)
+
+    def tick(carry, t):
+        state, pending, vs, key = carry
+        key, k_vol = jax.random.split(key)
+        keys = jax.vmap(lambda kk: jax.random.fold_in(kk, t))(base_keys)
+        lag, vs = lag_model.sample(k_vol, vs)  # (J, K_max) int32
+        x = (lag == 0).astype(jnp.float32)
+        state, out = batched_step(cfg, state, keys, x)
+        mask = out["mask"]
+        arriving, pending = staleness_ring_step(pending, mask, lag, S, alpha)
+        stale = jnp.sum(arriving, axis=1)
+        on_time = jnp.sum(mask * x, axis=1)
+        return (state, pending, vs, key), (on_time, stale)
+
+    ts = jnp.arange(rounds, dtype=jnp.int32)
+
+    def _run(state, pending, vs, key):
+        (state, pending, _, _), (on_time, stale) = jax.lax.scan(tick, (state, pending, vs, key), ts)
+        return state, pending, on_time, stale
+
+    # engine state + staleness ring donated: steady-state serving reuses their
+    # buffers instead of reallocating (J, S, K_max) every horizon
+    run = jax.jit(_run, donate_argnums=(0, 1))
+
+    def fresh():
+        return (
+            multi_job_init(cfg),
+            jnp.zeros((J, S, K_max), jnp.float32),
+            lag_model.init_state(),
+            jax.random.PRNGKey(seed + 1),
+        )
+
+    jax.block_until_ready(run(*fresh())[0].logw)  # compile off the clock
+    elapsed = []
+    for _ in range(reps):
+        args = fresh()
+        jax.block_until_ready(args[0].logw)
+        t0 = time.perf_counter()
+        state, pending, on_time, stale = run(*args)
+        jax.block_until_ready(state.logw)
+        elapsed.append(time.perf_counter() - t0)
+    best = min(elapsed)
+    n_decisions = rounds * sum(Ks)
+    return {
+        "mode": "compiled_async" if S else "compiled_sync",
+        "jobs": J,
+        "K_max": K_max,
+        "rounds": rounds,
+        "staleness": S,
+        "alpha": alpha,
+        "ticks": rounds * J,
+        "ticks_per_s": round(rounds * J / best, 1),
+        "client_decisions_per_s": round(n_decisions / best, 1),
+        "tick_us": round(best / (rounds * J) * 1e6, 1),  # per job-tick, = 1e6/ticks_per_s
+        "scan_step_us": round(best / rounds * 1e6, 1),  # per compiled step (all J jobs)
+        "on_time_total": float(np.asarray(on_time).sum()),
+        "stale_credit_total": float(np.asarray(stale).sum()),
+        "cohort_sizes": ks,
+        "populations": Ks,
+    }
+
+
+def _save_report(report, name: str):
+    out_dir = os.environ.get("REPRO_BENCH_OUT", "results/bench")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, f"BENCH_{name}.json"), "w") as f:
+        json.dump(report, f, indent=1, default=float)
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--jobs", type=int, default=8)
@@ -131,11 +259,23 @@ def main():
     ap.add_argument("--rounds", type=int, default=30)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--scenario", type=str, default=None, help="repro.scenarios name to replay as feedback")
+    ap.add_argument("--async", dest="async_mode", action="store_true",
+                    help="compiled lax.scan steady-state path with overlapping in-flight rounds")
+    ap.add_argument("--staleness", type=int, default=2, help="async buffer depth S (with --async; 0 = compiled sync)")
+    ap.add_argument("--alpha", type=float, default=0.5, help="staleness decay per round of lag")
     ap.add_argument("--smoke", action="store_true", help="tiny CPU-friendly run")
     args = ap.parse_args()
     if args.smoke:
         args.jobs, args.clients, args.rounds = 4, 512, 10
-    report = run_service(J=args.jobs, K_max=args.clients, rounds=args.rounds, seed=args.seed, scenario=args.scenario)
+    if args.async_mode:
+        report = run_service_compiled(
+            J=args.jobs, K_max=args.clients, rounds=args.rounds, seed=args.seed,
+            staleness=args.staleness, alpha=args.alpha,
+        )
+        _save_report(report, "select_serve_async")
+    else:
+        report = run_service(J=args.jobs, K_max=args.clients, rounds=args.rounds, seed=args.seed, scenario=args.scenario)
+        _save_report(report, "select_serve")
     print(json.dumps(report, indent=1))
 
 

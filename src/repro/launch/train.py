@@ -22,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import save
-from repro.configs import FLConfig, get_config, smoke_variant
+from repro.configs import FLConfig, get_config
 from repro.data import ClientStore, make_image_dataset, partition_iid, partition_primary_label
 from repro.fl import FLServer
 from repro.models import build_model, cross_entropy

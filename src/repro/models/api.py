@@ -13,7 +13,6 @@ dry-run (DESIGN.md §6).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, Dict, NamedTuple, Optional
 
 import jax

@@ -10,7 +10,6 @@ cohort of clients on CPU, which is exactly how the FL round executes.
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

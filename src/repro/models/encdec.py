@@ -9,7 +9,6 @@ self-attention cache.
 """
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -135,7 +134,6 @@ def encdec_init_caches(cfg, B: int, S_cache: int, window: int = 0, dtype=jnp.bfl
 
 def encdec_decode_step(params, cfg, tokens, caches, window: int = 0):
     """tokens: (B,1). caches: {'self': stacked KVCache, 'cross': (L,B,T,KV,hd)x2}."""
-    B = tokens.shape[0]
     pos = caches["self"].pos[0]
     x = params["tok_emb"][tokens] + params["dec_pos"][pos][None, None]
     x = x.astype(jnp.dtype(cfg.dtype))

@@ -17,7 +17,7 @@ the latent space: a beyond-paper perf option exercised in §Perf.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import contextlib
 import threading
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence
 
 import jax
 from jax.sharding import PartitionSpec as P
@@ -86,7 +86,6 @@ def cohort_rules(cfg, mesh_axis_sizes: Dict[str, int]) -> Dict[str, object]:
     """Tensor-parallel rules; client axis handled by vmap(spmd_axis_name)."""
     m = mesh_axis_sizes.get("model", 1)
     fsdp = tuple(a for a in ("pod", "data") if a in mesh_axis_sizes)
-    kv = cfg.n_kv_heads * (cfg.resolved_head_dim or 1)
     return {
         "batch": fsdp,  # serving batch; during cohort training batch is per-client (unsharded)
         "client": fsdp,
@@ -113,7 +112,6 @@ def cohort_rules(cfg, mesh_axis_sizes: Dict[str, int]) -> Dict[str, object]:
 
 def silo_rules(cfg, mesh_axis_sizes: Dict[str, int]) -> Dict[str, object]:
     """FSDP + TP rules for huge archs (one client occupies the whole mesh)."""
-    m = mesh_axis_sizes.get("model", 1)
     fsdp = tuple(a for a in ("pod", "data") if a in mesh_axis_sizes)
     fsize = 1
     for a in fsdp:

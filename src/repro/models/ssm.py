@@ -15,13 +15,12 @@ with a conv ring state, which is what makes `long_500k` serving tractable.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from .layers import ParamBuilder, rmsnorm
-from .sharding import shard
 
 __all__ = ["SSMCache", "ssm_init", "ssm_apply", "ssm_decode", "init_ssm_cache", "ssd_chunked"]
 

@@ -15,8 +15,7 @@ Entry points:
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -274,7 +273,6 @@ def forward(params, cfg, batch, mode: str = "train", window: int = 0, impl: str 
 
 def decode_step(params, cfg, tokens, caches, window: int = 0):
     """tokens: (B, 1). caches: dict seg{i} -> stacked cache (+ 'shared')."""
-    batch = {"tokens": tokens}
     x = params["tok_emb"][tokens]
     if cfg.emb_scale:
         x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
@@ -283,7 +281,6 @@ def decode_step(params, cfg, tokens, caches, window: int = 0):
     new_caches = {}
     attn_caches = caches.get("shared")
     positions = None
-    aux = jnp.zeros((), jnp.float32)
     for si, (kind, n) in enumerate(segments_of(cfg)):
         x, attn_caches, seg_new, _ = _run_segment(
             params, cfg, si, kind, x, positions, "decode", window, {**caches, "shared": attn_caches}, "einsum", emb0

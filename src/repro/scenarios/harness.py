@@ -12,23 +12,28 @@ Two dispatch paths over the same metric surface:
   evaluate one selector against many regimes at once.
 
 Cells report CEP (Eq. 8), effective participation (CEP / T*k), Jain fairness
-and normalized selection entropy; ``format_grid`` renders the table the
-``scenarios`` benchmark suite and ``examples/scenarios_demo.py`` print.
+and normalized selection entropy; with ``staleness=S`` each cell additionally
+runs the *async* engine on the same scenario (its generator wrapped in
+``CompletionLag``) and reports the staleness-aware CEP — on-time successes
+plus ``alpha**lag``-decayed late credit — so the grid scores sync vs async
+side by side.  ``format_grid`` renders the table the ``scenarios`` benchmark
+suite and ``examples/scenarios_demo.py`` print.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.fairness import cep, jain_index, selection_entropy, success_ratio
+from repro.core.volatility import CompletionLag
 from repro.engine.multi_job import make_multi_job, multi_job_init, pack_jobs
-from repro.engine.scan_sim import scan_selection_sim
+from repro.engine.scan_sim import async_selection_sim, scan_selection_sim
 
 from .registry import make_scenario
-from .replay import pack_trace, record_trace
+from .replay import record_trace
 
 __all__ = ["evaluate_cell", "run_grid", "run_grid_multi_job", "run_replay", "format_grid"]
 
@@ -48,12 +53,30 @@ def _metrics(masks: np.ndarray, xs: np.ndarray) -> Dict[str, float]:
 def evaluate_cell(
     selector: str, scenario: str, K: int = 100, k: int = 20, T: int = 500,
     seed: int = 0, frac: float = 0.5,
+    staleness: Optional[int] = None, alpha: float = 0.5,
+    p_late: float = 0.7, lag_decay: float = 0.5,
 ) -> Dict[str, float]:
-    """One (selector, scenario) cell through the compiled scan engine."""
+    """One (selector, scenario) cell through the compiled scan engine.
+
+    With ``staleness=S`` the cell is also run through the async engine (same
+    scenario re-instantiated at the same seed, wrapped in ``CompletionLag``)
+    and gains ``async_cep`` / ``async_eff`` — the staleness-aware CEP and
+    effective participation, where a late-but-alive client's contribution
+    counts ``alpha**lag`` instead of zero.
+    """
     vol, rho = make_scenario(scenario, K, T, seed)
     out = scan_selection_sim(selector, K=K, k=k, T=T, frac=frac, seed=seed, vol=vol, rho=rho)
     row = {"selector": selector, "scenario": scenario, "K": K, "k": k, "T": T}
     row.update(_metrics(out["masks"], out["xs"]))
+    if staleness is not None:
+        vol2, _ = make_scenario(scenario, K, T, seed)
+        lag_model = CompletionLag(vol2, p_late=p_late, lag_decay=lag_decay, max_lag=max(int(staleness), 1))
+        aout = async_selection_sim(
+            selector, K=K, k=k, T=T, frac=frac, seed=seed,
+            staleness=int(staleness), alpha=alpha, lag_model=lag_model, rho=rho, outputs="lean",
+        )
+        row["async_cep"] = aout["cep"]
+        row["async_eff"] = aout["cep"] / (T * k)
     return row
 
 
@@ -61,10 +84,12 @@ def run_grid(
     selectors: Sequence[str] = DEFAULT_SELECTORS,
     scenarios: Sequence[str] = ("paper_iid", "markov", "diurnal"),
     K: int = 100, k: int = 20, T: int = 500, seed: int = 0, frac: float = 0.5,
+    staleness: Optional[int] = 2, alpha: float = 0.5,
 ) -> List[Dict[str, float]]:
-    """The full grid, one compiled run per cell."""
+    """The full grid, one compiled run per cell (two with ``staleness``: the
+    sync drop semantics and the async staleness-buffer semantics)."""
     return [
-        evaluate_cell(sel, sc, K=K, k=k, T=T, seed=seed, frac=frac)
+        evaluate_cell(sel, sc, K=K, k=k, T=T, seed=seed, frac=frac, staleness=staleness, alpha=alpha)
         for sc in scenarios
         for sel in selectors
     ]
@@ -144,12 +169,23 @@ def run_replay(
 
 
 def format_grid(rows: List[Dict[str, float]]) -> str:
-    """Fixed-width table: scenarios x selectors with the four metrics."""
+    """Fixed-width table: scenarios x selectors with the four metrics (plus
+    the async staleness-aware CEP / effective-participation columns when the
+    grid was run with ``staleness``)."""
+    has_async = any("async_cep" in r for r in rows)
     hdr = f"{'scenario':<22} {'selector':<16} {'cep':>9} {'eff_part':>9} {'jain':>6} {'entropy':>8}"
+    if has_async:
+        hdr += f" {'acep':>9} {'aeff':>7}"
     lines = [hdr, "-" * len(hdr)]
     for r in rows:
-        lines.append(
+        line = (
             f"{r['scenario']:<22} {r['selector']:<16} {r['cep']:>9.0f} "
             f"{r['eff_participation']:>9.3f} {r['jain']:>6.3f} {r['entropy']:>8.3f}"
         )
+        if has_async:
+            if "async_cep" in r:
+                line += f" {r['async_cep']:>9.0f} {r['async_eff']:>7.3f}"
+            else:
+                line += f" {'-':>9} {'-':>7}"
+        lines.append(line)
     return "\n".join(lines)

@@ -1,0 +1,299 @@
+"""Async/staleness subsystem tests: S=0 bit-identity with the synchronous
+engine, hand-computed decay-weight aggregation, lag-model semantics, the
+staleness-aware FL server, and the compiled serving loop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import FLConfig
+from repro.core.volatility import (
+    DEAD_LAG,
+    BinaryLag,
+    CompletionLag,
+    OnTimeBits,
+    make_volatility,
+    paper_success_rates,
+)
+from repro.engine.scan_sim import async_selection_sim, build_scan_runner, scan_selection_sim
+from repro.fl.aggregation import aggregate, aggregate_async, staleness_weights
+
+
+class _FixedLag:
+    """Deterministic lag schedule for hand-computable tests: row t of ``lags``
+    (T, K) is returned verbatim; state is the round index."""
+
+    def __init__(self, lags):
+        self.lags = jnp.asarray(lags, jnp.int32)
+
+    def init_state(self):
+        return jnp.zeros((), jnp.int32)
+
+    def sample(self, rng, state):
+        return jax.lax.dynamic_index_in_dim(self.lags, state, keepdims=False), state + 1
+
+
+class TestLagModels:
+    def test_binary_lag_consumes_base_randomness_exactly(self):
+        rho = jnp.asarray(paper_success_rates(40))
+        base = make_volatility("markov", rho, stickiness=0.8)
+        lagm = BinaryLag(make_volatility("markov", rho, stickiness=0.8))
+        key = jax.random.PRNGKey(0)
+        xs, vs = base.init_state(), lagm.init_state()
+        for i in range(20):
+            k = jax.random.fold_in(key, i)
+            x, xs = base.sample(k, xs)
+            lag, vs = lagm.sample(k, vs)
+            np.testing.assert_array_equal(np.asarray(x) > 0, np.asarray(lag) == 0)
+            assert set(np.unique(np.asarray(lag))) <= {0, DEAD_LAG}
+
+    def test_completion_lag_on_time_set_is_base_success_set(self):
+        # lag==0 exactly when the base draw succeeds; late/dead only split the rest
+        rho = jnp.full((200,), 0.5)
+        lagm = CompletionLag(make_volatility("bernoulli", rho), p_late=0.6, lag_decay=0.5, max_lag=3)
+        lag, _ = lagm.sample(jax.random.PRNGKey(1), lagm.init_state())
+        lag = np.asarray(lag)
+        assert ((lag == 0) | (lag == DEAD_LAG) | ((lag >= 1) & (lag <= 3))).all()
+        assert (lag == 0).any() and (lag >= 1).any() and (lag == DEAD_LAG).any()
+
+    def test_completion_lag_marginals(self):
+        # P(lag==0) ~= rho; P(late | miss) ~= p_late; lag truncated at max_lag
+        rho = jnp.full((500,), 0.4)
+        lagm = CompletionLag(make_volatility("bernoulli", rho), p_late=0.7, lag_decay=0.5, max_lag=4)
+        lags = []
+        vs = lagm.init_state()
+        for i in range(200):
+            lag, vs = lagm.sample(jax.random.PRNGKey(i), vs)
+            lags.append(np.asarray(lag))
+        lags = np.stack(lags)
+        assert abs((lags == 0).mean() - 0.4) < 0.03
+        miss = lags != 0
+        assert abs((lags[miss] != DEAD_LAG).mean() - 0.7) < 0.03
+        assert lags.max() <= 4
+
+    def test_completion_lag_composes_with_scenario_generators(self):
+        from repro.scenarios import make_scenario
+
+        vol, rho = make_scenario("diurnal", 60, 100, seed=0)
+        lagm = CompletionLag(vol, p_late=0.5, lag_decay=0.5, max_lag=2)
+        vs = lagm.init_state()
+        for i in range(5):
+            lag, vs = lagm.sample(jax.random.PRNGKey(i), vs)
+            assert lag.shape == (60,) and lag.dtype == jnp.int32
+        # diurnal state (round index) advanced through the wrapper
+        assert int(vs) == 5
+
+    def test_on_time_bits_inverse_adapter(self):
+        rho = jnp.asarray(paper_success_rates(40))
+        lagm = CompletionLag(make_volatility("bernoulli", rho), p_late=0.7, max_lag=3)
+        view = OnTimeBits(lagm)
+        k = jax.random.PRNGKey(3)
+        lag, _ = lagm.sample(k, lagm.init_state())
+        x, _ = view.sample(k, view.init_state())
+        np.testing.assert_array_equal(np.asarray(x), (np.asarray(lag) == 0).astype(np.float32))
+
+
+class TestAsyncScanBitIdentity:
+    """The S=0 guarantee: async buffer disabled == legacy sync engine, same
+    PRNG keys (and with a BinaryLag, *any* S is bit-identical)."""
+
+    SCHEMES = [("e3cs", dict(frac=0.5)), ("random", {}), ("ucb", {}), ("fedcs", {})]
+
+    @pytest.mark.parametrize("scheme,kw", SCHEMES, ids=[s for s, _ in SCHEMES])
+    @pytest.mark.parametrize("S", [0, 3])
+    def test_binary_lag_any_S_matches_sync_engine(self, scheme, kw, S):
+        K, k, T = 80, 16, 150
+        rho = paper_success_rates(K)
+        a = async_selection_sim(
+            scheme, K=K, k=k, T=T, seed=7, staleness=S,
+            lag_model=BinaryLag(make_volatility("bernoulli", rho)), rho=rho, **kw,
+        )
+        b = scan_selection_sim(
+            scheme, K=K, k=k, T=T, seed=7, vol=make_volatility("bernoulli", rho), rho=rho, **kw,
+        )
+        assert np.array_equal(a["masks"], b["masks"])
+        assert np.array_equal(a["counts"], b["counts"])
+        np.testing.assert_allclose(a["ps"], b["ps"], atol=1e-6)
+        # a binary lag never schedules late work: zero stale credit at any S
+        assert a["stale"].sum() == 0.0
+        # on-time successes == the sync success count
+        np.testing.assert_allclose(a["on_time"], (b["masks"] * b["xs"]).sum(1), atol=0)
+
+    def test_s0_matches_sync_under_on_time_view(self):
+        # with a *real* lag model at S=0, async == sync driven by the
+        # on-time-bits view of the same model (same rng consumption)
+        K, k, T = 60, 12, 120
+        rho = paper_success_rates(K)
+
+        def lagm():
+            return CompletionLag(make_volatility("markov", rho, stickiness=0.9), p_late=0.7, max_lag=3)
+
+        a = async_selection_sim("e3cs", K=K, k=k, T=T, frac=0.5, seed=5, staleness=0, lag_model=lagm(), rho=rho)
+        b = scan_selection_sim("e3cs", K=K, k=k, T=T, frac=0.5, seed=5, vol=OnTimeBits(lagm()), rho=rho)
+        assert np.array_equal(a["masks"], b["masks"])
+        assert a["stale"].sum() == 0.0
+
+    def test_lean_matches_full(self):
+        K, k, T = 60, 12, 100
+        rho = paper_success_rates(K)
+
+        def run(outputs):
+            return async_selection_sim(
+                "e3cs", K=K, k=k, T=T, frac=0.5, seed=2, staleness=2, alpha=0.5,
+                lag_model=CompletionLag(make_volatility("bernoulli", rho), max_lag=2),
+                rho=rho, outputs=outputs,
+            )
+
+        full, lean = run("full"), run("lean")
+        np.testing.assert_allclose(full["on_time"], lean["on_time"], atol=0)
+        np.testing.assert_allclose(full["stale"], lean["stale"], atol=0)
+        assert full["cep"] == lean["cep"]
+        np.testing.assert_array_equal(full["sel_counts"], lean["sel_counts"])
+
+
+class TestStalenessCredit:
+    def test_hand_computed_credit_schedule(self):
+        # 3 clients, k=3 (everyone selected), fixed lags:
+        #   t=0: lags (0, 1, 2) -> on_time 1; credit 0.5 at t=1, 0.25 at t=2
+        #   t=1: lags (0, 0, dead) -> on_time 2; arriving 0.5
+        #   t=2: all dead -> arriving 0.25
+        #   t=3: all dead -> nothing in flight
+        lags = [[0, 1, 2], [0, 0, DEAD_LAG], [DEAD_LAG] * 3, [DEAD_LAG] * 3]
+        fl = FLConfig(K=3, k=3, rounds=4, scheme="random")
+        run, state0 = build_scan_runner(
+            fl, _FixedLag(lags), paper_success_rates(3), staleness=2, alpha=0.5
+        )
+        state, masks, out_lags, ps, sigmas, arrived = run(
+            state0, jax.random.PRNGKey(0), jnp.zeros((4, 0), jnp.float32)
+        )
+        np.testing.assert_array_equal(np.asarray(masks), np.ones((4, 3)))
+        np.testing.assert_allclose(np.asarray(arrived).sum(1), [0.0, 0.5, 0.25, 0.0], atol=1e-7)
+        assert float(state.succ_hist) == 3.0  # on-time: 1 + 2
+        assert float(state.cep) == pytest.approx(3.75)  # + 0.5 + 0.25
+
+    def test_lag_beyond_buffer_is_dropped(self):
+        # S=1 buffer: a lag-2 completion never lands
+        lags = [[2, 2, 2]] + [[DEAD_LAG] * 3] * 3
+        fl = FLConfig(K=3, k=3, rounds=4, scheme="random")
+        run, state0 = build_scan_runner(
+            fl, _FixedLag(lags), paper_success_rates(3), staleness=1, alpha=0.5
+        )
+        state, *_, arrived = run(state0, jax.random.PRNGKey(0), jnp.zeros((4, 0), jnp.float32))
+        assert float(jnp.sum(arrived)) == 0.0
+        assert float(state.cep) == 0.0
+
+    def test_staleness_weights(self):
+        lag = jnp.asarray([0, 1, 2, 3, DEAD_LAG], jnp.int32)
+        w = np.asarray(staleness_weights(lag, 0.5, 2))
+        np.testing.assert_allclose(w, [1.0, 0.5, 0.25, 0.0, 0.0])
+
+
+class TestAggregateAsync:
+    def _g(self):
+        return {"w": jnp.zeros(())}
+
+    def test_hand_computed_three_client_two_lag(self):
+        # theta=0; client deltas (1, 2, 3); lags (0, 1, 2); alpha=0.5; equal
+        # fedavg weights 1/3:  now = 1/3*1;  t+1 = 1/3*0.5*2;  t+2 = 1/3*0.25*3
+        cohort = {"w": jnp.asarray([1.0, 2.0, 3.0])}
+        lag = jnp.asarray([0, 1, 2], jnp.int32)
+        new, late = aggregate_async(
+            self._g(), cohort, lag, jnp.ones(3), jnp.float32(3.0), 3, "fedavg", alpha=0.5, staleness=2
+        )
+        assert float(new["w"]) == pytest.approx(1.0 / 3.0)
+        np.testing.assert_allclose(np.asarray(late["w"]), [1.0 / 3.0, 0.25], rtol=1e-6)
+
+    def test_staleness_zero_equals_sync_aggregate(self):
+        rng = np.random.default_rng(0)
+        cohort = {"w": jnp.asarray(rng.normal(size=(4, 3)), jnp.float32)}
+        g = {"w": jnp.asarray(rng.normal(size=(3,)), jnp.float32)}
+        succ = jnp.asarray([1.0, 0.0, 1.0, 0.0])
+        lag = jnp.where(succ > 0, 0, DEAD_LAG).astype(jnp.int32)
+        sizes = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+        a = aggregate(g, cohort, succ, sizes, jnp.float32(10.0), 10, "fedavg")
+        b, late = aggregate_async(g, cohort, lag, sizes, jnp.float32(10.0), 10, "fedavg", staleness=0)
+        np.testing.assert_allclose(np.asarray(a["w"]), np.asarray(b["w"]), atol=0)
+        assert late["w"].shape == (0, 3)
+
+    def test_dead_and_overflow_lags_contribute_nothing(self):
+        cohort = {"w": jnp.asarray([5.0, 7.0])}
+        lag = jnp.asarray([DEAD_LAG, 3], jnp.int32)  # dead; beyond S=2
+        new, late = aggregate_async(
+            self._g(), cohort, lag, jnp.ones(2), jnp.float32(2.0), 2, "fedavg", alpha=0.5, staleness=2
+        )
+        assert float(new["w"]) == 0.0
+        np.testing.assert_allclose(np.asarray(late["w"]), [0.0, 0.0])
+
+
+class TestServerVolatilitySpecs:
+    """build_volatility accepts builtin strings (regression), scenario names,
+    and model objects."""
+
+    def test_builtin_string_path_regression(self):
+        from repro.fl.server import build_volatility
+        from repro.core.volatility import DeadlineVolatility, MarkovVolatility
+
+        fl = FLConfig(K=40, volatility="markov")
+        vol, rho = build_volatility(fl, 40)
+        assert isinstance(vol, MarkovVolatility)
+        np.testing.assert_allclose(np.asarray(rho), paper_success_rates(40))
+        vol2, _ = build_volatility(FLConfig(K=40, volatility="deadline"), 40)
+        assert isinstance(vol2, DeadlineVolatility)
+
+    def test_scenario_name(self):
+        from repro.fl.server import build_volatility
+        from repro.scenarios import DiurnalVolatility
+
+        vol, rho = build_volatility(FLConfig(K=40, rounds=200, volatility="diurnal"), 40)
+        assert isinstance(vol, DiurnalVolatility)
+        assert rho.shape == (40,)
+
+    def test_model_object(self):
+        from repro.fl.server import build_volatility
+
+        rho = jnp.asarray(paper_success_rates(40))
+        obj = make_volatility("markov", rho, stickiness=0.9)
+        vol, rho_out = build_volatility(FLConfig(K=40), 40, volatility=obj)
+        assert vol is obj
+        np.testing.assert_allclose(np.asarray(rho_out), np.asarray(rho))
+
+    def test_unknown_name_raises(self):
+        from repro.fl.server import build_volatility
+
+        with pytest.raises(ValueError, match="unknown volatility"):
+            build_volatility(FLConfig(K=40, volatility="not_a_thing"), 40)
+
+
+def test_async_fl_server_trains_and_applies_stale_updates():
+    # ~7s: cheap enough to keep in the default (CI) run — this is the only
+    # end-to-end coverage of the server-side pending-delta scheduling
+
+    from repro.data import ClientStore, make_image_dataset, partition_primary_label
+    from repro.fl import FLServer
+    from repro.models import build_model
+    from repro.configs import get_config
+
+    cfg = get_config("emnist-cnn")
+    fl = FLConfig(K=20, k=4, rounds=8, scheme="e3cs", quota="const", quota_frac=0.5,
+                  samples_per_client=40, batch_size=20, local_epochs=(1,),
+                  staleness_rounds=2, staleness_alpha=0.5, late_prob=0.9)
+    data = make_image_dataset(26, (28, 28, 1), 1200, 400, seed=0)
+    idxs = partition_primary_label(data["y"], fl.K, fl.samples_per_client, seed=0)
+    store = ClientStore(data, idxs)
+    srv = FLServer(build_model(cfg), fl, store)
+    state = srv.init_state(jax.random.PRNGKey(0))
+    state, hist = srv.run(state, eval_every=100)
+    assert all(bool(jnp.isfinite(leaf).all()) for leaf in jax.tree.leaves(state.params))
+    assert hist["n_late"] > 0  # stale updates actually happened and were applied
+
+
+def test_compiled_service_loop_smoke():
+    from repro.launch.select_serve import run_service_compiled
+
+    rep = run_service_compiled(J=3, K_max=128, rounds=8, seed=0, staleness=2, reps=1)
+    assert rep["ticks"] == 24
+    assert rep["on_time_total"] > 0
+    assert rep["stale_credit_total"] > 0
+    sync = run_service_compiled(J=3, K_max=128, rounds=8, seed=0, staleness=0, reps=1)
+    assert sync["stale_credit_total"] == 0.0
+    assert sync["mode"] == "compiled_sync"

@@ -69,7 +69,6 @@ class TestLocalUpdate:
     def test_masked_steps_are_noops(self):
         model, params, batches = self._setup()
         local = make_local_update(model, sgd(0.05, 0.9))
-        full_mask = jnp.ones((4,))
         half_mask = jnp.asarray([1.0, 1.0, 0.0, 0.0])
         p_half, _ = local(params, batches, half_mask, jax.random.PRNGKey(1))
         b2 = jax.tree.map(lambda a: a[:2], batches)

@@ -5,9 +5,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
-from repro.kernels.flash_attention import flash_attention_kernel_call
 from repro.kernels.gumbel_topk import gumbel_topk_kernel_call
-from repro.kernels.ssd_scan import ssd_scan_kernel_call
 
 RNG = np.random.default_rng(0)
 

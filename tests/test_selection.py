@@ -6,19 +6,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.selection import (
-    e3cs_init,
-    e3cs_round,
-    make_quota_schedule,
-    oracle_cep,
-    prob_alloc,
-    prob_alloc_reference,
-    regret,
-    sample_selection,
-    selection_mask,
-    theorem1_bound,
-    theorem1_eta,
-)
+from repro.core.selection import e3cs_init, e3cs_round, make_quota_schedule, oracle_cep, prob_alloc, prob_alloc_reference, regret, sample_selection, theorem1_bound, theorem1_eta
 from repro.core.selection.sampling import inclusion_probability_mc
 from repro.core.volatility import BernoulliVolatility, paper_success_rates
 

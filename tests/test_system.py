@@ -13,10 +13,10 @@ import numpy as np
 import pytest
 
 from repro.configs import FLConfig
-from repro.core.fairness import cep, jain_index, success_ratio
+from repro.core.fairness import jain_index
 from repro.core.selection import make_quota_schedule
 from repro.core.volatility import BernoulliVolatility, paper_success_rates
-from repro.fl.round import ServerState, init_server_state, make_select_fn
+from repro.fl.round import init_server_state, make_select_fn
 from repro.core.selection import e3cs_update, selection_mask
 
 K, k, T = 100, 20, 600
