@@ -9,13 +9,25 @@ Rows (name,us_per_call,derived):
                                error vs the paper's literal case enumeration
   engine/multi_job/J=...     — one batched dispatch vs J single dispatches
 
-CLI:  python benchmarks/engine_scale.py [--smoke]
+``--sharded`` runs the K-sharded suite instead (and writes
+``BENCH_sharded.json``): whole-horizon sharded scans at D ∈ {1, 2, 4, 8},
+`prob_alloc_shmap` vs the local bisection (plain and block-fused), and — full
+protocol only — a K=1e7 lean horizon on the widest mesh.  Forcing a
+multi-device CPU host requires ``XLA_FLAGS=--xla_force_host_platform_
+device_count=8`` *before* jax initialises; when the flag is absent this
+script injects it for ``--sharded`` runs.
+
+CLI:  python benchmarks/engine_scale.py [--smoke] [--sharded]
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
+
+if "--sharded" in sys.argv and "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8").strip()
 
 import jax
 import jax.numpy as jnp
@@ -95,6 +107,109 @@ def bench_multi_job(J_list, K: int, out: dict):
     out["multi_job"] = rows
 
 
+def _time_sharded_run(run, state, key, xs, reps: int = 2):
+    jax.block_until_ready(run(state, key, xs)[0].sel_counts)  # compile off the clock
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = run(state, key, xs)
+        jax.block_until_ready(out[0].sel_counts)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_sharded_scaling(D_list, K: int, T: int, block: int, out: dict):
+    from repro.configs.base import FLConfig
+    from repro.core.volatility import BernoulliVolatility, paper_success_rates
+    from repro.engine.sharded import build_sharded_scan_runner
+    from repro.launch.mesh import make_host_mesh
+
+    k = max(100, K // 1000)
+    rho = paper_success_rates(K)
+    vol = BernoulliVolatility(jnp.asarray(rho))
+    fl = FLConfig(K=K, k=k, rounds=T, scheme="e3cs", quota_frac=0.5, allocator="bisect")
+    key = jax.random.PRNGKey(0)
+    xs = jnp.zeros((T, 0), jnp.float32)
+    rows = {}
+    base = None
+    for D in D_list:
+        run, state = build_sharded_scan_runner(fl, vol, rho, make_host_mesh(D), outputs="lean", block=block)
+        best = _time_sharded_run(run, state, key, xs)
+        rps = T / best
+        if base is None:
+            base = rps
+        rows[f"D={D}"] = {"K": K, "k": k, "T": T, "rounds_per_s": round(rps, 2), "vs_D1": round(rps / base, 2)}
+        emit(f"engine/sharded/D={D}", best / T * 1e6, f"K={K};k={k};rounds_per_s={rps:.1f};vs_D1={rps / base:.2f}x")
+    out["scaling"] = rows
+
+
+def bench_sharded_alloc(D: int, K: int, block: int, out: dict):
+    from repro.core.selection import prob_alloc_reference
+    from repro.engine.sharded import masked_prob_alloc, prob_alloc_shmap
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh(D)
+    rng = np.random.default_rng(0)
+    k = max(100, K // 50)
+    sigma = 0.5 * k / K
+    w = jnp.asarray(rng.gamma(0.3, 1.0, K).astype(np.float32))  # heavy tail => capping
+    local = jax.jit(lambda w: masked_prob_alloc(w, k, sigma)[0])
+    local_blk = jax.jit(lambda w: masked_prob_alloc(w, k, sigma, block=block)[0])
+    shmap = jax.jit(lambda w: prob_alloc_shmap(w, k, sigma, mesh)[0])
+    shmap_blk = jax.jit(lambda w: prob_alloc_shmap(w, k, sigma, mesh, block=block)[0])
+    us = {name: time_fn(lambda f=f: jax.block_until_ready(f(w)))
+          for name, f in [("local", local), (f"local_block{block}", local_blk),
+                          (f"shmap_D{D}", shmap), (f"shmap_D{D}_block{block}", shmap_blk)]}
+    err_blk = float(jnp.max(jnp.abs(local(w) - local_blk(w))))
+    err_shm = float(jnp.max(jnp.abs(local(w) - shmap(w))))
+    derived = f"local_us={us['local']:.0f};block_us={us[f'local_block{block}']:.0f};max_err_block={err_blk:.1e};max_err_shmap={err_shm:.1e}"
+    if K <= 100_000:
+        pr, _ = prob_alloc_reference(np.asarray(w), k, sigma)
+        derived += f";max_err_vs_ref={np.abs(np.asarray(shmap(w)) - pr).max():.1e}"
+    emit(f"engine/sharded/prob_alloc/K={K}", us[f"shmap_D{D}"], derived)
+    out["alloc"] = {"K": K, "k": k, "D": D, "block": block, "us": us,
+                    "max_err_block_vs_plain": err_blk, "max_err_shmap_vs_local": err_shm}
+
+
+def bench_sharded_mega(D: int, K: int, T: int, block: int, out: dict):
+    """The horizon a single device cannot sensibly hold: every per-client
+    vector in the compiled round divides by D."""
+    from repro.configs.base import FLConfig
+    from repro.core.volatility import BernoulliVolatility, paper_success_rates
+    from repro.engine.sharded import build_sharded_scan_runner
+    from repro.launch.mesh import make_host_mesh
+
+    k = K // 1000
+    rho = paper_success_rates(K)
+    vol = BernoulliVolatility(jnp.asarray(rho))
+    fl = FLConfig(K=K, k=k, rounds=T, scheme="e3cs", quota_frac=0.5, allocator="bisect")
+    run, state = build_sharded_scan_runner(fl, vol, rho, make_host_mesh(D), outputs="lean", block=block)
+    best = _time_sharded_run(run, state, jax.random.PRNGKey(0), jnp.zeros((T, 0), jnp.float32), reps=1)
+    rps = T / best
+    out["mega"] = {
+        "K": K, "k": k, "T": T, "D": D, "rounds_per_s": round(rps, 2),
+        "client_decisions_per_s": round(K * rps, 0),
+        "per_device_state_mb": round(4.0 * K / D / 1e6, 1),
+    }
+    emit(f"engine/sharded/mega/K={K}", best / T * 1e6, f"D={D};rounds_per_s={rps:.2f}")
+
+
+def run_sharded(smoke: bool = False):
+    out = {"host_devices": len(jax.devices()), "cpu_count": os.cpu_count()}
+    n_dev = len(jax.devices())
+    D_list = [d for d in (1, 2, 4, 8) if d <= n_dev]
+    block = 4
+    if smoke:
+        bench_sharded_scaling(D_list, 200_000, 30, block, out)
+        bench_sharded_alloc(min(8, n_dev), 100_000, block, out)
+    else:
+        bench_sharded_scaling(D_list, 1_000_000, 100, block, out)
+        bench_sharded_alloc(min(8, n_dev), 1_000_000, block, out)
+        bench_sharded_mega(min(8, n_dev), 10_000_000, 40, block, out)
+    save_json("sharded", out)
+    return out
+
+
 def run(smoke: bool = False):
     out = {}
     T = 300 if smoke else 2500
@@ -112,9 +227,13 @@ def run(smoke: bool = False):
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true", help="reduced CPU/CI protocol")
+    ap.add_argument("--sharded", action="store_true", help="run the K-sharded mesh suite (only)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(smoke=args.smoke)
+    if args.sharded:
+        run_sharded(smoke=args.smoke)
+    else:
+        run(smoke=args.smoke)
 
 
 if __name__ == "__main__":

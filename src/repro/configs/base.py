@@ -182,6 +182,7 @@ class FLConfig:
     quota_frac: float = 0.5  # sigma_t = frac * k/K for const
     eta: float = 0.5  # E3CS learning rate
     sampler: str = "plackett_luce"  # plackett_luce | systematic
+    allocator: str = "sort"  # sort (paper case-analysis) | bisect (sort-free, shardable)
     pow_d: int = 40  # candidate-set size for pow-d
     # local update (o1)
     local_update: str = "fedavg"  # fedavg | fedprox

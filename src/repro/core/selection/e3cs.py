@@ -53,6 +53,9 @@ def e3cs_update(
     k: int,
     sigma: jax.Array,
     eta: float,
+    K: int | None = None,
+    axis_name: str | None = None,
+    active: jax.Array | None = None,
 ) -> E3CSState:
     """Exponential-weight update, Eqs. (16)-(17).
 
@@ -64,18 +67,34 @@ def e3cs_update(
          observed; others are multiplied by zero anyway).
       sigma: scalar fairness quota ``sigma_t``.
       eta: learning rate (static float).
+      K: global population size when the arrays are one *shard* of the
+         population (default: ``p.shape[0]``, the dense case).
+      axis_name: mesh axis for the re-centering max (``pmax``) when sharded.
+      active: optional 0/1 validity mask — padding slots are frozen like
+         capped arms and pinned at 0 after re-centering.
+
+    This is the single source of the Eq. 16/17 math for both the dense engine
+    and the K-sharded round (``repro.engine.sharded``); with the defaults it
+    is bit-identical to the historical dense-only update.
     """
-    K = p.shape[0]
+    Kt = p.shape[0] if K is None else K
     xhat = sel_mask * x / jnp.maximum(p, 1e-12)  # Eq. (16)
-    residual = jnp.asarray(k, p.dtype) - K * sigma
-    step = residual * eta * xhat / K  # Eq. (17) exponent
+    residual = jnp.asarray(k, p.dtype) - Kt * sigma
+    step = residual * eta * xhat / Kt  # Eq. (17) exponent
     # Numerical safeguard: the regret proof's Taylor step (Fact 8) assumes the
     # exponent <= 1; with sigma=0 a rarely-selected arm can have p ~ 0 and an
     # unbounded importance weight, which would blow the weights up in fp32.
     # Clamping to the proof's regime keeps the update well-posed.
     step = jnp.minimum(step, 1.0)
-    logw = state.logw + jnp.where(capped, 0.0, step)
-    logw = logw - jnp.max(logw)  # re-center (ProbAlloc is shift-invariant)
+    frozen = capped if active is None else capped | (active == 0)
+    logw = state.logw + jnp.where(frozen, 0.0, step)
+    # re-center (ProbAlloc is shift-invariant)
+    m = jnp.max(logw) if active is None else jnp.max(jnp.where(active > 0, logw, -jnp.inf))
+    if axis_name is not None:
+        m = jax.lax.pmax(m, axis_name)
+    logw = logw - m
+    if active is not None:
+        logw = logw * active  # keep padding slots pinned at 0
     return E3CSState(logw=logw, t=state.t + 1)
 
 

@@ -23,6 +23,9 @@ import jax.numpy as jnp
 
 __all__ = [
     "plackett_luce_sample",
+    "perturbed_scores",
+    "local_topk_candidates",
+    "merge_topk_candidates",
     "systematic_sample",
     "sample_selection",
     "selection_mask",
@@ -31,15 +34,47 @@ __all__ = [
 _EPS = 1e-20
 
 
+def perturbed_scores(rng: jax.Array, p: jax.Array) -> jax.Array:
+    """The Plackett-Luce score field ``log p + Gumbel``: its exact top-k is a
+    multinomialNR draw.  Factored out so the dense sampler and the K-sharded
+    engine (``repro.engine.sharded``) perturb identically."""
+    g = jax.random.gumbel(rng, p.shape, p.dtype)
+    return jnp.log(jnp.maximum(p, _EPS)) + g
+
+
 def plackett_luce_sample(rng: jax.Array, p: jax.Array, k: int) -> jax.Array:
     """Gumbel top-k == multinomial sampling without replacement (paper's).
 
     Returns the ``(k,)`` int32 indices of the selected clients.
     """
-    g = jax.random.gumbel(rng, p.shape, p.dtype)
-    score = jnp.log(jnp.maximum(p, _EPS)) + g
-    _, idx = jax.lax.top_k(score, k)
+    _, idx = jax.lax.top_k(perturbed_scores(rng, p), k)
     return idx.astype(jnp.int32)
+
+
+def local_topk_candidates(scores: jax.Array, k: int, offset) -> tuple[jax.Array, jax.Array]:
+    """One shard's top-k candidates ``(values, global_indices)`` for a
+    distributed top-k: local ``lax.top_k`` plus the shard's global offset."""
+    v, i = jax.lax.top_k(scores, k)
+    return v, i.astype(jnp.int32) + jnp.asarray(offset, jnp.int32)
+
+
+def merge_topk_candidates(vals: jax.Array, idx: jax.Array, k: int) -> jax.Array:
+    """Merge per-shard top-k candidates into the exact global top-k indices.
+
+    ``vals`` / ``idx`` hold the D shards' candidates (any shape; flattened in
+    shard-major order, each shard's block sorted descending as ``lax.top_k``
+    emits it).  **Containment**: any member of the global top-k has fewer than
+    k global scores above it, hence fewer than k *within its own shard*, so it
+    appears in that shard's local top-k — the union of the D candidate lists
+    always contains the global top-k, and one ``top_k`` over the ``D*k``
+    candidates recovers it exactly.  **Tie order** also matches a dense
+    ``lax.top_k`` (lowest index first): shards cover contiguous index ranges
+    in order, and within a shard equal values are emitted in index order, so
+    candidate position is index order among ties.
+    """
+    v = vals.reshape(-1)
+    _, pos = jax.lax.top_k(v, k)
+    return idx.reshape(-1)[pos].astype(jnp.int32)
 
 
 def systematic_sample(rng: jax.Array, p: jax.Array, k: int) -> jax.Array:

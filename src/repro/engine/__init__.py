@@ -8,7 +8,15 @@ Sub-modules:
 See ``README.md`` in this directory for the API and scaling model.
 """
 from .scan_sim import async_selection_sim, build_scan_runner, make_sim_step, scan_selection_sim
-from .sharded import prob_alloc_sharded
+from .sharded import (
+    build_sharded_scan_runner,
+    distributed_topk,
+    masked_prob_alloc,
+    plackett_luce_shmap,
+    prob_alloc_sharded,
+    prob_alloc_shmap,
+    sharded_selection_sim,
+)
 from .multi_job import (
     MultiJobConfig,
     MultiJobState,
@@ -22,7 +30,13 @@ __all__ = [
     "build_scan_runner",
     "make_sim_step",
     "scan_selection_sim",
+    "build_sharded_scan_runner",
+    "distributed_topk",
+    "masked_prob_alloc",
+    "plackett_luce_shmap",
     "prob_alloc_sharded",
+    "prob_alloc_shmap",
+    "sharded_selection_sim",
     "MultiJobConfig",
     "MultiJobState",
     "make_multi_job",

@@ -203,6 +203,9 @@ def build_scan_runner(
     outputs: str = "full",
     staleness: Optional[int] = None,
     alpha: float = 0.5,
+    mesh=None,
+    carry_key: bool = False,
+    scan_length: Optional[int] = None,
 ):
     """Compile a whole-horizon runner for an arbitrary volatility model.
 
@@ -237,10 +240,26 @@ def build_scan_runner(
     ``S=0`` reproduces today's synchronous drop semantics exactly (late work
     is never credited), and the program stays free of any (S, K) buffer.
 
+    With ``mesh`` set, the whole round body — allocator, Plackett-Luce draw,
+    volatility and E3CS update — executes data-parallel over the K-sharded
+    device mesh instead (``repro.engine.sharded.build_sharded_scan_runner``;
+    packed trace rows shard along K too).  ``carry_key`` / ``scan_length``
+    support chunked horizons: the runner scans ``scan_length`` rounds
+    (default ``fl.rounds`` — the quota schedule always spans ``fl.rounds``)
+    and, when ``carry_key`` is set, returns the carried PRNG key after the
+    final state so a disk-streamed replay (``repro.scenarios.replay``) can
+    resume the next chunk bit-identically.
+
     Unlike ``scan_selection_sim`` this builder is not memoised: hold on to the
     returned ``run`` to amortise compilation across repeat calls (the
     scenario harness and benchmarks do).
     """
+    if mesh is not None:
+        if staleness is not None or carry_key or scan_length is not None:
+            raise ValueError("mesh-sharded runners do not support staleness / carry_key / scan_length yet")
+        from repro.engine.sharded import build_sharded_scan_runner
+
+        return build_sharded_scan_runner(fl, vol, rho, mesh, override=override, outputs=outputs)
     if outputs not in ("full", "lean"):
         raise ValueError(f"unknown outputs mode {outputs!r} (want 'full' or 'lean')")
     lean = outputs == "lean"
@@ -248,10 +267,12 @@ def build_scan_runner(
     quota_fn = make_quota_schedule(fl.quota, fl.k, fl.K, fl.rounds, fl.quota_frac)
     step = make_sim_step(fl, quota_fn, vol, rho, override=override, lean=lean, staleness=staleness, alpha=alpha)
     state0 = init_server_state({}, fl.K, vol.init_state())
-    T = fl.rounds
+    T = fl.rounds if scan_length is None else int(scan_length)
 
     if staleness is not None:
         S = int(staleness)
+        if carry_key:
+            raise ValueError("carry_key is only supported for synchronous runners")
 
         @jax.jit
         def run_async(state, key, xs_in):
@@ -267,21 +288,25 @@ def build_scan_runner(
 
     @jax.jit
     def run(state, key, xs_in):
-        (state, _), out = jax.lax.scan(step, (state, key), xs_in, length=T)
+        (state, key), out = jax.lax.scan(step, (state, key), xs_in, length=T)
+        head = (state, key) if carry_key else (state,)
         if lean:
             successes, sigmas = out
-            return state, successes, sigmas
+            return (*head, successes, sigmas)
         masks, xs, ps, sigmas = out
-        return state, masks, xs, ps, sigmas
+        return (*head, masks, xs, ps, sigmas)
 
     return run, state0
 
 
 @functools.lru_cache(maxsize=64)
-def _compiled_runner(scheme, K, k, T, quota, frac, eta, sampler, volatility, stickiness, seed, override):
+def _compiled_runner(scheme, K, k, T, quota, frac, eta, sampler, volatility, stickiness, seed, override, allocator):
     """Cache the jitted whole-horizon runner per static configuration, so
     repeat calls (sweeps, benchmarks) pay compilation once."""
-    fl = FLConfig(K=K, k=k, rounds=T, scheme=scheme, quota=quota, quota_frac=frac, eta=eta, sampler=sampler)
+    fl = FLConfig(
+        K=K, k=k, rounds=T, scheme=scheme, quota=quota, quota_frac=frac, eta=eta, sampler=sampler,
+        allocator=allocator,
+    )
     rho = jnp.asarray(paper_success_rates(K))
     vol = make_volatility(volatility, rho, stickiness=stickiness, seed=seed)
     return build_scan_runner(fl, vol, rho, override=override)
@@ -303,18 +328,24 @@ def scan_selection_sim(
     packed_override: Optional[np.ndarray] = None,
     vol=None,
     rho=None,
+    allocator: str = "sort",
 ) -> Dict[str, np.ndarray]:
     """Drop-in replacement for the legacy ``selection_sim`` loop.
 
     ``vol`` (an ``(init_state, sample)`` object) takes precedence over the
     ``volatility`` name; ``packed_override`` streams a ``(T, ceil(K/8))``
     uint8 bit-packed trace through the scan, unpacked on the fly.
+    ``allocator="bisect"`` swaps E3CS's sorted ProbAlloc for the sort-free
+    bisection (identical to ~1e-6 in p; the sharded engine's reference).
     """
     if xs_override is not None and packed_override is not None:
         raise ValueError("pass at most one of xs_override / packed_override")
     override = "dense" if xs_override is not None else ("packed" if packed_override is not None else "none")
     if vol is not None or rho is not None:
-        fl = FLConfig(K=K, k=k, rounds=T, scheme=scheme, quota=quota, quota_frac=frac, eta=eta, sampler=sampler)
+        fl = FLConfig(
+            K=K, k=k, rounds=T, scheme=scheme, quota=quota, quota_frac=frac, eta=eta, sampler=sampler,
+            allocator=allocator,
+        )
         if rho is None:
             rho = getattr(vol, "rho", None)
         if rho is None:
@@ -324,7 +355,7 @@ def scan_selection_sim(
         run, state = build_scan_runner(fl, vol, rho, override=override)
     else:
         run, state = _compiled_runner(
-            scheme, K, k, T, quota, frac, eta, sampler, volatility, stickiness, seed, override
+            scheme, K, k, T, quota, frac, eta, sampler, volatility, stickiness, seed, override, allocator
         )
     key = jax.random.PRNGKey(seed)
     if override == "dense":

@@ -66,10 +66,22 @@ def make_select_fn(fl_cfg, quota_fn, rho=None):
     """Returns jitted select(state, rng) -> (idx, p, capped, sigma)."""
     K, k = fl_cfg.K, fl_cfg.k
 
+    allocator = getattr(fl_cfg, "allocator", "sort")
+    if allocator not in ("sort", "bisect"):
+        raise ValueError(f"unknown allocator {allocator!r} (want 'sort' or 'bisect')")
+
     def select(state: ServerState, rng: jax.Array):
         sigma = quota_fn(state.t)
         if fl_cfg.scheme == "e3cs":
-            p, capped = e3cs_probs(state.e3cs, k, sigma)
+            if allocator == "bisect":
+                # sort-free fixed point (the shardable engine allocator);
+                # lazy import — repro.engine depends on this module
+                from repro.engine.sharded import masked_prob_alloc
+
+                w = jnp.exp(state.e3cs.logw - jnp.max(state.e3cs.logw))
+                p, capped = masked_prob_alloc(w, k, sigma)
+            else:
+                p, capped = e3cs_probs(state.e3cs, k, sigma)
             idx = sample_selection(rng, p, k, fl_cfg.sampler)
         elif fl_cfg.scheme == "random":
             idx = random_select(rng, K, k)

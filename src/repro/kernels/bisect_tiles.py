@@ -1,0 +1,110 @@
+"""Fused bisection reduction: every remaining capped sum of a bracket-
+refinement block in ONE pass over the weights.
+
+ProbAlloc's sort-free alpha-search (``repro.engine.sharded``) evaluates
+``s(cap) = sum_j min(w_j, cap)`` once per bisection step — 48 full sweeps of
+the (K,) weight vector, each a separate HBM round-trip at fleet scale.  But a
+bracket-refinement *block* of ``b`` halvings only ever probes caps on the
+``2**b - 1`` equally spaced interior points of the current bracket (the dyadic
+grid the ``b`` sequential midpoints land on), and ``s`` is monotone in
+``cap``, so evaluating all of them at once and binary-searching the
+*precomputed* sums resolves the whole block: 48 sweeps collapse to
+``ceil(48/b)``.
+
+This kernel computes that batched reduction: the grid walks weight tiles, each
+program loads one ``(tile,)`` slab of ``w`` into VMEM **once** and accumulates
+``min(w, cap)`` partial sums for every candidate cap against it — the weights
+stay resident across the block's iterations instead of being re-streamed from
+HBM per step.  Output is the ``(n_caps,)`` vector of capped sums.  Under the
+K-sharded engine this is the *per-shard local reduction*: each device runs it
+on its slab and one `psum` of the ``(n_caps,)`` partials per block replaces
+one scalar `psum` per step.
+
+Requirements: ``caps >= 0`` and padding entries of ``w`` equal to 0, so pad
+slots contribute ``min(0, cap) = 0`` and no masking is needed.
+
+``bisect_block_sums_ref`` is the jnp reference (and the CPU fast path — the
+interpreter would dominate a scan horizon); ``tests/test_sharded.py`` pins
+kernel == reference in interpret mode, ragged shapes included.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["bisect_block_sums_ref", "bisect_block_sums_kernel_call", "bisect_block_sums"]
+
+
+def bisect_block_sums_ref(w: jax.Array, caps: jax.Array, tile: int = 8192) -> jax.Array:
+    """``(n_caps,)`` capped sums ``s_b = sum_j min(w_j, caps_b)``.
+
+    Two-level (per-tile, then cross-tile) summation — the same reduction shape
+    as ``repro.engine.sharded._tiled_sum``, batched over the cap axis so the
+    weights are read once for the whole block.
+    """
+    n = w.shape[0]
+    tile = min(tile, max(n, 1))
+    pad = (-n) % tile
+    if pad:
+        w = jnp.concatenate([w, jnp.zeros((pad,), w.dtype)])
+    wt = w.reshape(-1, tile)
+    caps = caps.astype(w.dtype)
+    return jnp.sum(jnp.sum(jnp.minimum(wt[:, :, None], caps[None, None, :]), axis=1), axis=0)
+
+
+def _kernel(w_ref, caps_ref, out_ref, *, n_caps):
+    # accumulates across grid programs into one shared output block — safe
+    # only where the grid executes sequentially (TPU; the interpreter); the
+    # dispatcher below never routes parallel-grid backends here
+    ti = pl.program_id(0)
+
+    @pl.when(ti == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    w = w_ref[...].astype(jnp.float32)  # (tile,) — loaded once for all caps
+    caps = caps_ref[...].astype(jnp.float32)  # (n_caps,)
+    out_ref[...] += jnp.sum(jnp.minimum(w[:, None], caps[None, :]), axis=0)
+
+
+def bisect_block_sums_kernel_call(w: jax.Array, caps: jax.Array, tile: int = 8192, interpret: bool = False):
+    """``w``: (K,) non-negative weights; ``caps``: (n_caps,) non-negative
+    caps.  Returns the (n_caps,) float32 capped-sum vector."""
+    K = w.shape[0]
+    n_caps = caps.shape[0]
+    tile = min(tile, max(K, 8))
+    K_p = math.ceil(K / tile) * tile
+    if K_p != K:
+        w = jnp.pad(w, (0, K_p - K))  # zero pads: min(0, cap) = 0 contributes nothing
+    n_tiles = K_p // tile
+    kernel = functools.partial(_kernel, n_caps=n_caps)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((tile,), lambda t: (t,)),
+            pl.BlockSpec((n_caps,), lambda t: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n_caps,), lambda t: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n_caps,), jnp.float32),
+        interpret=interpret,
+    )(w, caps)
+
+
+def bisect_block_sums(w: jax.Array, caps: jax.Array, tile: int = 8192) -> jax.Array:
+    """Backend-dispatching block reduction: Pallas kernel on TPU, jnp
+    reference elsewhere.
+
+    The reference path covers three cases the kernel cannot: CPU (the
+    interpreter would be the bottleneck), float64 inputs (the kernel
+    accumulates in float32 and would silently truncate x64-mode
+    allocations), and parallel-grid backends like GPU (the kernel's
+    cross-program output accumulation needs a sequential grid).
+    """
+    if jax.default_backend() != "tpu" or w.dtype != jnp.float32:
+        return bisect_block_sums_ref(w, caps, tile=tile)
+    return bisect_block_sums_kernel_call(w, caps, tile=tile).astype(w.dtype)

@@ -27,7 +27,14 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["unpack_bits_ref", "unpack_bits_kernel_call", "unpack_bits"]
+__all__ = [
+    "unpack_bits_ref",
+    "unpack_bits_kernel_call",
+    "unpack_bits",
+    "unpack_crumbs_ref",
+    "unpack_crumbs_kernel_call",
+    "unpack_crumbs",
+]
 
 
 def unpack_bits_ref(packed: jax.Array, K: int) -> jax.Array:
@@ -71,3 +78,51 @@ def unpack_bits(packed: jax.Array, K: int, tile_b: int = 1024) -> jax.Array:
     if jax.default_backend() == "cpu":
         return unpack_bits_ref(packed, K)
     return unpack_bits_kernel_call(packed, K, tile_b=tile_b)
+
+
+def unpack_crumbs_ref(packed: jax.Array, K: int) -> jax.Array:
+    """Little-endian 2-bit ("crumb") expansion: ``(..., B)`` uint8 ->
+    ``(..., K)`` int32 codes in {0, 1, 2, 3}, 4 clients per byte.
+
+    The async engine's lag traces (``repro.scenarios.replay``) store one crumb
+    per client per round: codes 0..2 are completion lags, code 3 is the dead
+    sentinel (decoded to ``DEAD_LAG`` by the caller).
+    """
+    shifts = jnp.arange(4, dtype=jnp.uint8) * jnp.uint8(2)
+    crumbs = (packed[..., None] >> shifts) & jnp.uint8(3)
+    flat = crumbs.reshape(*packed.shape[:-1], packed.shape[-1] * 4)
+    return flat[..., :K].astype(jnp.int32)
+
+
+def _crumb_kernel(p_ref, x_ref, *, tile_b):
+    b = p_ref[...].astype(jnp.int32)  # (tile_b,)
+    shifts = jax.lax.broadcasted_iota(jnp.int32, (tile_b, 4), 1) * 2
+    crumbs = jnp.right_shift(b[:, None], shifts) & 3
+    x_ref[...] = crumbs.reshape(tile_b * 4)
+
+
+def unpack_crumbs_kernel_call(packed: jax.Array, K: int, tile_b: int = 1024, interpret: bool = False):
+    """packed: (B,) uint8 with ``B >= ceil(K/4)``. Returns (K,) int32 codes."""
+    B = packed.shape[0]
+    tile_b = min(tile_b, max(B, 1))
+    B_p = math.ceil(B / tile_b) * tile_b
+    if B_p != B:
+        packed = jnp.pad(packed, (0, B_p - B))
+    n_tiles = B_p // tile_b
+    kernel = functools.partial(_crumb_kernel, tile_b=tile_b)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((tile_b,), lambda t: (t,))],
+        out_specs=pl.BlockSpec((tile_b * 4,), lambda t: (t,)),
+        out_shape=jax.ShapeDtypeStruct((B_p * 4,), jnp.int32),
+        interpret=interpret,
+    )(packed)
+    return out[:K]
+
+
+def unpack_crumbs(packed: jax.Array, K: int, tile_b: int = 1024) -> jax.Array:
+    """Backend-dispatching crumb unpack (see ``unpack_bits`` for the idiom)."""
+    if jax.default_backend() == "cpu":
+        return unpack_crumbs_ref(packed, K)
+    return unpack_crumbs_kernel_call(packed, K, tile_b=tile_b)

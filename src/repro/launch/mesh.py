@@ -10,8 +10,9 @@ from __future__ import annotations
 from typing import Dict
 
 import jax
+import numpy as np
 
-__all__ = ["make_production_mesh", "make_mesh", "axis_sizes"]
+__all__ = ["make_production_mesh", "make_mesh", "make_host_mesh", "axis_sizes"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -23,6 +24,28 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests use small fake-device meshes, e.g. (2, 4))."""
     return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_host_mesh(D: int | None = None, axis_name: str = "shards"):
+    """1-D mesh over the first D local devices — what the K-sharded selection
+    engine (``repro.engine.sharded``) runs on.
+
+    On a CPU host, multiple devices must be forced **before jax initialises**:
+
+        XLA_FLAGS=--xla_force_host_platform_device_count=8
+
+    (the CI sharded smoke and ``tests/conftest.py`` both set this).  Raises
+    with that hint when fewer than D devices exist — the flag cannot be
+    applied retroactively from here.
+    """
+    devs = jax.devices()
+    D = len(devs) if D is None else int(D)
+    if D < 1 or D > len(devs):
+        raise RuntimeError(
+            f"need {D} devices for the {axis_name!r} mesh but jax sees {len(devs)}; on a CPU host "
+            f"set XLA_FLAGS=--xla_force_host_platform_device_count={max(D, 2)} before the process starts"
+        )
+    return jax.sharding.Mesh(np.asarray(devs[:D]), (axis_name,))
 
 
 def axis_sizes(mesh) -> Dict[str, int]:

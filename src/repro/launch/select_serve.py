@@ -24,8 +24,13 @@ completion-lag draw, and late-but-alive cohorts are credited ``alpha**lag``
 from a bounded ``(J, S, K)`` staleness ring instead of being dropped while
 the engine keeps issuing the next cohorts.  ``--staleness 0`` gives the
 compiled synchronous loop (the ROADMAP "compiled service loop" item on its
-own).  Reports are written to ``results/bench/BENCH_select_serve*.json`` so
-CI uploads them with the benchmark artifacts.
+own).  ``--mesh D`` serves one fleet-scale job with the **K axis sharded
+over a D-device mesh** (``run_service_sharded``: the
+``repro.engine.sharded`` round compiled over the horizon — per-device state
+and flops divide by D; on a CPU host force devices first with
+``XLA_FLAGS=--xla_force_host_platform_device_count=D``).  Reports are
+written to ``results/bench/BENCH_select_serve*.json`` so CI uploads them
+with the benchmark artifacts.
 """
 from __future__ import annotations
 
@@ -43,7 +48,7 @@ from repro.core.volatility import BernoulliVolatility, BinaryLag, CompletionLag,
 from repro.engine.multi_job import make_multi_job, multi_job_init, pack_jobs
 from repro.engine.scan_sim import staleness_ring_step
 
-__all__ = ["run_service", "run_service_compiled", "main"]
+__all__ = ["run_service", "run_service_compiled", "run_service_sharded", "main"]
 
 
 def run_service(
@@ -245,6 +250,63 @@ def run_service_compiled(
     }
 
 
+def run_service_sharded(
+    K: int = 1_000_000,
+    rounds: int = 50,
+    D: int | None = None,
+    k: int | None = None,
+    seed: int = 0,
+    block: int = 4,
+    reps: int = 3,
+):
+    """Compiled steady-state serving of ONE fleet-scale job with the K axis
+    sharded over a device mesh (``--mesh D``).
+
+    Stands the mesh up via ``repro.launch.mesh.make_host_mesh`` (CI forces 8
+    CPU devices with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``)
+    and folds the whole serving horizon into one ``lax.scan`` of the sharded
+    round: per-client state, allocation and volatility draw live as ``(K/D,)``
+    shards, cross-device traffic is one scalar ``psum`` per bisection block
+    plus the ``(D·k,)`` top-k candidate gather.  Per-device memory and
+    per-device flops both divide by D, which is what lets the serving loop
+    hold populations the single-device path cannot.
+    """
+    from repro.configs.base import FLConfig
+    from repro.engine.sharded import build_sharded_scan_runner
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh(D)
+    D = mesh.devices.size
+    k = k or max(8, K // 1000)
+    fl = FLConfig(K=K, k=k, rounds=rounds, scheme="e3cs", quota_frac=0.5, allocator="bisect")
+    rho = paper_success_rates(K)
+    vol = BernoulliVolatility(jnp.asarray(rho))
+    run, state0 = build_sharded_scan_runner(fl, vol, rho, mesh, outputs="lean", block=block)
+    key = jax.random.PRNGKey(seed)
+    xs = jnp.zeros((rounds, 0), jnp.float32)
+    jax.block_until_ready(run(state0, key, xs)[0].sel_counts)  # compile off the clock
+    elapsed = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        state, succ, _ = run(state0, key, xs)
+        jax.block_until_ready(state.sel_counts)
+        elapsed.append(time.perf_counter() - t0)
+    best = min(elapsed)
+    return {
+        "mode": "compiled_sharded",
+        "mesh_devices": int(D),
+        "K": K,
+        "k": k,
+        "rounds": rounds,
+        "bisect_block": block,
+        "rounds_per_s": round(rounds / best, 2),
+        "client_decisions_per_s": round(rounds * K / best, 1),
+        "round_us": round(best / rounds * 1e6, 1),
+        "successes_total": float(np.asarray(succ).sum()),
+        "per_device_state_mb": round(4.0 * K / D / 1e6, 2),  # one (K/D,) float32 vector
+    }
+
+
 def _save_report(report, name: str):
     out_dir = os.environ.get("REPRO_BENCH_OUT", "results/bench")
     os.makedirs(out_dir, exist_ok=True)
@@ -255,7 +317,9 @@ def _save_report(report, name: str):
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--jobs", type=int, default=8)
-    ap.add_argument("--clients", type=int, default=4096, help="K_max: largest job population")
+    ap.add_argument("--clients", type=int, default=None,
+                    help="K_max: largest job population (default 4096, or 512 under --smoke; "
+                         "with --mesh: 1,000,000, or 65,536 under --smoke)")
     ap.add_argument("--rounds", type=int, default=30)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--scenario", type=str, default=None, help="repro.scenarios name to replay as feedback")
@@ -263,18 +327,26 @@ def main():
                     help="compiled lax.scan steady-state path with overlapping in-flight rounds")
     ap.add_argument("--staleness", type=int, default=2, help="async buffer depth S (with --async; 0 = compiled sync)")
     ap.add_argument("--alpha", type=float, default=0.5, help="staleness decay per round of lag")
+    ap.add_argument("--mesh", type=int, default=None, metavar="D",
+                    help="serve one K-sharded job over a D-device mesh (forced CPU devices: "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=D)")
     ap.add_argument("--smoke", action="store_true", help="tiny CPU-friendly run")
     args = ap.parse_args()
     if args.smoke:
-        args.jobs, args.clients, args.rounds = 4, 512, 10
-    if args.async_mode:
+        args.jobs, args.rounds = 4, 10
+    K_max = args.clients or (512 if args.smoke else 4096)
+    if args.mesh is not None:
+        K = args.clients or (65_536 if args.smoke else 1_000_000)
+        report = run_service_sharded(K=K, rounds=args.rounds, D=args.mesh, seed=args.seed)
+        _save_report(report, "select_serve_sharded")
+    elif args.async_mode:
         report = run_service_compiled(
-            J=args.jobs, K_max=args.clients, rounds=args.rounds, seed=args.seed,
+            J=args.jobs, K_max=K_max, rounds=args.rounds, seed=args.seed,
             staleness=args.staleness, alpha=args.alpha,
         )
         _save_report(report, "select_serve_async")
     else:
-        report = run_service(J=args.jobs, K_max=args.clients, rounds=args.rounds, seed=args.seed, scenario=args.scenario)
+        report = run_service(J=args.jobs, K_max=K_max, rounds=args.rounds, seed=args.seed, scenario=args.scenario)
         _save_report(report, "select_serve")
     print(json.dumps(report, indent=1))
 

@@ -13,11 +13,19 @@ See ``README.md`` in this directory for the trace format and scenario names.
 """
 from .traces import DiurnalVolatility, FlashCrowdVolatility, RegionalOutageVolatility
 from .replay import (
+    ReplayLag,
     ReplayVolatility,
+    lag_packed_width,
+    load_packed_trace,
+    pack_lags,
     pack_trace,
     packed_nbytes,
     packed_width,
+    record_lag_trace,
     record_trace,
+    replay_packed_stream,
+    save_packed_trace,
+    unpack_lags,
     unpack_trace,
 )
 from .registry import SCENARIOS, Scenario, get_scenario, list_scenarios, make_scenario
@@ -27,11 +35,19 @@ __all__ = [
     "DiurnalVolatility",
     "FlashCrowdVolatility",
     "RegionalOutageVolatility",
+    "ReplayLag",
     "ReplayVolatility",
+    "lag_packed_width",
+    "load_packed_trace",
+    "pack_lags",
     "pack_trace",
     "packed_nbytes",
     "packed_width",
+    "record_lag_trace",
     "record_trace",
+    "replay_packed_stream",
+    "save_packed_trace",
+    "unpack_lags",
     "unpack_trace",
     "SCENARIOS",
     "Scenario",

@@ -16,16 +16,35 @@ scalars and keeps cumulative counts in the carried state.
 ``record_trace`` rolls any ``(init_state, sample)`` volatility model forward
 and packs on-device in round chunks, so recording a million-client trace
 never holds more than ``chunk * K`` float32 at once.
+
+Lag traces (async engine): completion lags in ``{0, 1, 2, DEAD_LAG}`` pack
+to **2 bits per client** ("crumbs", 4 clients/byte, little-endian within the
+byte — crumb ``j`` of byte ``b`` is client ``4*b + j``; code 3 is the dead
+sentinel).  ``record_lag_trace`` freezes any lag model the same chunked way,
+and ``ReplayLag`` replays it through the lag protocol so frozen *async*
+scenarios replay exactly like sync ones (``repro.kernels.unpack_crumbs``
+expands rows inside the scan next to ``unpack_bits``).
+
+Disk format: ``save_packed_trace`` writes the packed array as a plain ``.npy``
+plus a ``<path>.meta.json`` sidecar ``{"kind": "bits"|"lags", "K": K,
+"T": T, "clients_per_byte": 8|4}``; ``load_packed_trace`` reopens it as an
+``np.memmap`` (zero-copy, demand-paged), and ``replay_packed_stream`` drives
+the scan engine chunk-by-chunk from the memmap — each chunk is device_put on
+its own, so replay horizons are bounded by disk, not host RAM.  Round-trip is
+bit-exact: ``load(save(x)) == x`` and a streamed replay is bit-identical to
+the in-memory packed replay (pinned in ``tests/test_scenarios.py``).
 """
 from __future__ import annotations
 
+import json
 from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.unpack_bits import unpack_bits_ref
+from repro.core.volatility import DEAD_LAG
+from repro.kernels.unpack_bits import unpack_bits_ref, unpack_crumbs_ref
 
 __all__ = [
     "packed_width",
@@ -35,7 +54,18 @@ __all__ = [
     "pack_bits_jnp",
     "record_trace",
     "ReplayVolatility",
+    "lag_packed_width",
+    "pack_lags",
+    "unpack_lags",
+    "pack_lags_jnp",
+    "record_lag_trace",
+    "ReplayLag",
+    "save_packed_trace",
+    "load_packed_trace",
+    "replay_packed_stream",
 ]
+
+_LAG_DEAD_CODE = 3  # 2-bit sentinel for "never completes" (DEAD_LAG)
 
 
 def packed_width(K: int) -> int:
@@ -68,6 +98,19 @@ def pack_bits_jnp(x: jax.Array) -> jax.Array:
     b = x.reshape(*x.shape[:-1], -1, 8).astype(jnp.uint8)
     weights = (jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8))
     return jnp.sum(b * weights, axis=-1, dtype=jnp.uint8)
+
+
+def _chunked_marginal(packed: np.ndarray, K: int, expand, T: int | None = None, chunk: int = 1024) -> np.ndarray:
+    """Per-client mean of ``expand(rows) -> (n, K)`` over the first T packed
+    rows, accumulated in row chunks so the dense trace never exists (memmap
+    inputs page in only the touched rows)."""
+    packed = np.asarray(packed)
+    T = packed.shape[0] if T is None else T
+    total = np.zeros(K, np.float64)
+    chunk = max(1, min(chunk, T))
+    for i in range(0, T, chunk):
+        total += expand(packed[i : min(i + chunk, T)]).sum(0, dtype=np.float64)
+    return (total / T).astype(np.float32)
 
 
 def record_trace(vol, T: int, seed: int = 0, chunk: int = 256) -> np.ndarray:
@@ -112,13 +155,7 @@ class ReplayVolatility:
     def rho(self) -> jnp.ndarray:
         """Empirical marginal of the recorded trace (the fedcs hint),
         accumulated in row chunks so the dense (T, K) trace never exists."""
-        packed = np.asarray(self.packed)
-        T = packed.shape[0]
-        total = np.zeros(self.K, np.float64)
-        chunk = max(1, min(1024, T))
-        for i in range(0, T, chunk):
-            total += unpack_trace(packed[i : i + chunk], self.K).sum(0, dtype=np.float64)
-        return jnp.asarray(total / T, jnp.float32)
+        return jnp.asarray(_chunked_marginal(self.packed, self.K, lambda rows: unpack_trace(rows, self.K)))
 
     def init_state(self):
         return jnp.zeros((), jnp.int32)
@@ -126,3 +163,229 @@ class ReplayVolatility:
     def sample(self, rng: jax.Array, state):
         row = jax.lax.dynamic_index_in_dim(self.packed, state, keepdims=False)
         return unpack_bits_ref(row, self.K), state + 1
+
+
+# ---------------------------------------------------------------------------
+# 2-bit packed lag traces (async engine)
+# ---------------------------------------------------------------------------
+
+
+def lag_packed_width(K: int) -> int:
+    """Bytes per packed lag row: ceil(K / 4) at 2 bits per client."""
+    return (K + 3) // 4
+
+
+def _lag_codes(lags: np.ndarray) -> np.ndarray:
+    """int32 lags {0, 1, 2, DEAD_LAG} -> uint8 crumb codes {0, 1, 2, 3}."""
+    lags = np.asarray(lags)
+    if ((lags > 2) | ((lags < 0) & (lags != DEAD_LAG))).any():
+        raise ValueError("2-bit lag traces hold lags {0, 1, 2} and DEAD_LAG only; record with max_lag <= 2")
+    return np.where(lags < 0, _LAG_DEAD_CODE, lags).astype(np.uint8)
+
+
+def pack_lags(lags: np.ndarray) -> np.ndarray:
+    """(..., K) int32 lags in {0, 1, 2, DEAD_LAG} -> (..., ceil(K/4)) uint8."""
+    codes = _lag_codes(lags)
+    K = codes.shape[-1]
+    pad = (-K) % 4
+    if pad:  # pad with dead clients, never decoded past K
+        codes = np.concatenate([codes, np.full((*codes.shape[:-1], pad), _LAG_DEAD_CODE, np.uint8)], axis=-1)
+    quads = codes.reshape(*codes.shape[:-1], -1, 4).astype(np.uint16)
+    shifts = np.arange(4, dtype=np.uint16) * 2
+    return np.bitwise_or.reduce(quads << shifts, axis=-1).astype(np.uint8)
+
+
+def unpack_lags(packed: np.ndarray, K: int) -> np.ndarray:
+    """(..., B) uint8 -> (..., K) int32 lags; inverse of ``pack_lags``."""
+    packed = np.asarray(packed, np.uint8)
+    shifts = np.arange(4, dtype=np.uint8) * 2
+    codes = (packed[..., None] >> shifts) & 3
+    codes = codes.reshape(*packed.shape[:-1], packed.shape[-1] * 4)[..., :K].astype(np.int32)
+    return np.where(codes == _LAG_DEAD_CODE, DEAD_LAG, codes)
+
+
+def pack_lags_jnp(lag: jax.Array) -> jax.Array:
+    """On-device lag pack: (..., K) int32 -> (..., ceil(K/4)) uint8.
+
+    Codes are clamped into the 2-bit range so an out-of-range lag can never
+    bleed bits into a neighbouring client's crumb; traced code cannot raise,
+    so range *detection* is the recorder's job (``record_lag_trace`` tracks
+    an overflow flag and raises host-side).
+    """
+    K = lag.shape[-1]
+    codes = jnp.where(lag < 0, _LAG_DEAD_CODE, jnp.minimum(lag, 2)).astype(jnp.uint8)
+    pad = (-K) % 4
+    if pad:
+        codes = jnp.concatenate(
+            [codes, jnp.full((*codes.shape[:-1], pad), _LAG_DEAD_CODE, jnp.uint8)], axis=-1
+        )
+    quads = codes.reshape(*codes.shape[:-1], -1, 4)
+    weights = jnp.left_shift(jnp.uint8(1), jnp.arange(4, dtype=jnp.uint8) * 2)
+    return jnp.sum(quads * weights, axis=-1, dtype=jnp.uint8)
+
+
+def record_lag_trace(lag_model, T: int, seed: int = 0, chunk: int = 256) -> np.ndarray:
+    """Roll a lag model forward T rounds; returns the packed (T, ceil(K/4))
+    uint8 crumb trace.  Same chunked on-device discipline as ``record_trace``
+    (and the same per-round ``split(key)`` PRNG), so the two trace kinds are
+    interchangeable to record.  Lags beyond 2 do not fit 2 bits — build the
+    model with ``max_lag <= 2`` (the replayed async engine then needs
+    ``staleness <= 2``, which is the regime the ROADMAP item names)."""
+    max_lag = getattr(lag_model, "max_lag", None)
+    if max_lag is not None and max_lag > 2:
+        raise ValueError(f"2-bit lag traces hold lags up to 2; model has max_lag={max_lag}")
+
+    def step(carry, _):
+        key, vs, bad = carry
+        key, k2 = jax.random.split(key)
+        lag, vs = lag_model.sample(k2, vs)
+        return (key, vs, bad | jnp.any(lag > 2)), pack_lags_jnp(lag)
+
+    @jax.jit
+    def run_chunk(carry):
+        return jax.lax.scan(step, carry, None, length=chunk)
+
+    carry = (jax.random.PRNGKey(seed), lag_model.init_state(), jnp.zeros((), bool))
+    rows = []
+    done = 0
+    while done < T:
+        carry, packed = run_chunk(carry)
+        if bool(carry[2]):  # duck-typed models without a max_lag attribute
+            raise ValueError("lag model emitted a lag > 2; 2-bit traces cannot represent it")
+        rows.append(np.asarray(packed))
+        done += chunk
+    return np.concatenate(rows)[:T]
+
+
+@dataclass(frozen=True)
+class ReplayLag:
+    """Replay a recorded 2-bit lag trace through the lag-model protocol
+    (int32 lags: 0 on time, 1-2 late, ``DEAD_LAG`` never), so the async
+    engine (``build_scan_runner(..., staleness=S)``) replays frozen volatile
+    scenarios exactly like the sync ``ReplayVolatility`` path.  State is the
+    round index; rows expand on the fly via ``repro.kernels.unpack_crumbs``."""
+
+    packed: jnp.ndarray  # (T, ceil(K/4)) uint8
+    K: int
+
+    @property
+    def rho(self) -> jnp.ndarray:
+        """Empirical on-time marginal of the recorded trace, in row chunks."""
+        return jnp.asarray(_chunked_marginal(self.packed, self.K, lambda rows: unpack_lags(rows, self.K) == 0))
+
+    def init_state(self):
+        return jnp.zeros((), jnp.int32)
+
+    def sample(self, rng: jax.Array, state):
+        row = jax.lax.dynamic_index_in_dim(self.packed, state, keepdims=False)
+        codes = unpack_crumbs_ref(row, self.K)
+        return jnp.where(codes == _LAG_DEAD_CODE, DEAD_LAG, codes), state + 1
+
+
+# ---------------------------------------------------------------------------
+# Disk-backed traces: mmap + chunked device feed
+# ---------------------------------------------------------------------------
+
+
+def save_packed_trace(path: str, packed: np.ndarray, K: int, kind: str = "bits") -> str:
+    """Write a packed trace as ``<path>.npy`` + ``<path>.meta.json``.
+
+    ``kind`` is ``"bits"`` (1-bit success trace, 8 clients/byte) or
+    ``"lags"`` (2-bit lag trace, 4 clients/byte).  Returns the array path.
+    """
+    if kind not in ("bits", "lags"):
+        raise ValueError(f"unknown trace kind {kind!r} (want 'bits' or 'lags')")
+    packed = np.asarray(packed, np.uint8)
+    want = packed_width(K) if kind == "bits" else lag_packed_width(K)
+    if packed.ndim != 2 or packed.shape[1] != want:
+        raise ValueError(f"{kind} trace for K={K} must be (T, {want}) uint8, got {packed.shape}")
+    base = path[:-4] if path.endswith(".npy") else path
+    np.save(base + ".npy", packed)
+    meta = {"kind": kind, "K": int(K), "T": int(packed.shape[0]), "clients_per_byte": 8 if kind == "bits" else 4}
+    with open(base + ".meta.json", "w") as f:
+        json.dump(meta, f)
+    return base + ".npy"
+
+
+def load_packed_trace(path: str, mmap: bool = True):
+    """Reopen a saved trace; returns ``(array, meta)`` where ``array`` is an
+    ``np.memmap`` view (``mmap=True``) — rows are paged in from disk as the
+    replay touches them, so the horizon never has to fit in host RAM."""
+    base = path[:-4] if path.endswith(".npy") else path
+    with open(base + ".meta.json") as f:
+        meta = json.load(f)
+    arr = np.load(base + ".npy", mmap_mode="r" if mmap else None)
+    if arr.shape[0] != meta["T"]:
+        raise ValueError(f"trace length {arr.shape[0]} disagrees with sidecar T={meta['T']}")
+    return arr, meta
+
+
+def replay_packed_stream(
+    scheme: str,
+    path: str,
+    k: int,
+    T: int | None = None,
+    chunk: int = 512,
+    quota: str = "const",
+    frac: float = 0.0,
+    eta: float = 0.5,
+    seed: int = 0,
+    rho=None,
+):
+    """Replay a disk-resident packed success trace through the scan engine in
+    ``chunk``-round pieces: the memmap is sliced per chunk and each slice is
+    device_put on its own, so peak host+device memory is ``chunk`` rows no
+    matter how long the horizon — the trace streams from disk.
+
+    Bit-identical to an in-memory ``scan_selection_sim(...,
+    packed_override=...)`` run: the quota schedule spans the full horizon
+    (``sigma_t`` keys off the carried ``state.t``) and the PRNG key is carried
+    across chunks (``build_scan_runner(..., carry_key=True)``).  Returns the
+    lean-outputs dict (per-round successes/sigmas + final counts; ``rho``
+    only when it was actually computed or supplied — only the ``fedcs``
+    selector consumes the marginal, so other schemes skip the extra
+    streaming pass over the trace).
+    """
+    from repro.configs.base import FLConfig
+    from repro.core.volatility import make_volatility
+    from repro.engine.scan_sim import build_scan_runner
+
+    packed, meta = load_packed_trace(path)
+    if meta["kind"] != "bits":
+        raise ValueError("replay_packed_stream replays success-bit traces; lag traces go through ReplayLag")
+    K = meta["K"]
+    T = meta["T"] if T is None else min(int(T), meta["T"])
+    chunk = min(chunk, T)
+    if rho is None and scheme == "fedcs":
+        rho = _chunked_marginal(packed, K, lambda rows: unpack_trace(rows, K), T=T)
+    rho_out = rho
+    if rho is None:
+        rho = np.zeros(K, np.float32)  # inert for every non-fedcs scheme
+    fl = FLConfig(K=K, k=k, rounds=T, scheme=scheme, quota=quota, quota_frac=frac, eta=eta)
+    vol = make_volatility("bernoulli", jnp.asarray(rho))  # placeholder state; bits come from the trace
+    run, state = build_scan_runner(fl, vol, rho, override="packed", outputs="lean", carry_key=True, scan_length=chunk)
+    run_tail, _ = (
+        build_scan_runner(fl, vol, rho, override="packed", outputs="lean", carry_key=True, scan_length=T % chunk)
+        if T % chunk
+        else (None, None)
+    )
+    key = jax.random.PRNGKey(seed)
+    successes, sigmas = [], []
+    for lo in range(0, T - (T % chunk), chunk):
+        xs = jnp.asarray(packed[lo : lo + chunk])  # one chunk of rows on device
+        state, key, succ, sig = run(state, key, xs)
+        successes.append(np.asarray(succ))
+        sigmas.append(np.asarray(sig))
+    if T % chunk:
+        xs = jnp.asarray(packed[T - (T % chunk) : T])
+        state, key, succ, sig = run_tail(state, key, xs)
+        successes.append(np.asarray(succ))
+        sigmas.append(np.asarray(sig))
+    out = {
+        "successes": np.concatenate(successes),
+        "sigmas": np.concatenate(sigmas),
+        "counts": np.asarray(state.sel_counts),
+    }
+    if rho_out is not None:
+        out["rho"] = np.asarray(rho_out)
+    return out

@@ -1,3 +1,11 @@
+import os
+
+# The K-sharded engine tests (tests/test_sharded.py) need a multi-device
+# host; XLA only honours this before jax initialises its backend, so it must
+# be set here, ahead of any jax import.  No-op when the operator already
+# exported XLA_FLAGS (the tests then skip if fewer than 8 devices exist).
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
 import pytest
 
 try:  # optional dev dependency (see requirements-dev.txt)

@@ -298,3 +298,142 @@ class TestRegistryAndHarness:
         for r in rows:
             assert r["cep"] > 0.3 * 120 * 8  # well above the 0.45-ish floor times slack
             assert 0.0 < r["jain"] <= 1.0
+
+
+class TestLagTraces:
+    """2-bit packed completion-lag traces: 4 clients/byte, codes {0,1,2,dead}
+    (satellite of the K-sharding PR; ROADMAP "packed lag traces" follow-on)."""
+
+    def test_pack_roundtrip_np_and_jnp(self):
+        from repro.core.volatility import DEAD_LAG
+        from repro.scenarios import lag_packed_width, pack_lags, unpack_lags
+        from repro.scenarios.replay import pack_lags_jnp
+
+        rng = np.random.default_rng(0)
+        lags = rng.choice([0, 1, 2, DEAD_LAG], size=(9, 101)).astype(np.int32)
+        packed = pack_lags(lags)
+        assert packed.shape == (9, lag_packed_width(101)) and packed.dtype == np.uint8
+        assert np.array_equal(unpack_lags(packed, 101), lags)
+        assert np.array_equal(np.asarray(pack_lags_jnp(jnp.asarray(lags))), packed)
+
+    def test_out_of_range_lag_rejected(self):
+        from repro.scenarios import pack_lags
+
+        with pytest.raises(ValueError, match="2-bit"):
+            pack_lags(np.asarray([[0, 3, 1, 2]], np.int32))
+
+    def test_unpack_crumbs_kernel_matches_ref(self):
+        from repro.kernels.unpack_bits import unpack_crumbs_kernel_call, unpack_crumbs_ref
+
+        rng = np.random.default_rng(1)
+        for K in (4, 37, 4096):
+            packed = jnp.asarray(rng.integers(0, 256, (K + 3) // 4, dtype=np.uint8))
+            a = unpack_crumbs_ref(packed, K)
+            b = unpack_crumbs_kernel_call(packed, K, tile_b=16, interpret=True)
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+    def test_recorded_lag_replay_bit_identical_to_dense(self):
+        # a frozen async scenario replays through the scan exactly like a
+        # dense lag trace would — same masks, lags and staleness-aware CEP
+        from repro.core.volatility import BernoulliVolatility, CompletionLag
+        from repro.engine.scan_sim import async_selection_sim
+        from repro.scenarios import ReplayLag, record_lag_trace, unpack_lags
+
+        K, T = 64, 50
+        base = BernoulliVolatility(jnp.asarray(paper_success_rates(K)))
+        lm = CompletionLag(base, p_late=0.6, lag_decay=0.5, max_lag=2)
+        trace = record_lag_trace(lm, T, seed=3, chunk=16)
+        assert trace.shape == (T, (K + 3) // 4)
+        replay = ReplayLag(packed=jnp.asarray(trace), K=K)
+
+        class DenseLagReplay:
+            def __init__(self, lags):
+                self.lags = jnp.asarray(lags)
+
+            def init_state(self):
+                return jnp.zeros((), jnp.int32)
+
+            def sample(self, rng, state):
+                return jax.lax.dynamic_index_in_dim(self.lags, state, keepdims=False), state + 1
+
+        dense = DenseLagReplay(unpack_lags(trace, K))
+        rho = np.asarray(replay.rho)
+        a = async_selection_sim("e3cs", K=K, k=8, T=T, staleness=2, lag_model=replay, rho=rho)
+        b = async_selection_sim("e3cs", K=K, k=8, T=T, staleness=2, lag_model=dense, rho=rho)
+        assert np.array_equal(a["masks"], b["masks"])
+        assert np.array_equal(a["lags"], b["lags"])
+        assert a["cep"] == b["cep"]
+        # the trace really contains late completions, not just binary bits
+        assert ((unpack_lags(trace, K) > 0).sum()) > 0
+
+    def test_record_rejects_wide_lag_models(self):
+        from repro.core.volatility import BernoulliVolatility, CompletionLag
+        from repro.scenarios import record_lag_trace
+
+        base = BernoulliVolatility(jnp.asarray(paper_success_rates(16)))
+        with pytest.raises(ValueError, match="max_lag"):
+            record_lag_trace(CompletionLag(base, max_lag=4), 4)
+
+
+class TestDiskTraces:
+    """mmap-backed packed traces: disk-bounded replay horizons (satellite;
+    ROADMAP "trace IO" follow-on)."""
+
+    def test_save_load_roundtrip_is_memmap(self, tmp_path):
+        vol = make_volatility("bernoulli", jnp.asarray(paper_success_rates(96)))
+        packed = record_trace(vol, 30, seed=1, chunk=16)
+        from repro.scenarios import load_packed_trace, save_packed_trace
+
+        path = save_packed_trace(str(tmp_path / "trace"), packed, 96, kind="bits")
+        arr, meta = load_packed_trace(path)
+        assert isinstance(arr, np.memmap)
+        assert meta == {"kind": "bits", "K": 96, "T": 30, "clients_per_byte": 8}
+        assert np.array_equal(np.asarray(arr), packed)
+
+    def test_lag_kind_roundtrip(self, tmp_path):
+        from repro.core.volatility import DEAD_LAG
+        from repro.scenarios import load_packed_trace, pack_lags, save_packed_trace, unpack_lags
+
+        lags = np.random.default_rng(0).choice([0, 1, 2, DEAD_LAG], size=(12, 50)).astype(np.int32)
+        path = save_packed_trace(str(tmp_path / "lags"), pack_lags(lags), 50, kind="lags")
+        arr, meta = load_packed_trace(path)
+        assert meta["clients_per_byte"] == 4
+        assert np.array_equal(unpack_lags(np.asarray(arr), 50), lags)
+
+    def test_shape_validation(self, tmp_path):
+        from repro.scenarios import save_packed_trace
+
+        with pytest.raises(ValueError, match="must be"):
+            save_packed_trace(str(tmp_path / "bad"), np.zeros((5, 3), np.uint8), 96, kind="bits")
+
+    def test_streamed_replay_bit_identical_to_in_memory(self, tmp_path):
+        # chunked memmap feed (incl. a ragged tail chunk) == one-shot packed
+        # replay: same counts, same per-round successes, same quota schedule
+        from repro.scenarios import replay_packed_stream, save_packed_trace
+
+        K, T = 96, 70
+        vol = make_volatility("bernoulli", jnp.asarray(paper_success_rates(K)))
+        packed = record_trace(vol, T, seed=1, chunk=32)
+        path = save_packed_trace(str(tmp_path / "tr"), packed, K, kind="bits")
+        stream = replay_packed_stream("e3cs", path, k=12, chunk=16, frac=0.5)
+        assert "rho" not in stream  # marginal pass skipped: only fedcs consumes it
+        mem = scan_selection_sim("e3cs", K=K, k=12, T=T, frac=0.5, packed_override=packed, seed=0)
+        assert np.array_equal(stream["counts"], mem["counts"])
+        np.testing.assert_allclose(stream["successes"], (mem["masks"] * mem["xs"]).sum(1), atol=0)
+        np.testing.assert_allclose(stream["sigmas"], mem["sigmas"], atol=0)
+
+    def test_truncated_horizon_rho_stays_a_probability(self, tmp_path):
+        # regression: the streamed marginal must not read rows past T — with
+        # T < trace length the old slice summed the whole trace but divided
+        # by T, pushing rho past 1
+        from repro.scenarios import replay_packed_stream, save_packed_trace
+
+        K = 64
+        vol = make_volatility("bernoulli", jnp.asarray(paper_success_rates(K)))
+        packed = record_trace(vol, 2000, seed=2, chunk=128)
+        path = save_packed_trace(str(tmp_path / "tr"), packed, K, kind="bits")
+        out = replay_packed_stream("fedcs", path, k=8, T=1500, chunk=512)
+        assert out["rho"].max() <= 1.0
+        true_marginal = unpack_trace(packed[:1500], K).mean(0)
+        np.testing.assert_allclose(out["rho"], true_marginal, atol=1e-6)
+        assert out["successes"].shape == (1500,)
