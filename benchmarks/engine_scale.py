@@ -12,12 +12,15 @@ Rows (name,us_per_call,derived):
 ``--sharded`` runs the K-sharded suite instead (and writes
 ``BENCH_sharded.json``): whole-horizon sharded scans at D ∈ {1, 2, 4, 8},
 `prob_alloc_shmap` vs the local bisection (plain and block-fused), and — full
-protocol only — a K=1e7 lean horizon on the widest mesh.  Forcing a
-multi-device CPU host requires ``XLA_FLAGS=--xla_force_host_platform_
-device_count=8`` *before* jax initialises; when the flag is absent this
-script injects it for ``--sharded`` runs.
+protocol only — a K=1e7 lean horizon on the widest mesh.  ``--sharded-async``
+runs the sharded *async* composition (``BENCH_sharded_async.json``): the
+K=1e6 lean horizon at staleness S=2 on the D=8 mesh — staleness ring sharded
+``(S, K/D)`` — next to the same-shape synchronous run for the overhead
+ratio.  Forcing a multi-device CPU host requires
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` *before* jax
+initialises; when the flag is absent this script injects it for mesh runs.
 
-CLI:  python benchmarks/engine_scale.py [--smoke] [--sharded]
+CLI:  python benchmarks/engine_scale.py [--smoke] [--sharded | --sharded-async]
 """
 from __future__ import annotations
 
@@ -26,7 +29,7 @@ import os
 import sys
 import time
 
-if "--sharded" in sys.argv and "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+if ("--sharded" in sys.argv or "--sharded-async" in sys.argv) and "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
     os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8").strip()
 
 import jax
@@ -108,14 +111,17 @@ def bench_multi_job(J_list, K: int, out: dict):
 
 
 def _time_sharded_run(run, state, key, xs, reps: int = 2):
-    jax.block_until_ready(run(state, key, xs)[0].sel_counts)  # compile off the clock
+    """Best-of-reps wall time plus the final run's outputs (so callers that
+    report output-derived stats don't pay an extra horizon)."""
+    out = run(state, key, xs)
+    jax.block_until_ready(out[0].sel_counts)  # compile off the clock
     best = float("inf")
     for _ in range(reps):
         t0 = time.perf_counter()
         out = run(state, key, xs)
         jax.block_until_ready(out[0].sel_counts)
         best = min(best, time.perf_counter() - t0)
-    return best
+    return best, out
 
 
 def bench_sharded_scaling(D_list, K: int, T: int, block: int, out: dict):
@@ -134,7 +140,7 @@ def bench_sharded_scaling(D_list, K: int, T: int, block: int, out: dict):
     base = None
     for D in D_list:
         run, state = build_sharded_scan_runner(fl, vol, rho, make_host_mesh(D), outputs="lean", block=block)
-        best = _time_sharded_run(run, state, key, xs)
+        best, _ = _time_sharded_run(run, state, key, xs)
         rps = T / best
         if base is None:
             base = rps
@@ -184,7 +190,7 @@ def bench_sharded_mega(D: int, K: int, T: int, block: int, out: dict):
     vol = BernoulliVolatility(jnp.asarray(rho))
     fl = FLConfig(K=K, k=k, rounds=T, scheme="e3cs", quota_frac=0.5, allocator="bisect")
     run, state = build_sharded_scan_runner(fl, vol, rho, make_host_mesh(D), outputs="lean", block=block)
-    best = _time_sharded_run(run, state, jax.random.PRNGKey(0), jnp.zeros((T, 0), jnp.float32), reps=1)
+    best, _ = _time_sharded_run(run, state, jax.random.PRNGKey(0), jnp.zeros((T, 0), jnp.float32), reps=1)
     rps = T / best
     out["mega"] = {
         "K": K, "k": k, "T": T, "D": D, "rounds_per_s": round(rps, 2),
@@ -192,6 +198,62 @@ def bench_sharded_mega(D: int, K: int, T: int, block: int, out: dict):
         "per_device_state_mb": round(4.0 * K / D / 1e6, 1),
     }
     emit(f"engine/sharded/mega/K={K}", best / T * 1e6, f"D={D};rounds_per_s={rps:.2f}")
+
+
+def bench_sharded_async(D: int, K: int, T: int, S: int, block: int, out: dict):
+    """The sharded-async composition: lag-model outcomes, the ``(S, K/D)``-
+    sharded staleness ring and the K-sharded allocator/top-k in ONE compiled
+    lean horizon, next to the same-shape sync run for the overhead ratio."""
+    from repro.configs.base import FLConfig
+    from repro.core.volatility import BernoulliVolatility, CompletionLag, paper_success_rates
+    from repro.engine.round_program import RoundProgram
+    from repro.launch.mesh import make_host_mesh
+
+    k = max(100, K // 1000)
+    rho = paper_success_rates(K)
+    base = BernoulliVolatility(jnp.asarray(rho))
+    mesh = make_host_mesh(D)
+    fl = FLConfig(K=K, k=k, rounds=T, scheme="e3cs", quota_frac=0.5, allocator="bisect")
+    key = jax.random.PRNGKey(0)
+    xs = jnp.zeros((T, 0), jnp.float32)
+
+    lag = CompletionLag(base, p_late=0.7, lag_decay=0.5, max_lag=S)
+    pa = RoundProgram(fl=fl, vol=lag, rho=rho, staleness=S, alpha=0.5, mesh=mesh, block=block)
+    run_a, st_a = pa.build_runner(outputs="lean")
+    best_a, (state, on_time, stale, _) = _time_sharded_run(run_a, st_a, key, xs)
+
+    ps = RoundProgram(fl=fl, vol=base, rho=rho, mesh=mesh, block=block)
+    run_s, st_s = ps.build_runner(outputs="lean")
+    best_s, _ = _time_sharded_run(run_s, st_s, key, xs)
+
+    rps = T / best_a
+    overhead = best_a / best_s
+    out["sharded_async"] = {
+        "K": K, "k": k, "T": T, "D": D, "staleness": S, "alpha": 0.5, "bisect_block": block,
+        "rounds_per_s": round(rps, 2),
+        "client_decisions_per_s": round(K * rps, 0),
+        "sync_rounds_per_s": round(T / best_s, 2),
+        "async_overhead_x": round(overhead, 2),
+        "on_time_total": float(np.asarray(on_time).sum()),
+        "stale_credit_total": float(np.asarray(stale).sum()),
+        "ring_mb_per_device": round(4.0 * S * K / D / 1e6, 2),
+    }
+    emit(
+        f"engine/sharded_async/K={K}",
+        best_a / T * 1e6,
+        f"D={D};S={S};rounds_per_s={rps:.2f};overhead_vs_sync={overhead:.2f}x;stale={float(np.asarray(stale).sum()):.0f}",
+    )
+
+
+def run_sharded_async(smoke: bool = False):
+    out = {"host_devices": len(jax.devices()), "cpu_count": os.cpu_count()}
+    D = min(8, len(jax.devices()))
+    if smoke:
+        bench_sharded_async(D, 1_000_000, 30, 2, 4, out)
+    else:
+        bench_sharded_async(D, 1_000_000, 100, 2, 4, out)
+    save_json("sharded_async", out)
+    return out
 
 
 def run_sharded(smoke: bool = False):
@@ -228,9 +290,13 @@ def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true", help="reduced CPU/CI protocol")
     ap.add_argument("--sharded", action="store_true", help="run the K-sharded mesh suite (only)")
+    ap.add_argument("--sharded-async", action="store_true",
+                    help="run the sharded-async composition suite (K=1e6, S=2, widest mesh)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    if args.sharded:
+    if args.sharded_async:
+        run_sharded_async(smoke=args.smoke)
+    elif args.sharded:
         run_sharded(smoke=args.smoke)
     else:
         run(smoke=args.smoke)

@@ -4,11 +4,14 @@ numerical experiments (Figs. 3-4) and powers the regret benchmark.
 Runs any scheme for T rounds against a volatility model and returns the
 full (T, K) selection masks / success bits / probability allocations.
 
-``selection_sim`` is now a thin wrapper over the scan-compiled engine
+``selection_sim`` is a thin wrapper over the scan-compiled engine
 (``repro.engine.scan_sim``), which runs the whole horizon as one compiled
-program.  The legacy per-round Python loop is kept as
-``selection_sim_loop`` — it is the bit-exactness oracle for the engine tests
-and the baseline for ``benchmarks/engine_scale.py``.
+program.  ``selection_sim_loop`` host-steps the SAME round body
+(``repro.engine.round_program``) one jitted call per round — since PR 5 it
+no longer carries its own copy of the pipeline; it exists to pin that a
+host-driven loop and the compiled scan produce bit-identical trajectories
+(``tests/test_engine.py``) and as the dispatch-overhead baseline for
+``benchmarks/engine_scale.py``.
 """
 from __future__ import annotations
 
@@ -19,9 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FLConfig
-from repro.core.selection import e3cs_update, make_quota_schedule, selection_mask
 from repro.core.volatility import make_volatility, paper_success_rates
-from repro.fl.round import init_server_state, make_select_fn
 
 __all__ = ["selection_sim", "selection_sim_loop"]
 
@@ -82,38 +83,25 @@ def selection_sim_loop(
     vol=None,
     rho=None,
 ) -> Dict[str, np.ndarray]:
+    from repro.engine.round_program import RoundProgram  # deferred: the engine imports this module
+
     fl = FLConfig(K=K, k=k, rounds=T, scheme=scheme, quota=quota, quota_frac=frac, eta=eta, sampler=sampler)
     if rho is None:
         rho = getattr(vol, "rho", None) if vol is not None else None
     rho = jnp.asarray(paper_success_rates(K) if rho is None else rho, jnp.float32)
     if vol is None:
         vol = make_volatility(volatility, rho, stickiness=stickiness, seed=seed)
-    quota_fn = make_quota_schedule(quota, k, K, T, frac)
-    select = jax.jit(make_select_fn(fl, quota_fn, rho))
-    state = init_server_state({}, K, vol.init_state())
-    key = jax.random.PRNGKey(seed)
+    program = RoundProgram(
+        fl=fl, vol=vol, rho=rho, override="dense" if xs_override is not None else "none"
+    )
+    step, state = program.build_step()
+    step = jax.jit(step)
+    carry = (state, jax.random.PRNGKey(seed))
+    empty = jnp.zeros((0,), jnp.float32)
     masks, xs, ps, sigmas = [], [], [], []
     for t in range(T):
-        key, k1, k2 = jax.random.split(key, 3)
-        idx, p, capped, sigma = select(state, k1)
-        if xs_override is not None:
-            x, vs = jnp.asarray(xs_override[t]), state.vol_state
-        else:
-            x, vs = vol.sample(k2, state.vol_state)
-        mask = selection_mask(idx, K)
-        e3cs = state.e3cs
-        if scheme == "e3cs":
-            e3cs = e3cs_update(state.e3cs, p, capped, mask, x, k, sigma, eta)
-        loss_cache = jnp.where(mask > 0, 1.0 - x, state.loss_cache)  # pow-d loss proxy
-        ucb = state.ucb
-        if scheme == "ucb":
-            from repro.core.selection import ucb_update
-
-            ucb = ucb_update(state.ucb, idx, x)
-        state = state._replace(
-            e3cs=e3cs, ucb=ucb, vol_state=vs, t=state.t + 1,
-            sel_counts=state.sel_counts + mask, loss_cache=loss_cache,
-        )
+        x_over = jnp.asarray(xs_override[t], jnp.float32) if xs_override is not None else empty
+        carry, (mask, x, p, sigma) = step(carry, x_over)
         masks.append(np.asarray(mask))
         xs.append(np.asarray(x))
         ps.append(np.asarray(p))

@@ -1,12 +1,16 @@
 """Fleet-scale selection engine.
 
 Sub-modules:
+  * ``round_program`` — the ONE composable round body (allocate -> select ->
+    observe -> credit -> update), parameterized by placement, staleness and
+    feedback policy; every other entry point composes it
   * ``scan_sim``  — whole-horizon ``lax.scan`` simulator (one compiled program)
-  * ``sharded``   — sort-free, tiled ProbAlloc for million-client populations
+  * ``sharded``   — sort-free, tiled ProbAlloc + the K-sharded mesh placement
   * ``multi_job`` — batched multi-tenant engine (vmap over J concurrent jobs)
 
-See ``README.md`` in this directory for the API and scaling model.
+See ``README.md`` in this directory for the stage diagram and scaling model.
 """
+from .round_program import RoundProgram, lag_credit_schedule, ring_pop_push, staleness_ring_step
 from .scan_sim import async_selection_sim, build_scan_runner, make_sim_step, scan_selection_sim
 from .sharded import (
     build_sharded_scan_runner,
@@ -26,6 +30,10 @@ from .multi_job import (
 )
 
 __all__ = [
+    "RoundProgram",
+    "lag_credit_schedule",
+    "ring_pop_push",
+    "staleness_ring_step",
     "async_selection_sim",
     "build_scan_runner",
     "make_sim_step",

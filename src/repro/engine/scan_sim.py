@@ -9,36 +9,42 @@ volatility transition, selector update and metrics — is the body of a single
 ``jax.lax.scan``, so the entire simulation compiles once and runs with zero
 per-round Python overhead.
 
-The step replicates the legacy loop's PRNG discipline exactly (carry the key,
-``split(key, 3)`` per round), so outputs are bit-identical to
-``selection_sim_loop`` for every scheme; ``tests/test_engine.py`` pins this.
+Since PR 5 the round body itself lives in ``repro.engine.round_program`` —
+the single ``RoundProgram`` every engine entry point (this module, the
+K-sharded runner, the legacy host-stepped loop, the FL training server and
+the serving drivers) composes its pipeline from.  This module keeps the
+historical convenience surface:
 
-Volatility inside the scan comes in three flavours, picked by ``override``:
+* ``build_scan_runner(fl, vol, rho, ...)`` — compile a whole-horizon runner
+  (sync or async, dense or mesh-sharded, generated or replayed outcomes);
+  a thin constructor over ``RoundProgram.build_runner`` with the same
+  output contracts it always had.
+* ``scan_selection_sim`` / ``async_selection_sim`` — the numerical
+  experiments (drop-in for the legacy ``selection_sim`` loop).
+* ``make_sim_step`` — the bare scan body, for callers that scan it
+  themselves.
 
-* ``"none"``   — a *stateful* model object (any ``(init_state, sample)``
-  implementer: the built-ins, or ``repro.scenarios`` diurnal / regional /
-  flash-crowd / replay models).  Its state rides in ``ServerState.vol_state``
-  (an arbitrary pytree), so Markov chains and latent regional factors compile
-  into the whole-horizon program.
-* ``"dense"``  — a recorded ``(T, K)`` float32 trace streamed through the
-  scan's xs input.
-* ``"packed"`` — the same trace bit-packed to ``(T, ceil(K/8))`` uint8 (32x
-  smaller; K=1e6, T=2500 fits in ~312 MB) and expanded row-by-row inside the
-  scan body by ``repro.kernels.unpack_bits`` — selections are bit-identical
-  to the dense path (``tests/test_scenarios.py``).
+The step replicates the legacy loop's PRNG discipline exactly (carry the
+key, ``split(key, 3)`` per round), so outputs are bit-identical to the
+pre-refactor engines for every scheme; ``tests/test_round_program.py`` pins
+this against committed goldens.
 
-Async rounds (``staleness=S``): per-round outcomes generalise from binary
-success/fail to a *completion lag* drawn by a lag model
-(``repro.core.volatility.CompletionLag`` / ``BinaryLag`` — same
-``(init_state, sample)`` protocol, int32 lags).  A bounded ring of ``S``
-pending rounds rides in the scan carry: a client selected at round t that
-completes ``l`` rounds late (``1 <= l <= S``) is credited at round ``t+l``
-with decay weight ``alpha**l`` instead of being dropped; lag beyond ``S`` (or
-``DEAD_LAG``) is dropped exactly like today.  The selector keeps the paper's
-deadline-based feedback (it observes the on-time bits ``1{lag==0}`` — the
-server cannot wait for stragglers before choosing the next cohort), so with
-``S=0`` — or with a ``BinaryLag`` at any S — selections, counts and E3CS
-weights are **bit-identical** to the synchronous path (``tests/test_async.py``).
+Volatility inside the scan comes in four flavours, picked by ``override``:
+``"none"`` (a stateful ``(init_state, sample)`` model whose pytree state
+rides in the carry), ``"dense"`` (a recorded ``(T, K)`` trace streamed
+through the scan xs), ``"packed"`` (1-bit rows expanded in-scan by
+``repro.kernels.unpack_bits``) and — async only — ``"packed_lags"`` (2-bit
+completion-lag rows expanded by ``unpack_crumbs``).
+
+Async rounds (``staleness=S``): outcomes generalise from binary
+success/fail to a *completion lag* (``repro.core.volatility.CompletionLag``
+/ ``BinaryLag``); a bounded ring of ``S`` pending rounds rides in the scan
+carry crediting late arrivals ``alpha**lag``.  The selector keeps the
+paper's deadline-based feedback by default; ``feedback="late_credit"``
+additionally buffers the selection-round allocation so E3CS rewards
+late-but-alive clients (see ``round_program``).  With ``S=0`` — or a
+``BinaryLag`` at any S — selections, counts and E3CS weights are
+**bit-identical** to the synchronous path (``tests/test_async.py``).
 """
 from __future__ import annotations
 
@@ -50,10 +56,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FLConfig
-from repro.core.selection import e3cs_update, make_quota_schedule, selection_mask, ucb_update
 from repro.core.volatility import make_volatility, paper_success_rates
-from repro.fl.round import init_server_state, make_select_fn
-from repro.kernels.unpack_bits import unpack_bits
+from repro.engine.round_program import RoundProgram, staleness_ring_step
 
 __all__ = [
     "make_sim_step",
@@ -62,31 +66,6 @@ __all__ = [
     "async_selection_sim",
     "staleness_ring_step",
 ]
-
-
-def staleness_ring_step(pending, mask, lag, S: int, alpha: float):
-    """One update of the bounded staleness ring; returns ``(arriving,
-    new_pending)``.
-
-    ``pending`` is ``(..., S, K)`` — slot s holds the decayed credit arriving
-    s rounds from now; ``mask`` / ``lag`` are ``(..., K)`` (any leading batch
-    axes, e.g. the multi-job J axis).  Pops slot 0 (this round's arrivals),
-    shifts, and pushes the newly selected late completions (``1 <= lag <= S``)
-    with credit ``alpha**lag`` into their arrival slots.  The single source of
-    the ring semantics for both the scan engine and the compiled service loop.
-    """
-    if S == 0:
-        return jnp.zeros_like(mask), pending
-    decay = jnp.asarray([alpha ** (s + 1) for s in range(S)], jnp.float32)
-    lag_rows = jnp.arange(1, S + 1, dtype=jnp.int32)
-    sched = mask[..., None, :] * (lag[..., None, :] == lag_rows[:, None]) * decay[:, None]
-    arriving = pending[..., 0, :]
-    shifted = jnp.concatenate(
-        [pending[..., 1:, :], jnp.zeros_like(pending[..., :1, :])], axis=-2
-    )
-    return arriving, shifted + sched
-
-_OVERRIDE_MODES = ("none", "dense", "packed")
 
 
 def make_sim_step(
@@ -99,99 +78,21 @@ def make_sim_step(
     lean: bool = False,
     staleness: Optional[int] = None,
     alpha: float = 0.5,
+    feedback: str = "deadline",
 ):
-    """Build the per-round scan body ``step((state, key), x_over) -> ...``.
-
-    Mirrors the legacy loop body op-for-op so results stay bit-identical.
-    ``override`` picks the success-bit source (see module docstring);
-    ``use_override`` is the legacy bool spelling of ``"dense"``.  With
-    ``lean=True`` the step emits only per-round scalars (successes, sigma)
-    instead of the (K,)-wide mask/x/p rows — the state math is unchanged, so
-    cumulative counts stay bit-identical while scan outputs drop from
-    O(T*K) to O(T), which is what makes the full T=2500 horizon feasible at
-    K=1e6 (full outputs would be ~10 GB per (T, K) float32 array).
-
-    With ``staleness=S`` (an int, 0 allowed) the step becomes the *async*
-    round body: ``vol`` must be a lag model (int32 lags, see
-    ``repro.core.volatility.CompletionLag``), the carry gains a ``(S, K)``
-    pending-credit ring, and the step returns
-    ``((state, key, pending), out)`` where ``out`` is ``(on_time, stale,
-    sigma)`` per round when lean or ``(mask, lag, p, sigma, arriving)`` when
-    full.  ``state.cep`` accumulates the staleness-aware effective
-    participation (on-time + decayed late credit) and ``state.succ_hist`` the
-    on-time part, so lean runs keep both without O(T*K) outputs.
-    """
+    """Build the per-round scan body ``step(carry, x_over) -> ...`` (the
+    dense ``RoundProgram`` body; see that module for the carry/output
+    shapes).  ``use_override`` is the legacy bool spelling of ``"dense"``;
+    ``quota_fn`` overrides the schedule the program would derive from
+    ``fl``.  With ``lean=True`` the step emits only per-round scalars
+    instead of (K,)-wide rows — state math unchanged, so cumulative counts
+    stay bit-identical while scan outputs drop from O(T*K) to O(T)."""
     mode = override if override is not None else ("dense" if use_override else "none")
-    if mode not in _OVERRIDE_MODES:
-        raise ValueError(f"unknown override mode {mode!r} (want one of {_OVERRIDE_MODES})")
-    select = make_select_fn(fl, quota_fn, rho)
-    K, k, scheme = fl.K, fl.k, fl.scheme
-
-    if staleness is not None:
-        if mode != "none":
-            raise ValueError("async rounds (staleness != None) need a stateful lag model, not a trace override")
-        return _make_async_sim_step(fl, select, vol, int(staleness), alpha, lean)
-
-    def step(carry, x_over):
-        state, key = carry
-        key, k1, k2 = jax.random.split(key, 3)
-        idx, p, capped, sigma = select(state, k1)
-        if mode == "dense":
-            x, vs = x_over, state.vol_state
-        elif mode == "packed":
-            x, vs = unpack_bits(x_over, K), state.vol_state
-        else:
-            x, vs = vol.sample(k2, state.vol_state)
-        mask = selection_mask(idx, K)
-        e3cs = state.e3cs
-        if scheme == "e3cs":
-            e3cs = e3cs_update(state.e3cs, p, capped, mask, x, k, sigma, fl.eta)
-        loss_cache = jnp.where(mask > 0, 1.0 - x, state.loss_cache)  # pow-d loss proxy
-        ucb = state.ucb
-        if scheme == "ucb":
-            ucb = ucb_update(state.ucb, idx, x)
-        state = state._replace(
-            e3cs=e3cs, ucb=ucb, vol_state=vs, t=state.t + 1,
-            sel_counts=state.sel_counts + mask, loss_cache=loss_cache,
-        )
-        out = (jnp.vdot(mask, x), sigma) if lean else (mask, x, p, sigma)
-        return (state, key), out
-
-    return step
-
-
-def _make_async_sim_step(fl: FLConfig, select, lag_model, S: int, alpha: float, lean: bool):
-    """The async round body (see ``make_sim_step``).  Same PRNG discipline as
-    the sync step — ``split(key, 3)`` per round, ``k2`` to the lag model — so
-    a ``BinaryLag`` (which forwards ``k2`` verbatim to its base model)
-    reproduces the synchronous masks/weights bit-for-bit at any S."""
-    K, k, scheme = fl.K, fl.k, fl.scheme
-
-    def step(carry, _):
-        state, key, pending = carry
-        key, k1, k2 = jax.random.split(key, 3)
-        idx, p, capped, sigma = select(state, k1)
-        lag, vs = lag_model.sample(k2, state.vol_state)
-        mask = selection_mask(idx, K)
-        x = (lag == 0).astype(jnp.float32)  # deadline-based selector feedback
-        e3cs = state.e3cs
-        if scheme == "e3cs":
-            e3cs = e3cs_update(state.e3cs, p, capped, mask, x, k, sigma, fl.eta)
-        loss_cache = jnp.where(mask > 0, 1.0 - x, state.loss_cache)  # pow-d loss proxy
-        ucb = state.ucb
-        if scheme == "ucb":
-            ucb = ucb_update(state.ucb, idx, x)
-        arriving, pending = staleness_ring_step(pending, mask, lag, S, alpha)
-        on_time = jnp.vdot(mask, x)
-        stale = jnp.sum(arriving)
-        state = state._replace(
-            e3cs=e3cs, ucb=ucb, vol_state=vs, t=state.t + 1,
-            sel_counts=state.sel_counts + mask, loss_cache=loss_cache,
-            cep=state.cep + on_time + stale, succ_hist=state.succ_hist + on_time,
-        )
-        out = (on_time, stale, sigma) if lean else (mask, lag, p, sigma, arriving)
-        return (state, key, pending), out
-
+    program = RoundProgram(
+        fl=fl, vol=vol, rho=rho, override=mode, staleness=staleness, alpha=alpha,
+        feedback=feedback, quota_fn=quota_fn,
+    )
+    step, _ = program.build_step(lean=lean)
     return step
 
 
@@ -206,97 +107,41 @@ def build_scan_runner(
     mesh=None,
     carry_key: bool = False,
     scan_length: Optional[int] = None,
+    feedback: str = "deadline",
+    block: int = 1,
 ):
     """Compile a whole-horizon runner for an arbitrary volatility model.
 
-    Returns ``(run, state0)``, jitted over ``fl.rounds`` rounds:
+    Returns ``(run, state0)``, jitted over ``fl.rounds`` rounds (or
+    ``scan_length``), with the ``RoundProgram.build_runner`` signatures:
 
-    * ``outputs="full"`` — ``run(state, key, xs_in) -> (state, masks, xs, ps,
-      sigmas)`` with (T, K)-wide per-round outputs (what
-      ``scan_selection_sim`` post-processes).
-    * ``outputs="lean"`` — ``run(state, key, xs_in) -> (state, successes,
-      sigmas)`` with only (T,) per-round scalars; cumulative selection counts
-      live in ``state.sel_counts`` and are bit-identical to the full path.
-      Use this at K=1e6-scale horizons where a single (T, K) float32 output
-      would dwarf the packed input trace.
+    * sync  full — ``run(state, key, xs_in) -> (state, masks, xs, ps, sigmas)``
+    * sync  lean — ``... -> (state, successes, sigmas)``
+    * async full — ``... -> (state, masks, lags, ps, sigmas, arrived)``
+    * async lean — ``... -> (state, on_time, stale, sigmas)``
 
-    ``vol`` is any ``(init_state, sample)`` implementer — its (pytree) state
-    is carried through the scan, so stateful scenario models compile into the
-    program.  ``xs_in`` is ``(T, 0)`` for ``override="none"``, the float32
-    trace for ``"dense"``, or the uint8 bit-packed trace for ``"packed"``.
+    ``vol`` is any ``(init_state, sample)`` implementer (success bits when
+    synchronous, completion lags when ``staleness=S``); its pytree state is
+    carried through the scan.  ``xs_in`` is ``(T, 0)`` for
+    ``override="none"``, the float32 (or int32 lag) trace for ``"dense"``,
+    or the packed uint8 trace for ``"packed"`` / ``"packed_lags"``.
 
-    With ``staleness=S`` (int >= 0) the runner compiles the *async* round
-    body instead: ``vol`` must be a lag model, a ``(S, K)`` pending-credit
-    ring (initialised to zero inside the program) rides in the scan carry,
-    and the signatures become
+    ``mesh`` shards the whole round body over the K axis
+    (``repro.engine.sharded`` collectives; packed trace rows shard along K
+    too).  ``carry_key`` / ``scan_length`` support chunked horizons: the
+    runner returns the carried PRNG key (and async rings) so a disk-streamed
+    replay (``repro.scenarios.replay``) can resume the next chunk
+    bit-identically — in every placement.
 
-    * full — ``run(state, key, xs_in) -> (state, masks, lags, ps, sigmas,
-      arrived)`` where ``arrived[t]`` is the (K,) decayed late credit landing
-      at round t;
-    * lean — ``run(state, key, xs_in) -> (state, on_time, stale, sigmas)``
-      with only (T,) scalars; the staleness-aware CEP accumulates in
-      ``state.cep`` (``state.succ_hist`` keeps the on-time part).
-
-    ``S=0`` reproduces today's synchronous drop semantics exactly (late work
-    is never credited), and the program stays free of any (S, K) buffer.
-
-    With ``mesh`` set, the whole round body — allocator, Plackett-Luce draw,
-    volatility and E3CS update — executes data-parallel over the K-sharded
-    device mesh instead (``repro.engine.sharded.build_sharded_scan_runner``;
-    packed trace rows shard along K too).  ``carry_key`` / ``scan_length``
-    support chunked horizons: the runner scans ``scan_length`` rounds
-    (default ``fl.rounds`` — the quota schedule always spans ``fl.rounds``)
-    and, when ``carry_key`` is set, returns the carried PRNG key after the
-    final state so a disk-streamed replay (``repro.scenarios.replay``) can
-    resume the next chunk bit-identically.
-
-    Unlike ``scan_selection_sim`` this builder is not memoised: hold on to the
-    returned ``run`` to amortise compilation across repeat calls (the
+    Unlike ``scan_selection_sim`` this builder is not memoised: hold on to
+    the returned ``run`` to amortise compilation across repeat calls (the
     scenario harness and benchmarks do).
     """
-    if mesh is not None:
-        if staleness is not None or carry_key or scan_length is not None:
-            raise ValueError("mesh-sharded runners do not support staleness / carry_key / scan_length yet")
-        from repro.engine.sharded import build_sharded_scan_runner
-
-        return build_sharded_scan_runner(fl, vol, rho, mesh, override=override, outputs=outputs)
-    if outputs not in ("full", "lean"):
-        raise ValueError(f"unknown outputs mode {outputs!r} (want 'full' or 'lean')")
-    lean = outputs == "lean"
-    rho = jnp.asarray(rho, jnp.float32)
-    quota_fn = make_quota_schedule(fl.quota, fl.k, fl.K, fl.rounds, fl.quota_frac)
-    step = make_sim_step(fl, quota_fn, vol, rho, override=override, lean=lean, staleness=staleness, alpha=alpha)
-    state0 = init_server_state({}, fl.K, vol.init_state())
-    T = fl.rounds if scan_length is None else int(scan_length)
-
-    if staleness is not None:
-        S = int(staleness)
-        if carry_key:
-            raise ValueError("carry_key is only supported for synchronous runners")
-
-        @jax.jit
-        def run_async(state, key, xs_in):
-            pending = jnp.zeros((S, fl.K), jnp.float32)
-            (state, _, _), out = jax.lax.scan(step, (state, key, pending), None, length=T)
-            if lean:
-                on_time, stale, sigmas = out
-                return state, on_time, stale, sigmas
-            masks, lags, ps, sigmas, arrived = out
-            return state, masks, lags, ps, sigmas, arrived
-
-        return run_async, state0
-
-    @jax.jit
-    def run(state, key, xs_in):
-        (state, key), out = jax.lax.scan(step, (state, key), xs_in, length=T)
-        head = (state, key) if carry_key else (state,)
-        if lean:
-            successes, sigmas = out
-            return (*head, successes, sigmas)
-        masks, xs, ps, sigmas = out
-        return (*head, masks, xs, ps, sigmas)
-
-    return run, state0
+    program = RoundProgram(
+        fl=fl, vol=vol, rho=rho, override=override, staleness=staleness, alpha=alpha,
+        feedback=feedback, mesh=mesh, block=block,
+    )
+    return program.build_runner(outputs=outputs, carry_key=carry_key, scan_length=scan_length)
 
 
 @functools.lru_cache(maxsize=64)
@@ -394,6 +239,8 @@ def async_selection_sim(
     lag_model=None,
     rho=None,
     outputs: str = "full",
+    feedback: str = "deadline",
+    packed_lag_override: Optional[np.ndarray] = None,
 ) -> Dict[str, np.ndarray]:
     """Whole-horizon *async* numerical experiment: completion-lag outcomes,
     bounded staleness buffer of ``staleness`` rounds, late credit
@@ -402,14 +249,19 @@ def async_selection_sim(
     ``lag_model`` is any ``(init_state, sample)`` lag implementer (e.g.
     ``CompletionLag`` over a scenario generator); by default the named
     ``volatility`` model is wrapped in ``CompletionLag(p_late, lag_decay,
-    max_lag=max(staleness, 1))``.  Returns per-round ``on_time`` / ``stale``
-    credit, the staleness-aware ``cep`` (= on_time + stale, accumulated in
-    the carried state so it is exact in lean mode too), and — in full mode —
-    the (T, K) masks and lags.
+    max_lag=max(staleness, 1))``.  ``packed_lag_override`` instead streams a
+    recorded 2-bit lag trace through the scan (``repro.scenarios.replay``
+    crumb format), bit-identical to replaying it via ``ReplayLag``.
+    ``feedback="late_credit"`` switches E3CS to the buffered late-arrival
+    feedback policy (see ``round_program``).  Returns per-round ``on_time``
+    / ``stale`` credit, the staleness-aware ``cep`` (= on_time + stale,
+    accumulated in the carried state so it is exact in lean mode too), and —
+    in full mode — the (T, K) masks and lags.
     """
     from repro.core.volatility import CompletionLag  # local: avoid cycles at import time
 
     fl = FLConfig(K=K, k=k, rounds=T, scheme=scheme, quota=quota, quota_frac=frac, eta=eta, sampler=sampler)
+    override = "none" if packed_lag_override is None else "packed_lags"
     if lag_model is None:
         if rho is None:
             rho = paper_success_rates(K)
@@ -419,9 +271,15 @@ def async_selection_sim(
         rho = getattr(lag_model, "rho", None)
     if rho is None:
         rho = paper_success_rates(K)
-    run, state = build_scan_runner(fl, lag_model, rho, outputs=outputs, staleness=int(staleness), alpha=alpha)
+    run, state = build_scan_runner(
+        fl, lag_model, rho, override=override, outputs=outputs, staleness=int(staleness), alpha=alpha,
+        feedback=feedback,
+    )
     key = jax.random.PRNGKey(seed)
-    xs_in = jnp.zeros((T, 0), jnp.float32)
+    if override == "packed_lags":
+        xs_in = jnp.asarray(packed_lag_override, jnp.uint8)
+    else:
+        xs_in = jnp.zeros((T, 0), jnp.float32)
     if outputs == "lean":
         state, on_time, stale, sigmas = run(state, key, xs_in)
         out = {}
@@ -440,5 +298,6 @@ def async_selection_sim(
         "cep": float(state.cep),
         "on_time_total": float(state.succ_hist),
         "sel_counts": np.asarray(state.sel_counts),
+        "final_logw": np.asarray(state.e3cs.logw),
     })
     return out

@@ -44,7 +44,7 @@ allocator over heterogeneous (K, k, sigma) jobs via padding.
 """
 from __future__ import annotations
 
-import dataclasses
+
 from functools import partial
 from typing import Optional
 
@@ -339,23 +339,6 @@ def plackett_luce_shmap(rng: jax.Array, p: jax.Array, k: int, mesh, axis_name: s
 # ---------------------------------------------------------------------------
 
 
-def _k_indexed_fields(vol, K: int) -> dict:
-    """Names of the volatility model's per-client ``(K, ...)`` array fields —
-    the parameters that must be sharded alongside the population."""
-    if not dataclasses.is_dataclass(vol):
-        raise TypeError(
-            f"sharded rounds need a dataclass volatility model with (K,)-indexed "
-            f"array fields (bernoulli / markov / deadline), got {type(vol).__name__}; "
-            f"replay scenario traces through override='packed' instead"
-        )
-    out = {}
-    for f in dataclasses.fields(vol):
-        v = getattr(vol, f.name)
-        if hasattr(v, "shape") and getattr(v, "ndim", 0) >= 1 and v.shape[0] == K:
-            out[f.name] = jnp.asarray(v)
-    return out
-
-
 def build_sharded_scan_runner(
     fl,
     vol,
@@ -367,18 +350,24 @@ def build_sharded_scan_runner(
     n_iters: int = 48,
     tile: int = 8192,
     block: int = 1,
+    staleness: Optional[int] = None,
+    alpha: float = 0.5,
+    feedback: str = "deadline",
+    carry_key: bool = False,
+    scan_length: Optional[int] = None,
 ):
     """Compile the whole T-round horizon with the K axis sharded over a mesh.
 
-    The counterpart of ``engine.scan_sim.build_scan_runner`` (same round
-    semantics, same per-round ``split(key, 3)`` PRNG discipline) with every
+    The mesh placement of the ONE round body in
+    ``repro.engine.round_program`` (same round semantics, same per-round
+    ``split(key, 3)`` PRNG discipline as the dense engine) with every
     per-client array — E3CS log-weights, allocation, volatility parameters and
-    state, selection counts, loss cache, and the per-round trace rows — living
-    as ``(K/D,)`` shards on a ``shard_map`` mesh.  Per round the only
-    cross-shard traffic is: one scalar ``psum`` per bisection step (the
-    allocator), one ``(D·k,)`` candidate all-gather (the distributed
-    Plackett-Luce top-k), one ``pmax`` pair for weight re-centering, and — in
-    lean mode — one scalar ``psum`` for the round's success count.
+    state, selection counts, loss cache, the per-round trace rows and (async)
+    the ``(S, K/D)`` staleness rings — living as shards on a ``shard_map``
+    mesh.  Per round the only cross-shard traffic is: one scalar ``psum`` per
+    bisection step (the allocator), one ``(D·k,)`` candidate all-gather (the
+    distributed Plackett-Luce top-k), one ``pmax`` pair for weight
+    re-centering, and — in lean mode — one scalar ``psum`` per round metric.
 
     PRNG: the carried key is replicated and split exactly like the unsharded
     engine; shard-local draws (Gumbel perturbations, volatility bits) use
@@ -398,168 +387,27 @@ def build_sharded_scan_runner(
     ucb/pow_d) — correctness-grade at scale, bit-identical at D=1.
 
     ``override="packed"`` shards the ``(T, ceil(K/8))`` uint8 trace rows along
-    the byte axis, so replay memory divides by D as well; ``"dense"`` shards
-    the float32 trace columns; ``"none"`` draws from ``vol`` with per-shard
-    parameters (any dataclass model whose per-client arrays are K-indexed:
-    the bernoulli / markov / deadline built-ins).
+    the byte axis, so replay memory divides by D as well (``"packed_lags"``
+    does the same for 2-bit async lag traces at 4 clients/byte); ``"dense"``
+    shards the trace columns; ``"none"`` draws from ``vol`` with per-shard
+    parameters (any — possibly nested — dataclass model whose per-client
+    arrays are K-indexed: the builtins, or ``CompletionLag`` over one).
 
-    Returns ``(run, state0)`` with the ``build_scan_runner`` signatures:
-    ``run(state, key, xs_in) -> (state, masks, xs, ps, sigmas)`` (full) or
-    ``(state, successes, sigmas)`` (lean).  K-arrays in ``state0`` and the
-    outputs are padded to ``K_pad`` (a multiple of D·8 for packed); slice
-    ``[:K]``.
+    With ``staleness=S`` the runner compiles the *async* round body: ``vol``
+    is a lag model and the ``(S, K/D)``-sharded pending-credit ring rides in
+    the scan carry — the "sharded async rounds" composition.  Returns
+    ``(run, state0)`` with the ``build_scan_runner`` signatures; K-arrays in
+    ``state0`` and the outputs are padded to ``K_pad`` (a multiple of D·8
+    for packed, D·4 for packed_lags); slice ``[:K]``.
     """
-    from repro.core.selection import (
-        E3CSState,
-        e3cs_init,
-        e3cs_update,
-        fedcs_select,
-        make_quota_schedule,
-        pow_d_select,
-        random_select,
-        ucb_init,
-        ucb_select,
-        ucb_update,
+    from repro.engine.round_program import RoundProgram  # deferred: round_program imports this module
+
+    program = RoundProgram(
+        fl=fl, vol=vol, rho=rho, override=override, staleness=staleness, alpha=alpha,
+        feedback=feedback, mesh=mesh, axis_name=axis_name, n_iters=n_iters, tile=tile,
+        block=block,
     )
-    from repro.fl.round import ServerState
-    from repro.kernels.unpack_bits import unpack_bits
-
-    if outputs not in ("full", "lean"):
-        raise ValueError(f"unknown outputs mode {outputs!r} (want 'full' or 'lean')")
-    if override not in ("none", "dense", "packed"):
-        raise ValueError(f"unknown override mode {override!r}")
-    if fl.scheme == "e3cs" and fl.sampler != "plackett_luce":
-        raise ValueError("the sharded engine only implements the plackett_luce sampler")
-    lean = outputs == "lean"
-    K, k, scheme, T, eta = fl.K, fl.k, fl.scheme, fl.rounds, fl.eta
-    D = _axis_size(mesh, axis_name)
-    if override == "packed":
-        B_loc = -(-((K + 7) // 8) // D)
-        K_pad = 8 * B_loc * D
-        width = B_loc * D
-    else:
-        K_pad = D * (-(-K // D))
-        width = K_pad if override == "dense" else D
-    Ks = K_pad // D
-    if scheme == "e3cs" and k > Ks:
-        raise ValueError(f"k={k} exceeds the shard width {Ks}; need k <= K_pad/D for per-shard top-k")
-    quota_fn = make_quota_schedule(fl.quota, fl.k, fl.K, fl.rounds, fl.quota_frac)
-    active = (jnp.arange(K_pad) < K).astype(jnp.float32)
-
-    vol_arrays = {n: _pad0(a, K_pad) for n, a in (_k_indexed_fields(vol, K) if override == "none" else {}).items()}
-    vs0 = jax.tree.map(lambda a: _pad0(a, K_pad) if getattr(a, "ndim", 0) >= 1 and a.shape[0] == K else a, vol.init_state())
-    vs_spec = jax.tree.map(lambda a: P(axis_name) if getattr(a, "ndim", 0) >= 1 and a.shape[0] == K_pad else P(), vs0)
-    rho_rep = jnp.asarray(rho, jnp.float32) if scheme == "fedcs" else jnp.zeros((1,), jnp.float32)
-
-    state0 = ServerState(
-        params={},
-        e3cs=e3cs_init(K_pad),
-        ucb=ucb_init(K),  # replicated (small selector state; see docstring)
-        loss_cache=jnp.full((K_pad,), 1e9, jnp.float32),
-        vol_state=vs0,
-        t=jnp.zeros((), jnp.int32),
-        sel_counts=jnp.zeros((K_pad,), jnp.float32),
-        cep=jnp.zeros((), jnp.float32),
-        succ_hist=jnp.zeros((), jnp.float32),
-    )
-    state_spec = ServerState(
-        params={},
-        e3cs=E3CSState(logw=P(axis_name), t=P()),
-        ucb=jax.tree.map(lambda _: P(), state0.ucb),
-        loss_cache=P(axis_name),
-        vol_state=vs_spec,
-        t=P(),
-        sel_counts=P(axis_name),
-        cep=P(),
-        succ_hist=P(),
-    )
-
-    def horizon(state, key, xs, vol_arr, rho_full, active_loc):
-        d = jax.lax.axis_index(axis_name)
-        vol_loc = dataclasses.replace(vol, **vol_arr) if vol_arr else vol
-
-        def step(carry, x_over):
-            state, key = carry
-            key, k1, k2 = jax.random.split(key, 3)
-            sigma = quota_fn(state.t)
-            capped = jnp.zeros((Ks,), bool)
-            if scheme == "e3cs":
-                logw = state.e3cs.logw
-                gmax = jax.lax.pmax(jnp.max(jnp.where(active_loc > 0, logw, -jnp.inf)), axis_name)
-                w = jnp.exp(logw - gmax) * active_loc
-                p, capped = masked_prob_alloc(
-                    w, k, sigma, active=active_loc, n_iters=n_iters, tile=tile, axis_name=axis_name, block=block
-                )
-                k_sel = jax.random.fold_in(k1, d) if D > 1 else k1
-                scores = jnp.where(active_loc > 0, perturbed_scores(k_sel, p), -jnp.inf)
-                idx = _shard_topk_merge(scores, k, axis_name)
-            elif scheme == "random":
-                idx = random_select(k1, K, k)
-            elif scheme == "fedcs":
-                idx = fedcs_select(rho_full, k, k1)
-            elif scheme == "ucb":
-                idx = ucb_select(state.ucb, k)
-            elif scheme == "pow_d":
-                loss_full = jax.lax.all_gather(state.loss_cache, axis_name, tiled=True)[:K]
-                idx = pow_d_select(k1, loss_full, k, fl.pow_d)
-            else:
-                raise ValueError(fl.scheme)
-            loc = idx - d * Ks
-            valid = (loc >= 0) & (loc < Ks)
-            mask = jnp.zeros((Ks,), jnp.float32).at[jnp.clip(loc, 0, Ks - 1)].max(valid.astype(jnp.float32))
-            if scheme == "random":
-                p = jnp.full((Ks,), k / K)
-            elif scheme != "e3cs":
-                p = mask
-
-            if override == "none":
-                k_vol = jax.random.fold_in(k2, d) if D > 1 else k2
-                x, vs = vol_loc.sample(k_vol, state.vol_state)
-            elif override == "dense":
-                x, vs = x_over, state.vol_state
-            else:
-                x, vs = unpack_bits(x_over, Ks), state.vol_state
-
-            e3cs = state.e3cs
-            if scheme == "e3cs":
-                e3cs = e3cs_update(
-                    state.e3cs, p, capped, mask, x, k, sigma, eta,
-                    K=K, axis_name=axis_name, active=active_loc,
-                )
-            ucb = state.ucb
-            if scheme == "ucb":
-                x_full = jax.lax.all_gather(x, axis_name, tiled=True)[:K]
-                ucb = ucb_update(state.ucb, idx, x_full)
-            loss_cache = jnp.where(mask > 0, 1.0 - x, state.loss_cache)  # pow-d loss proxy
-            state = state._replace(
-                e3cs=e3cs, ucb=ucb, vol_state=vs, t=state.t + 1,
-                sel_counts=state.sel_counts + mask, loss_cache=loss_cache,
-            )
-            out = (jax.lax.psum(jnp.vdot(mask, x), axis_name), sigma) if lean else (mask, x, p, sigma)
-            return (state, key), out
-
-        (state, _), out = jax.lax.scan(step, (state, key), xs, length=T)
-        return (state,) + out
-
-    out_specs = (state_spec, P(), P()) if lean else (state_spec, P(None, axis_name), P(None, axis_name), P(None, axis_name), P())
-    shm = _shmap(
-        horizon,
-        mesh,
-        in_specs=(state_spec, P(), P(None, axis_name), {n: P(axis_name) for n in vol_arrays}, P(), P(axis_name)),
-        out_specs=out_specs,
-    )
-
-    @jax.jit
-    def run(state, key, xs_in):
-        if override == "none":
-            xs = jnp.zeros((T, D), jnp.float32)  # ignored; keeps one scan signature
-        elif override == "dense":
-            xs = jnp.pad(jnp.asarray(xs_in, jnp.float32), ((0, 0), (0, K_pad - xs_in.shape[1])))
-        else:
-            xs = jnp.pad(jnp.asarray(xs_in, jnp.uint8), ((0, 0), (0, width - xs_in.shape[1])))
-        return shm(state, key, xs, vol_arrays, rho_rep, active)
-
-    return run, state0
+    return program.build_runner(outputs=outputs, carry_key=carry_key, scan_length=scan_length)
 
 
 def sharded_selection_sim(

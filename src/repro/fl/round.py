@@ -132,16 +132,20 @@ def make_cohort_round(
     spmd_axes=None,
     aggregation: Optional[str] = None,
     donate: bool = True,
+    select=None,
 ):
     """Full jitted round. Returns ``round_fn(state, idx, p, capped, sigma,
     batches, step_mask, data_sizes, epochs, rng) -> (state, metrics)`` plus
     the ``select`` fn (host calls select first to gather the cohort's data).
+    ``select`` overrides the allocate+select stage — ``FLServer`` passes
+    ``RoundProgram.select_fn()`` so the training loop shares the engine's
+    knob resolution; the default builds the identical fn from the raw config.
     """
     opt = sgd(fl_cfg.lr, fl_cfg.momentum)
     local = make_local_update(model, opt, fl_cfg.local_update, fl_cfg.prox_coef)
     vlocal = jax.vmap(local, in_axes=(None, 0, 0, 0), spmd_axis_name=spmd_axes)
     agg_scheme = aggregation or fl_cfg.aggregation
-    select = make_select_fn(fl_cfg, quota_fn, rho)
+    select = select if select is not None else make_select_fn(fl_cfg, quota_fn, rho)
 
     def round_fn(state: ServerState, idx, p, capped, sigma, batches, step_mask, data_sizes, total_data, epochs, rng):
         K = fl_cfg.K
@@ -196,6 +200,7 @@ def make_async_cohort_round(
     rho=None,
     spmd_axes=None,
     aggregation: Optional[str] = None,
+    select=None,
 ):
     """Staleness-aware variant of ``make_cohort_round``.
 
@@ -214,7 +219,7 @@ def make_async_cohort_round(
     local = make_local_update(model, opt, fl_cfg.local_update, fl_cfg.prox_coef)
     vlocal = jax.vmap(local, in_axes=(None, 0, 0, 0), spmd_axis_name=spmd_axes)
     agg_scheme = aggregation or fl_cfg.aggregation
-    select = make_select_fn(fl_cfg, quota_fn, rho)
+    select = select if select is not None else make_select_fn(fl_cfg, quota_fn, rho)
 
     def round_fn(state: ServerState, idx, p, capped, sigma, batches, step_mask, data_sizes, total_data, epochs, rng):
         K = fl_cfg.K

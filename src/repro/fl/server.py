@@ -30,8 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FLConfig
-from repro.core.selection import make_quota_schedule
-from repro.core.volatility import CompletionLag, make_volatility, paper_success_rates
+from repro.core.volatility import make_volatility, paper_success_rates
 
 from .round import ServerState, init_server_state, make_async_cohort_round, make_cohort_round
 
@@ -91,25 +90,29 @@ class FLServer:
     """
 
     def __init__(self, model, fl_cfg: FLConfig, store, eval_fn=None, spmd_axes=None, volatility=None):
+        from repro.engine.round_program import RoundProgram  # deferred: the engine imports fl.round
+
         self.model = model
         self.cfg = fl_cfg
         self.store = store
-        self.quota = make_quota_schedule(fl_cfg.quota, fl_cfg.k, fl_cfg.K, fl_cfg.rounds, fl_cfg.quota_frac)
-        self.vol, self.rho = build_volatility(fl_cfg, fl_cfg.K, volatility=volatility)
-        self.staleness = int(fl_cfg.staleness_rounds)
+        # ONE knob-resolution path: volatility spec, staleness wrapping and
+        # quota schedule all come from the engine's RoundProgram, so the
+        # training loop and the serving drivers cannot drift apart
+        # (pinned in tests/test_round_program.py).
+        self.program = RoundProgram.from_config(fl_cfg, volatility=volatility)
+        self.quota = self.program.quota_fn
+        self.vol, self.rho = self.program.base_vol, self.program.rho
+        self.staleness = 0 if self.program.staleness is None else int(self.program.staleness)
+        self.lag_model = self.program.lag_model
+        select = self.program.select_fn()
         if self.staleness > 0:
-            self.lag_model = CompletionLag(
-                self.vol,
-                p_late=fl_cfg.late_prob,
-                lag_decay=fl_cfg.lag_decay,
-                max_lag=self.staleness,
-            )
-            select, round_fn = make_async_cohort_round(
-                model, fl_cfg, self.quota, self.lag_model, self.rho, spmd_axes
+            _, round_fn = make_async_cohort_round(
+                model, fl_cfg, self.quota, self.lag_model, self.rho, spmd_axes, select=select
             )
         else:
-            self.lag_model = None
-            select, round_fn = make_cohort_round(model, fl_cfg, self.quota, self.vol, self.rho, spmd_axes)
+            _, round_fn = make_cohort_round(
+                model, fl_cfg, self.quota, self.vol, self.rho, spmd_axes, select=select
+            )
         self._select = jax.jit(select)
         self._round = jax.jit(round_fn)
         self._apply_delta = jax.jit(

@@ -26,9 +26,12 @@ the engine keeps issuing the next cohorts.  ``--staleness 0`` gives the
 compiled synchronous loop (the ROADMAP "compiled service loop" item on its
 own).  ``--mesh D`` serves one fleet-scale job with the **K axis sharded
 over a D-device mesh** (``run_service_sharded``: the
-``repro.engine.sharded`` round compiled over the horizon — per-device state
-and flops divide by D; on a CPU host force devices first with
-``XLA_FLAGS=--xla_force_host_platform_device_count=D``).  Reports are
+``repro.engine.round_program`` round compiled over the horizon via
+``RoundProgram.from_config`` — per-device state and flops divide by D; on a
+CPU host force devices first with
+``XLA_FLAGS=--xla_force_host_platform_device_count=D``).  ``--mesh D
+--async`` composes the two: sharded **async** serving, the ``(S, K/D)``
+staleness ring riding inside the compiled sharded loop.  Reports are
 written to ``results/bench/BENCH_select_serve*.json`` so CI uploads them
 with the benchmark artifacts.
 """
@@ -46,7 +49,7 @@ import numpy as np
 
 from repro.core.volatility import BernoulliVolatility, BinaryLag, CompletionLag, paper_success_rates
 from repro.engine.multi_job import make_multi_job, multi_job_init, pack_jobs
-from repro.engine.scan_sim import staleness_ring_step
+from repro.engine.round_program import staleness_ring_step
 
 __all__ = ["run_service", "run_service_compiled", "run_service_sharded", "main"]
 
@@ -258,6 +261,8 @@ def run_service_sharded(
     seed: int = 0,
     block: int = 4,
     reps: int = 3,
+    staleness: int = 0,
+    alpha: float = 0.5,
 ):
     """Compiled steady-state serving of ONE fleet-scale job with the K axis
     sharded over a device mesh (``--mesh D``).
@@ -270,30 +275,39 @@ def run_service_sharded(
     plus the ``(D·k,)`` top-k candidate gather.  Per-device memory and
     per-device flops both divide by D, which is what lets the serving loop
     hold populations the single-device path cannot.
+
+    ``staleness=S > 0`` serves *async* rounds: outcomes are completion-lag
+    draws and the ``(S, K/D)``-sharded pending-credit ring credits
+    late-but-alive cohorts ``alpha**lag`` — the sharded-async composition
+    that falls out of ``RoundProgram`` (the config is resolved by the same
+    ``RoundProgram.from_config`` the training server uses).
     """
     from repro.configs.base import FLConfig
-    from repro.engine.sharded import build_sharded_scan_runner
+    from repro.engine.round_program import RoundProgram
     from repro.launch.mesh import make_host_mesh
 
     mesh = make_host_mesh(D)
     D = mesh.devices.size
     k = k or max(8, K // 1000)
-    fl = FLConfig(K=K, k=k, rounds=rounds, scheme="e3cs", quota_frac=0.5, allocator="bisect")
-    rho = paper_success_rates(K)
-    vol = BernoulliVolatility(jnp.asarray(rho))
-    run, state0 = build_sharded_scan_runner(fl, vol, rho, mesh, outputs="lean", block=block)
+    S = int(staleness)
+    fl = FLConfig(
+        K=K, k=k, rounds=rounds, scheme="e3cs", quota_frac=0.5, allocator="bisect",
+        volatility="bernoulli", staleness_rounds=S, staleness_alpha=alpha,
+    )
+    program = RoundProgram.from_config(fl, mesh=mesh, block=block)
+    run, state0 = program.build_runner(outputs="lean")
     key = jax.random.PRNGKey(seed)
     xs = jnp.zeros((rounds, 0), jnp.float32)
     jax.block_until_ready(run(state0, key, xs)[0].sel_counts)  # compile off the clock
     elapsed = []
     for _ in range(reps):
         t0 = time.perf_counter()
-        state, succ, _ = run(state0, key, xs)
-        jax.block_until_ready(state.sel_counts)
+        out = run(state0, key, xs)
+        jax.block_until_ready(out[0].sel_counts)
         elapsed.append(time.perf_counter() - t0)
     best = min(elapsed)
-    return {
-        "mode": "compiled_sharded",
+    report = {
+        "mode": "compiled_sharded_async" if S else "compiled_sharded",
         "mesh_devices": int(D),
         "K": K,
         "k": k,
@@ -302,9 +316,19 @@ def run_service_sharded(
         "rounds_per_s": round(rounds / best, 2),
         "client_decisions_per_s": round(rounds * K / best, 1),
         "round_us": round(best / rounds * 1e6, 1),
-        "successes_total": float(np.asarray(succ).sum()),
         "per_device_state_mb": round(4.0 * K / D / 1e6, 2),  # one (K/D,) float32 vector
     }
+    if S:
+        state, on_time, stale, _ = out
+        report.update({
+            "staleness": S,
+            "alpha": alpha,
+            "on_time_total": float(np.asarray(on_time).sum()),
+            "stale_credit_total": float(np.asarray(stale).sum()),
+        })
+    else:
+        report["successes_total"] = float(np.asarray(out[1]).sum())
+    return report
 
 
 def _save_report(report, name: str):
@@ -325,7 +349,8 @@ def main():
     ap.add_argument("--scenario", type=str, default=None, help="repro.scenarios name to replay as feedback")
     ap.add_argument("--async", dest="async_mode", action="store_true",
                     help="compiled lax.scan steady-state path with overlapping in-flight rounds")
-    ap.add_argument("--staleness", type=int, default=2, help="async buffer depth S (with --async; 0 = compiled sync)")
+    ap.add_argument("--staleness", type=int, default=2,
+                    help="async buffer depth S (with --async, alone or combined with --mesh; 0 = compiled sync)")
     ap.add_argument("--alpha", type=float, default=0.5, help="staleness decay per round of lag")
     ap.add_argument("--mesh", type=int, default=None, metavar="D",
                     help="serve one K-sharded job over a D-device mesh (forced CPU devices: "
@@ -337,8 +362,11 @@ def main():
     K_max = args.clients or (512 if args.smoke else 4096)
     if args.mesh is not None:
         K = args.clients or (65_536 if args.smoke else 1_000_000)
-        report = run_service_sharded(K=K, rounds=args.rounds, D=args.mesh, seed=args.seed)
-        _save_report(report, "select_serve_sharded")
+        S = args.staleness if args.async_mode else 0
+        report = run_service_sharded(
+            K=K, rounds=args.rounds, D=args.mesh, seed=args.seed, staleness=S, alpha=args.alpha
+        )
+        _save_report(report, "select_serve_sharded_async" if S else "select_serve_sharded")
     elif args.async_mode:
         report = run_service_compiled(
             J=args.jobs, K_max=K_max, rounds=args.rounds, seed=args.seed,

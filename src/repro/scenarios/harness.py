@@ -55,6 +55,7 @@ def evaluate_cell(
     seed: int = 0, frac: float = 0.5,
     staleness: Optional[int] = None, alpha: float = 0.5,
     p_late: float = 0.7, lag_decay: float = 0.5,
+    feedback: Optional[str] = None,
 ) -> Dict[str, float]:
     """One (selector, scenario) cell through the compiled scan engine.
 
@@ -63,20 +64,49 @@ def evaluate_cell(
     and gains ``async_cep`` / ``async_eff`` — the staleness-aware CEP and
     effective participation, where a late-but-alive client's contribution
     counts ``alpha**lag`` instead of zero.
+
+    With ``feedback="late_credit"`` (needs ``staleness``) the async engine is
+    additionally run under the late-credit feedback policy — E3CS receives the
+    decayed ``alpha**lag`` reward at the buffered selection-round allocation
+    when a late client lands, instead of deadline-only feedback — and the row
+    gains ``lc_cep`` / ``lc_eff`` (staleness-aware CEP under the policy),
+    ``lc_jain`` vs ``async_jain`` (Jain fairness of the selection counts) and
+    ``lc_drift`` (max |Δ log-weight| of the final E3CS state vs deadline
+    feedback — how far the policy actually moves the estimator).  Both runs
+    consume identical randomness, so every difference is the feedback policy.
     """
+    if feedback not in (None, "deadline", "late_credit"):
+        raise ValueError(f"unknown feedback policy {feedback!r} (want 'deadline' or 'late_credit')")
+    if feedback == "late_credit" and staleness is None:
+        raise ValueError("feedback='late_credit' needs staleness=S (the policy lives in the async engine)")
     vol, rho = make_scenario(scenario, K, T, seed)
     out = scan_selection_sim(selector, K=K, k=k, T=T, frac=frac, seed=seed, vol=vol, rho=rho)
     row = {"selector": selector, "scenario": scenario, "K": K, "k": k, "T": T}
     row.update(_metrics(out["masks"], out["xs"]))
     if staleness is not None:
-        vol2, _ = make_scenario(scenario, K, T, seed)
-        lag_model = CompletionLag(vol2, p_late=p_late, lag_decay=lag_decay, max_lag=max(int(staleness), 1))
-        aout = async_selection_sim(
-            selector, K=K, k=k, T=T, frac=frac, seed=seed,
-            staleness=int(staleness), alpha=alpha, lag_model=lag_model, rho=rho, outputs="lean",
-        )
+
+        def async_run(fb):
+            vol2, _ = make_scenario(scenario, K, T, seed)
+            lag_model = CompletionLag(vol2, p_late=p_late, lag_decay=lag_decay, max_lag=max(int(staleness), 1))
+            return async_selection_sim(
+                selector, K=K, k=k, T=T, frac=frac, seed=seed,
+                staleness=int(staleness), alpha=alpha, lag_model=lag_model, rho=rho,
+                outputs="lean", feedback=fb,
+            )
+
+        aout = async_run("deadline")
         row["async_cep"] = aout["cep"]
         row["async_eff"] = aout["cep"] / (T * k)
+        if feedback == "late_credit":
+            # the policy only moves the E3CS estimator; for the other
+            # selectors it is a compile-time no-op, so reuse the deadline run
+            # instead of paying a third compiled horizon per cell
+            lout = async_run("late_credit") if selector == "e3cs" else aout
+            row["async_jain"] = float(jain_index(jnp.asarray(aout["sel_counts"])))
+            row["lc_cep"] = lout["cep"]
+            row["lc_eff"] = lout["cep"] / (T * k)
+            row["lc_jain"] = float(jain_index(jnp.asarray(lout["sel_counts"])))
+            row["lc_drift"] = float(np.abs(lout["final_logw"] - aout["final_logw"]).max())
     return row
 
 
@@ -85,11 +115,16 @@ def run_grid(
     scenarios: Sequence[str] = ("paper_iid", "markov", "diurnal"),
     K: int = 100, k: int = 20, T: int = 500, seed: int = 0, frac: float = 0.5,
     staleness: Optional[int] = 2, alpha: float = 0.5,
+    feedback: Optional[str] = None,
 ) -> List[Dict[str, float]]:
     """The full grid, one compiled run per cell (two with ``staleness``: the
-    sync drop semantics and the async staleness-buffer semantics)."""
+    sync drop semantics and the async staleness-buffer semantics; three with
+    ``feedback="late_credit"``, adding the late-credit feedback policy)."""
     return [
-        evaluate_cell(sel, sc, K=K, k=k, T=T, seed=seed, frac=frac, staleness=staleness, alpha=alpha)
+        evaluate_cell(
+            sel, sc, K=K, k=k, T=T, seed=seed, frac=frac, staleness=staleness, alpha=alpha,
+            feedback=feedback,
+        )
         for sc in scenarios
         for sel in selectors
     ]
@@ -171,11 +206,15 @@ def run_replay(
 def format_grid(rows: List[Dict[str, float]]) -> str:
     """Fixed-width table: scenarios x selectors with the four metrics (plus
     the async staleness-aware CEP / effective-participation columns when the
-    grid was run with ``staleness``)."""
+    grid was run with ``staleness``, and the late-credit policy columns when
+    it was run with ``feedback="late_credit"``)."""
     has_async = any("async_cep" in r for r in rows)
+    has_lc = any("lc_cep" in r for r in rows)
     hdr = f"{'scenario':<22} {'selector':<16} {'cep':>9} {'eff_part':>9} {'jain':>6} {'entropy':>8}"
     if has_async:
         hdr += f" {'acep':>9} {'aeff':>7}"
+    if has_lc:
+        hdr += f" {'a_jain':>7} {'lc_cep':>9} {'lc_eff':>7} {'lc_jain':>7} {'lc_drift':>9}"
     lines = [hdr, "-" * len(hdr)]
     for r in rows:
         line = (
@@ -187,5 +226,13 @@ def format_grid(rows: List[Dict[str, float]]) -> str:
                 line += f" {r['async_cep']:>9.0f} {r['async_eff']:>7.3f}"
             else:
                 line += f" {'-':>9} {'-':>7}"
+        if has_lc:
+            if "lc_cep" in r:
+                line += (
+                    f" {r['async_jain']:>7.3f} {r['lc_cep']:>9.0f} {r['lc_eff']:>7.3f}"
+                    f" {r['lc_jain']:>7.3f} {r['lc_drift']:>9.2e}"
+                )
+            else:
+                line += f" {'-':>7} {'-':>9} {'-':>7} {'-':>7} {'-':>9}"
         lines.append(line)
     return "\n".join(lines)

@@ -331,61 +331,90 @@ def replay_packed_stream(
     eta: float = 0.5,
     seed: int = 0,
     rho=None,
+    staleness: int | None = None,
+    alpha: float = 0.5,
+    feedback: str = "deadline",
 ):
-    """Replay a disk-resident packed success trace through the scan engine in
+    """Replay a disk-resident packed trace through the scan engine in
     ``chunk``-round pieces: the memmap is sliced per chunk and each slice is
     device_put on its own, so peak host+device memory is ``chunk`` rows no
     matter how long the horizon — the trace streams from disk.
 
-    Bit-identical to an in-memory ``scan_selection_sim(...,
-    packed_override=...)`` run: the quota schedule spans the full horizon
-    (``sigma_t`` keys off the carried ``state.t``) and the PRNG key is carried
-    across chunks (``build_scan_runner(..., carry_key=True)``).  Returns the
-    lean-outputs dict (per-round successes/sigmas + final counts; ``rho``
-    only when it was actually computed or supplied — only the ``fedcs``
-    selector consumes the marginal, so other schemes skip the extra
-    streaming pass over the trace).
+    A ``"bits"`` trace replays through the synchronous engine, bit-identical
+    to an in-memory ``scan_selection_sim(..., packed_override=...)`` run; a
+    ``"lags"`` trace replays through the *async* engine
+    (``staleness`` defaults to 2, the most a 2-bit trace can hold;
+    ``feedback`` picks the E3CS policy), bit-identical to an in-memory
+    ``ReplayLag`` run.  Either way the quota schedule spans the full horizon
+    (``sigma_t`` keys off the carried ``state.t``) and the PRNG key — plus,
+    async, the staleness rings — are carried across chunks
+    (``RoundProgram.build_runner(carry_key=True)``).  Returns the
+    lean-outputs dict (per-round scalars + final counts; async adds
+    ``on_time`` / ``stale`` / ``cep``; ``rho`` only when it was actually
+    computed or supplied — only the ``fedcs`` selector consumes the
+    marginal, so other schemes skip the extra streaming pass over the
+    trace).
     """
     from repro.configs.base import FLConfig
     from repro.core.volatility import make_volatility
-    from repro.engine.scan_sim import build_scan_runner
+    from repro.engine.round_program import RoundProgram
 
     packed, meta = load_packed_trace(path)
-    if meta["kind"] != "bits":
-        raise ValueError("replay_packed_stream replays success-bit traces; lag traces go through ReplayLag")
+    is_lags = meta["kind"] == "lags"
+    if is_lags:
+        staleness = 2 if staleness is None else int(staleness)
+    elif staleness is not None:
+        raise ValueError("staleness applies to 'lags' traces; this trace holds success bits")
     K = meta["K"]
     T = meta["T"] if T is None else min(int(T), meta["T"])
     chunk = min(chunk, T)
     if rho is None and scheme == "fedcs":
-        rho = _chunked_marginal(packed, K, lambda rows: unpack_trace(rows, K), T=T)
+        expand = (lambda rows: unpack_lags(rows, K) == 0) if is_lags else (lambda rows: unpack_trace(rows, K))
+        rho = _chunked_marginal(packed, K, expand, T=T)
     rho_out = rho
     if rho is None:
         rho = np.zeros(K, np.float32)  # inert for every non-fedcs scheme
     fl = FLConfig(K=K, k=k, rounds=T, scheme=scheme, quota=quota, quota_frac=frac, eta=eta)
-    vol = make_volatility("bernoulli", jnp.asarray(rho))  # placeholder state; bits come from the trace
-    run, state = build_scan_runner(fl, vol, rho, override="packed", outputs="lean", carry_key=True, scan_length=chunk)
-    run_tail, _ = (
-        build_scan_runner(fl, vol, rho, override="packed", outputs="lean", carry_key=True, scan_length=T % chunk)
+    vol = make_volatility("bernoulli", jnp.asarray(rho))  # placeholder state; outcomes come from the trace
+    program = RoundProgram(
+        fl=fl, vol=vol, rho=rho, override="packed_lags" if is_lags else "packed",
+        staleness=staleness, alpha=alpha, feedback=feedback,
+    )
+    run, state = program.build_runner(outputs="lean", carry_key=True, scan_length=chunk)
+    run_tail = (
+        program.build_runner(outputs="lean", carry_key=True, scan_length=T % chunk)[0]
         if T % chunk
-        else (None, None)
+        else None
     )
     key = jax.random.PRNGKey(seed)
-    successes, sigmas = [], []
-    for lo in range(0, T - (T % chunk), chunk):
-        xs = jnp.asarray(packed[lo : lo + chunk])  # one chunk of rows on device
-        state, key, succ, sig = run(state, key, xs)
-        successes.append(np.asarray(succ))
-        sigmas.append(np.asarray(sig))
-    if T % chunk:
-        xs = jnp.asarray(packed[T - (T % chunk) : T])
-        state, key, succ, sig = run_tail(state, key, xs)
-        successes.append(np.asarray(succ))
-        sigmas.append(np.asarray(sig))
-    out = {
-        "successes": np.concatenate(successes),
-        "sigmas": np.concatenate(sigmas),
-        "counts": np.asarray(state.sel_counts),
-    }
+    rings = program.init_rings() if is_lags else None
+    cols = ([], []) if not is_lags else ([], [], [])
+    for lo in range(0, T, chunk):
+        hi = min(lo + chunk, T)
+        step_run = run if hi - lo == chunk else run_tail
+        xs = jnp.asarray(packed[lo:hi])  # one chunk of rows on device
+        if is_lags:
+            state, key, rings, *outs = step_run(state, key, rings, xs)
+        else:
+            state, key, *outs = step_run(state, key, xs)
+        for c, o in zip(cols, outs):
+            c.append(np.asarray(o))
+    if is_lags:
+        on_time, stale, sigmas = (np.concatenate(c) for c in cols)
+        out = {
+            "on_time": on_time,
+            "stale": stale,
+            "sigmas": sigmas,
+            "counts": np.asarray(state.sel_counts),
+            "cep": float(state.cep),
+        }
+    else:
+        successes, sigmas = (np.concatenate(c) for c in cols)
+        out = {
+            "successes": successes,
+            "sigmas": sigmas,
+            "counts": np.asarray(state.sel_counts),
+        }
     if rho_out is not None:
         out["rho"] = np.asarray(rho_out)
     return out

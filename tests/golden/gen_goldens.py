@@ -1,0 +1,123 @@
+#!/usr/bin/env python
+"""Capture the pre-RoundProgram engine outputs as golden pins.
+
+Run ONCE against the engine as it stood before the PR-5 refactor (commit
+5112c98) to freeze the bit-exact behaviour of every round-body flavour the
+repo had at that point:
+
+* sync, D=1: all five schemes (generated volatility), dense / packed /
+  streamed replay, and the ``allocator="bisect"`` reference;
+* sync, D=8: the sharded engine (e3cs + random, generated and packed);
+* async S=2, D=1: four schemes (generated ``CompletionLag``) and the 2-bit
+  ``ReplayLag`` packed-lag replay (trace itself stored too, so the new
+  packed-lag *override* path can be pinned against the identical rows).
+
+``tests/test_round_program.py`` replays the same configurations through the
+unified ``RoundProgram`` and asserts bit-identity against this file.  The
+npz is committed; regenerate only if the *intended* semantics change, and
+say so in the PR.
+
+Usage:  PYTHONPATH=src python tests/golden/gen_goldens.py
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import numpy as np
+
+K, k, T, SEED, FRAC = 128, 16, 50, 3, 0.5
+SYNC_SCHEMES = ("e3cs", "random", "fedcs", "ucb", "pow_d")
+ASYNC_SCHEMES = ("e3cs", "random", "ucb", "fedcs")
+OUT = os.path.join(os.path.dirname(__file__), "round_program_goldens.npz")
+
+
+def dense_xs():
+    return np.random.default_rng(11).binomial(1, 0.6, (T, K)).astype(np.float32)
+
+
+def lag_model(rho):
+    from repro.core.volatility import CompletionLag, make_volatility
+
+    return CompletionLag(
+        make_volatility("bernoulli", rho), p_late=0.7, lag_decay=0.5, max_lag=2
+    )
+
+
+def main():
+    import jax.numpy as jnp
+
+    from repro.core.volatility import make_volatility, paper_success_rates
+    from repro.engine.scan_sim import async_selection_sim, scan_selection_sim
+    from repro.engine.sharded import sharded_selection_sim
+    from repro.launch.mesh import make_host_mesh
+    from repro.scenarios.replay import (
+        pack_trace,
+        record_lag_trace,
+        replay_packed_stream,
+        save_packed_trace,
+        ReplayLag,
+    )
+
+    rho = paper_success_rates(K)
+    g = {}
+
+    # --- sync, D=1 --------------------------------------------------------
+    for scheme in SYNC_SCHEMES:
+        out = scan_selection_sim(scheme, K=K, k=k, T=T, frac=FRAC, seed=SEED)
+        g[f"sync_d1_{scheme}_masks"] = pack_trace(out["masks"])
+        g[f"sync_d1_{scheme}_counts"] = out["counts"]
+    out = scan_selection_sim("e3cs", K=K, k=k, T=T, frac=FRAC, seed=SEED, allocator="bisect")
+    g["sync_d1_e3cs_bisect_masks"] = pack_trace(out["masks"])
+
+    xs = dense_xs()
+    out = scan_selection_sim("e3cs", K=K, k=k, T=T, frac=FRAC, seed=SEED, xs_override=xs)
+    g["sync_d1_dense_masks"] = pack_trace(out["masks"])
+    packed = pack_trace(xs)
+    out = scan_selection_sim("e3cs", K=K, k=k, T=T, frac=FRAC, seed=SEED, packed_override=packed)
+    g["sync_d1_packed_masks"] = pack_trace(out["masks"])
+
+    with tempfile.TemporaryDirectory() as d:
+        path = save_packed_trace(os.path.join(d, "trace"), packed, K)
+        out = replay_packed_stream("e3cs", path, k, chunk=16, frac=FRAC, seed=SEED)
+    g["sync_d1_streamed_successes"] = out["successes"]
+    g["sync_d1_streamed_counts"] = out["counts"]
+
+    # --- sync, D=8 (sharded) ---------------------------------------------
+    mesh8 = make_host_mesh(8)
+    for scheme in ("e3cs", "random"):
+        out = sharded_selection_sim(scheme, mesh8, K=K, k=k, T=T, frac=FRAC, seed=SEED)
+        g[f"sync_d8_{scheme}_masks"] = pack_trace(out["masks"])
+        g[f"sync_d8_{scheme}_counts"] = out["counts"]
+    out = sharded_selection_sim("e3cs", mesh8, K=K, k=k, T=T, frac=FRAC, seed=SEED, packed_override=packed)
+    g["sync_d8_packed_masks"] = pack_trace(out["masks"])
+
+    # --- async S=2, D=1 ---------------------------------------------------
+    for scheme in ASYNC_SCHEMES:
+        out = async_selection_sim(
+            scheme, K=K, k=k, T=T, frac=FRAC, seed=SEED, staleness=2, alpha=0.5,
+            lag_model=lag_model(rho), rho=rho,
+        )
+        g[f"async_d1_{scheme}_masks"] = pack_trace(out["masks"])
+        g[f"async_d1_{scheme}_lags"] = out["lags"].astype(np.int8)
+        g[f"async_d1_{scheme}_counts"] = out["counts"]
+        g[f"async_d1_{scheme}_cep"] = np.float32(out["cep"])
+        g[f"async_d1_{scheme}_on_time"] = out["on_time"]
+        g[f"async_d1_{scheme}_stale"] = out["stale"]
+
+    lag_packed = record_lag_trace(lag_model(rho), T, seed=SEED)
+    g["lag_trace_packed"] = lag_packed
+    out = async_selection_sim(
+        "e3cs", K=K, k=k, T=T, frac=FRAC, seed=SEED, staleness=2, alpha=0.5,
+        lag_model=ReplayLag(jnp.asarray(lag_packed), K), rho=rho,
+    )
+    g["async_d1_replay_masks"] = pack_trace(out["masks"])
+    g["async_d1_replay_counts"] = out["counts"]
+    g["async_d1_replay_cep"] = np.float32(out["cep"])
+
+    np.savez_compressed(OUT, **g)
+    print(f"wrote {OUT}: {len(g)} arrays, {os.path.getsize(OUT)} bytes")
+
+
+if __name__ == "__main__":
+    main()

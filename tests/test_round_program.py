@@ -1,0 +1,408 @@
+"""RoundProgram tests: the bit-identity matrix against pre-refactor goldens,
+the new compositions (sharded async, packed-lag replay, late-credit
+feedback), and the single knob-resolution path (`from_config`).
+
+The goldens in ``tests/golden/round_program_goldens.npz`` were captured from
+the engines as they stood before the PR-5 unification (see
+``tests/golden/gen_goldens.py``); every cell here replays the identical
+configuration through the unified ``RoundProgram`` and must reproduce them
+bit-for-bit.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import FLConfig
+from repro.core.volatility import DEAD_LAG, BinaryLag, CompletionLag, make_volatility, paper_success_rates
+from repro.engine.round_program import RoundProgram
+from repro.engine.scan_sim import async_selection_sim, scan_selection_sim
+from repro.engine.sharded import sharded_selection_sim
+from repro.scenarios.replay import (
+    ReplayLag,
+    pack_trace,
+    record_lag_trace,
+    replay_packed_stream,
+    save_packed_trace,
+    unpack_lags,
+)
+
+K, k, T, SEED, FRAC = 128, 16, 50, 3, 0.5
+GOLD = np.load(os.path.join(os.path.dirname(__file__), "golden", "round_program_goldens.npz"))
+
+
+@pytest.fixture(scope="module")
+def mesh8():
+    from repro.launch.mesh import make_host_mesh
+
+    if len(jax.devices()) < 8:
+        pytest.skip("needs XLA_FLAGS=--xla_force_host_platform_device_count=8 (set in conftest)")
+    return make_host_mesh(8)
+
+
+@pytest.fixture(scope="module")
+def mesh1():
+    from repro.launch.mesh import make_host_mesh
+
+    return make_host_mesh(1)
+
+
+def _rho():
+    return paper_success_rates(K)
+
+
+def _lag_model():
+    return CompletionLag(
+        make_volatility("bernoulli", _rho()), p_late=0.7, lag_decay=0.5, max_lag=2
+    )
+
+
+def _dense_xs():
+    return np.random.default_rng(11).binomial(1, 0.6, (T, K)).astype(np.float32)
+
+
+class TestSyncBitIdentityMatrix:
+    """(S=None, D=1) == the pre-refactor scan engine; (S=None, D=8) == the
+    pre-refactor sharded engine — for every scheme and observe source."""
+
+    @pytest.mark.parametrize("scheme", ["e3cs", "random", "fedcs", "ucb", "pow_d"])
+    def test_generated_d1(self, scheme):
+        out = scan_selection_sim(scheme, K=K, k=k, T=T, frac=FRAC, seed=SEED)
+        assert np.array_equal(pack_trace(out["masks"]), GOLD[f"sync_d1_{scheme}_masks"])
+        assert np.array_equal(out["counts"], GOLD[f"sync_d1_{scheme}_counts"])
+
+    def test_bisect_allocator_d1(self):
+        out = scan_selection_sim("e3cs", K=K, k=k, T=T, frac=FRAC, seed=SEED, allocator="bisect")
+        assert np.array_equal(pack_trace(out["masks"]), GOLD["sync_d1_e3cs_bisect_masks"])
+
+    def test_dense_replay_d1(self):
+        out = scan_selection_sim("e3cs", K=K, k=k, T=T, frac=FRAC, seed=SEED, xs_override=_dense_xs())
+        assert np.array_equal(pack_trace(out["masks"]), GOLD["sync_d1_dense_masks"])
+
+    def test_packed_replay_d1(self):
+        packed = pack_trace(_dense_xs())
+        out = scan_selection_sim("e3cs", K=K, k=k, T=T, frac=FRAC, seed=SEED, packed_override=packed)
+        assert np.array_equal(pack_trace(out["masks"]), GOLD["sync_d1_packed_masks"])
+
+    def test_streamed_replay_d1(self, tmp_path):
+        path = save_packed_trace(str(tmp_path / "trace"), pack_trace(_dense_xs()), K)
+        out = replay_packed_stream("e3cs", path, k, chunk=16, frac=FRAC, seed=SEED)
+        assert np.array_equal(out["successes"], GOLD["sync_d1_streamed_successes"])
+        assert np.array_equal(out["counts"], GOLD["sync_d1_streamed_counts"])
+
+    @pytest.mark.parametrize("scheme", ["e3cs", "random"])
+    def test_generated_d8(self, mesh8, scheme):
+        out = sharded_selection_sim(scheme, mesh8, K=K, k=k, T=T, frac=FRAC, seed=SEED)
+        assert np.array_equal(pack_trace(out["masks"]), GOLD[f"sync_d8_{scheme}_masks"])
+        assert np.array_equal(out["counts"], GOLD[f"sync_d8_{scheme}_counts"])
+
+    def test_packed_replay_d8(self, mesh8):
+        packed = pack_trace(_dense_xs())
+        out = sharded_selection_sim("e3cs", mesh8, K=K, k=k, T=T, frac=FRAC, seed=SEED, packed_override=packed)
+        assert np.array_equal(pack_trace(out["masks"]), GOLD["sync_d8_packed_masks"])
+
+
+class TestAsyncBitIdentityMatrix:
+    """(S=2, D=1) == the pre-refactor async engine, generated and replayed."""
+
+    @pytest.mark.parametrize("scheme", ["e3cs", "random", "ucb", "fedcs"])
+    def test_generated_d1(self, scheme):
+        out = async_selection_sim(
+            scheme, K=K, k=k, T=T, frac=FRAC, seed=SEED, staleness=2, alpha=0.5,
+            lag_model=_lag_model(), rho=_rho(),
+        )
+        assert np.array_equal(pack_trace(out["masks"]), GOLD[f"async_d1_{scheme}_masks"])
+        assert np.array_equal(out["lags"].astype(np.int8), GOLD[f"async_d1_{scheme}_lags"])
+        assert np.array_equal(out["counts"], GOLD[f"async_d1_{scheme}_counts"])
+        assert np.float32(out["cep"]) == GOLD[f"async_d1_{scheme}_cep"]
+        assert np.array_equal(out["on_time"], GOLD[f"async_d1_{scheme}_on_time"])
+        assert np.array_equal(out["stale"], GOLD[f"async_d1_{scheme}_stale"])
+
+    def _replay_kw(self):
+        return dict(K=K, k=k, T=T, frac=FRAC, seed=SEED, staleness=2, alpha=0.5, rho=_rho())
+
+    def test_replay_lag_model_d1(self):
+        lp = GOLD["lag_trace_packed"]
+        out = async_selection_sim("e3cs", lag_model=ReplayLag(jnp.asarray(lp), K), **self._replay_kw())
+        assert np.array_equal(pack_trace(out["masks"]), GOLD["async_d1_replay_masks"])
+        assert np.float32(out["cep"]) == GOLD["async_d1_replay_cep"]
+
+    def test_packed_lags_override_d1(self):
+        # the new packed-lag *override* replays the identical rows bit-identically
+        lp = GOLD["lag_trace_packed"]
+        out = async_selection_sim(
+            "e3cs", lag_model=_lag_model(), packed_lag_override=lp, **self._replay_kw()
+        )
+        assert np.array_equal(pack_trace(out["masks"]), GOLD["async_d1_replay_masks"])
+        assert np.float32(out["cep"]) == GOLD["async_d1_replay_cep"]
+
+    def test_dense_lag_replay_d1(self):
+        # dense int32 lag rows streamed through the scan xs == the crumb path
+        lp = GOLD["lag_trace_packed"]
+        lags = unpack_lags(lp, K)
+        fl = FLConfig(K=K, k=k, rounds=T, scheme="e3cs", quota_frac=FRAC)
+        program = RoundProgram(fl=fl, vol=_lag_model(), rho=_rho(), override="dense", staleness=2, alpha=0.5)
+        run, s0 = program.build_runner(outputs="full")
+        _, masks, *_ = run(s0, jax.random.PRNGKey(SEED), jnp.asarray(lags, jnp.int32))
+        assert np.array_equal(pack_trace(np.asarray(masks)), GOLD["async_d1_replay_masks"])
+
+    def test_streamed_lag_replay_d1(self, tmp_path):
+        lp = GOLD["lag_trace_packed"]
+        path = save_packed_trace(str(tmp_path / "lags"), lp, K, kind="lags")
+        out = replay_packed_stream("e3cs", path, k, chunk=16, frac=FRAC, seed=SEED)
+        assert np.float32(out["cep"]) == GOLD["async_d1_replay_cep"]
+        assert np.array_equal(out["counts"], GOLD["async_d1_replay_counts"])
+
+
+class TestShardedAsync:
+    """The previously-impossible composition: staleness ring sharded
+    (S, K/D), 2-bit lag replay rows sharded along K."""
+
+    def test_mesh1_bit_identical_to_unsharded(self, mesh1):
+        fl = FLConfig(K=K, k=k, rounds=T, scheme="e3cs", quota_frac=FRAC, allocator="bisect")
+        pm = RoundProgram(fl=fl, vol=_lag_model(), rho=_rho(), staleness=2, alpha=0.5, mesh=mesh1)
+        run, s0 = pm.build_runner(outputs="full")
+        st, masks, lags, ps, sigmas, arrived = run(s0, jax.random.PRNGKey(SEED), jnp.zeros((T, 0), jnp.float32))
+        pl = RoundProgram(fl=fl, vol=_lag_model(), rho=_rho(), staleness=2, alpha=0.5)
+        runl, s0l = pl.build_runner(outputs="full")
+        stl, masksl, lagsl, psl, sigmasl, arrivedl = runl(
+            s0l, jax.random.PRNGKey(SEED), jnp.zeros((T, 0), jnp.float32)
+        )
+        assert np.array_equal(np.asarray(masks), np.asarray(masksl))
+        assert np.array_equal(np.asarray(lags), np.asarray(lagsl))
+        assert np.array_equal(np.asarray(arrived), np.asarray(arrivedl))
+        assert float(st.cep) == float(stl.cep)
+        np.testing.assert_array_equal(np.asarray(st.e3cs.logw), np.asarray(stl.e3cs.logw))
+
+    def test_d8_generated_invariants(self, mesh8):
+        fl = FLConfig(K=K, k=k, rounds=T, scheme="e3cs", quota_frac=FRAC, allocator="bisect")
+        pm = RoundProgram(fl=fl, vol=_lag_model(), rho=_rho(), staleness=2, alpha=0.5, mesh=mesh8)
+        run, s0 = pm.build_runner(outputs="full")
+        st, masks, lags, ps, sigmas, arrived = run(s0, jax.random.PRNGKey(SEED), jnp.zeros((T, 0), jnp.float32))
+        masks = np.asarray(masks)[:, :K]
+        lags = np.asarray(lags)[:, :K]
+        arrived = np.asarray(arrived)[:, :K]
+        # exact cohort size every round, counts conserved
+        np.testing.assert_array_equal(masks.sum(1), np.full(T, float(k)))
+        np.testing.assert_array_equal(np.asarray(st.sel_counts)[:K], masks.sum(0))
+        # the staleness-aware CEP decomposes into on-time + decayed late credit
+        on_time = (masks * (lags == 0)).sum()
+        stale = arrived.sum()
+        assert stale > 0.0
+        assert float(st.cep) == pytest.approx(on_time + stale, rel=1e-5)
+        # every arriving credit is alpha**lag of a scheduled selection
+        sched = sum(
+            (masks[:-s] * (lags[:-s] == s) * 0.5**s).sum() for s in (1, 2) if T > s
+        )
+        assert arrived.sum() <= sched + 1e-4
+
+    def test_d8_lean_matches_full(self, mesh8):
+        fl = FLConfig(K=K, k=k, rounds=T, scheme="e3cs", quota_frac=FRAC, allocator="bisect")
+
+        def go(outputs):
+            pm = RoundProgram(fl=fl, vol=_lag_model(), rho=_rho(), staleness=2, alpha=0.5, mesh=mesh8)
+            run, s0 = pm.build_runner(outputs=outputs)
+            return run(s0, jax.random.PRNGKey(SEED), jnp.zeros((T, 0), jnp.float32))
+
+        st_f, masks, lags, ps, sigmas, arrived = go("full")
+        st_l, on_time, stale, sigmas_l = go("lean")
+        np.testing.assert_array_equal(np.asarray(st_f.sel_counts), np.asarray(st_l.sel_counts))
+        assert float(st_f.cep) == float(st_l.cep)
+        masks, lags = np.asarray(masks), np.asarray(lags)
+        np.testing.assert_allclose((masks * (lags == 0)).sum(1), np.asarray(on_time), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(arrived).sum(1), np.asarray(stale), atol=1e-4)
+
+    def test_d8_lag_replay_random_matches_d1_bitwise(self, mesh8):
+        # packed-lag replay draws no volatility randomness and the `random`
+        # selector draws replicated, so D=8 must equal D=1 bit-for-bit
+        lp = GOLD["lag_trace_packed"]
+        fl = FLConfig(K=K, k=k, rounds=T, scheme="random", quota_frac=FRAC)
+        outs = []
+        for mesh in (None, mesh8):
+            pm = RoundProgram(
+                fl=fl, vol=_lag_model(), rho=_rho(), override="packed_lags",
+                staleness=2, alpha=0.5, mesh=mesh,
+            )
+            run, s0 = pm.build_runner(outputs="full")
+            st, masks, lags, *_ = run(s0, jax.random.PRNGKey(SEED), jnp.asarray(lp))
+            outs.append((np.asarray(masks)[:, :K], np.asarray(lags)[:, :K], float(st.cep)))
+        assert np.array_equal(outs[0][0], outs[1][0])
+        assert np.array_equal(outs[0][1], outs[1][1])
+        assert outs[0][2] == outs[1][2]
+
+    def test_d8_chunked_equals_one_shot(self, mesh8):
+        # carry_key threads the PRNG key and the sharded rings across chunks
+        lp = GOLD["lag_trace_packed"]
+        fl = FLConfig(K=K, k=k, rounds=T, scheme="e3cs", quota_frac=FRAC, allocator="bisect")
+        pm = RoundProgram(
+            fl=fl, vol=_lag_model(), rho=_rho(), override="packed_lags",
+            staleness=2, alpha=0.5, mesh=mesh8,
+        )
+        run, s0 = pm.build_runner(outputs="lean")
+        st_ref, on_ref, stale_ref, _ = run(s0, jax.random.PRNGKey(SEED), jnp.asarray(lp))
+        chunk = 25
+        runc, s0c = pm.build_runner(outputs="lean", carry_key=True, scan_length=chunk)
+        state, key, rings = s0c, jax.random.PRNGKey(SEED), pm.init_rings()  # (S, K_pad) via the mesh
+        ons, stales = [], []
+        for lo in range(0, T, chunk):
+            state, key, rings, on, stale, _ = runc(state, key, rings, jnp.asarray(lp[lo : lo + chunk]))
+            ons.append(np.asarray(on))
+            stales.append(np.asarray(stale))
+        assert np.array_equal(np.concatenate(ons), np.asarray(on_ref))
+        assert np.array_equal(np.concatenate(stales), np.asarray(stale_ref))
+        np.testing.assert_array_equal(np.asarray(state.sel_counts), np.asarray(st_ref.sel_counts))
+
+
+class _FixedLag:
+    """Deterministic lag schedule: row t of ``lags`` is returned verbatim."""
+
+    def __init__(self, lags):
+        self.lags = jnp.asarray(lags, jnp.int32)
+
+    def init_state(self):
+        return jnp.zeros((), jnp.int32)
+
+    def sample(self, rng, state):
+        return jax.lax.dynamic_index_in_dim(self.lags, state, keepdims=False), state + 1
+
+
+class TestLateCreditFeedback:
+    def test_s0_and_binary_lag_equal_deadline(self):
+        # no late arrivals ever -> the feedback ring stays empty -> identical
+        rho = _rho()
+        base = lambda: BinaryLag(make_volatility("bernoulli", rho))  # noqa: E731
+        a = async_selection_sim(
+            "e3cs", K=K, k=k, T=T, frac=FRAC, seed=SEED, staleness=2,
+            lag_model=base(), rho=rho, feedback="late_credit",
+        )
+        b = async_selection_sim(
+            "e3cs", K=K, k=k, T=T, frac=FRAC, seed=SEED, staleness=2,
+            lag_model=base(), rho=rho, feedback="deadline",
+        )
+        assert np.array_equal(a["masks"], b["masks"])
+        np.testing.assert_array_equal(a["final_logw"], b["final_logw"])
+
+    def test_hand_computed_feedback_step(self):
+        # K=4, k=2, sigma=0, uniform weights: p = 0.5 each, no capping.
+        # Round 0: the two selected clients complete 1 round late; everyone
+        # observed x=0, so deadline feedback never moves logw.  Late-credit
+        # applies step = min(residual*eta*credit/p/K, 1) = (2*0.5*(0.5/0.5))/4
+        # = 0.25 to the selected pair at round 1, then re-centers: final logw
+        # is 0 on the selected pair and -0.25 elsewhere — exactly.
+        lags = [[1, 1, 1, 1], [DEAD_LAG] * 4]
+        fl = FLConfig(K=4, k=2, rounds=2, scheme="e3cs", quota_frac=0.0)
+        pm = RoundProgram(fl=fl, vol=_FixedLag(lags), rho=paper_success_rates(4),
+                          staleness=2, alpha=0.5, feedback="late_credit")
+        run, s0 = pm.build_runner(outputs="full")
+        st, masks, *_ = run(s0, jax.random.PRNGKey(0), jnp.zeros((2, 0), jnp.float32))
+        sel = np.asarray(masks)[0]  # round-0 cohort
+        expect = np.where(sel > 0, 0.0, -0.25).astype(np.float32)
+        np.testing.assert_array_equal(np.asarray(st.e3cs.logw), expect)
+        # deadline feedback leaves the weights untouched
+        pm_d = RoundProgram(fl=fl, vol=_FixedLag(lags), rho=paper_success_rates(4),
+                            staleness=2, alpha=0.5)
+        run_d, s0_d = pm_d.build_runner(outputs="full")
+        st_d, *_ = run_d(s0_d, jax.random.PRNGKey(0), jnp.zeros((2, 0), jnp.float32))
+        np.testing.assert_array_equal(np.asarray(st_d.e3cs.logw), np.zeros(4, np.float32))
+
+    def test_late_credit_moves_estimator_and_fairness(self):
+        rho = _rho()
+        kw = dict(K=K, k=k, T=200, frac=FRAC, seed=SEED, staleness=2, alpha=0.5, rho=rho)
+        a = async_selection_sim("e3cs", lag_model=_lag_model(), feedback="deadline", **kw)
+        b = async_selection_sim("e3cs", lag_model=_lag_model(), feedback="late_credit", **kw)
+        assert np.abs(a["final_logw"] - b["final_logw"]).max() > 0.01
+
+    def test_sharded_late_credit_runs(self, mesh8):
+        fl = FLConfig(K=K, k=k, rounds=30, scheme="e3cs", quota_frac=FRAC, allocator="bisect")
+        pm = RoundProgram(fl=fl, vol=_lag_model(), rho=_rho(), staleness=2, alpha=0.5,
+                          feedback="late_credit", mesh=mesh8)
+        run, s0 = pm.build_runner(outputs="lean")
+        st, on_time, stale, _ = run(s0, jax.random.PRNGKey(SEED), jnp.zeros((30, 0), jnp.float32))
+        assert float(np.asarray(st.sel_counts).sum()) == 30.0 * k
+        assert float(stale.sum()) > 0
+
+    def test_harness_late_credit_columns(self):
+        from repro.scenarios.harness import evaluate_cell, format_grid
+
+        row = evaluate_cell("e3cs", "paper_iid", K=40, k=8, T=60, staleness=2, feedback="late_credit")
+        for col in ("lc_cep", "lc_eff", "lc_jain", "lc_drift", "async_jain"):
+            assert col in row, col
+        table = format_grid([row])
+        assert "lc_cep" in table and "lc_drift" in table
+
+
+class TestFromConfigResolution:
+    """The knob-drift regression: every entry point resolves through ONE
+    constructor, and the constructor resolves the knobs the documented way."""
+
+    def test_async_knobs(self):
+        fl = FLConfig(K=32, k=4, rounds=10, scheme="e3cs", staleness_rounds=3,
+                      staleness_alpha=0.25, late_prob=0.9, lag_decay=0.3)
+        pm = RoundProgram.from_config(fl)
+        assert pm.staleness == 3 and pm.alpha == 0.25
+        lm = pm.lag_model
+        assert isinstance(lm, CompletionLag)
+        assert lm.p_late == 0.9 and lm.lag_decay == 0.3 and lm.max_lag == 3
+        assert pm.base_vol is lm.base
+
+    def test_sync_knobs(self):
+        pm = RoundProgram.from_config(FLConfig(K=32, k=4, rounds=10, volatility="markov"))
+        assert pm.staleness is None and pm.lag_model is None
+        assert type(pm.vol).__name__ == "MarkovVolatility"
+
+    def test_mesh_forces_bisect_allocator(self, mesh1):
+        pm = RoundProgram.from_config(FLConfig(K=32, k=4, rounds=10, allocator="sort"), mesh=mesh1)
+        assert pm.fl.allocator == "bisect"
+
+    def test_fl_server_routes_through_from_config(self):
+        from repro.configs import get_config
+        from repro.data import ClientStore, make_image_dataset, partition_primary_label
+        from repro.fl import FLServer
+        from repro.models import build_model
+
+        cfg = get_config("emnist-cnn")
+        fl = FLConfig(K=10, k=2, rounds=2, scheme="e3cs", samples_per_client=20,
+                      batch_size=10, local_epochs=(1,), staleness_rounds=2, staleness_alpha=0.5)
+        data = make_image_dataset(26, (28, 28, 1), 240, 60, seed=0)
+        idxs = partition_primary_label(data["y"], fl.K, fl.samples_per_client, seed=0)
+        srv = FLServer(build_model(cfg), fl, ClientStore(data, idxs))
+        assert isinstance(srv.program, RoundProgram)
+        assert srv.lag_model is srv.program.lag_model
+        assert srv.staleness == 2 and srv.vol is srv.program.base_vol
+        ref = RoundProgram.from_config(fl)
+        assert type(srv.program.lag_model) is type(ref.lag_model)
+        assert srv.program.lag_model.max_lag == ref.lag_model.max_lag == 2
+        np.testing.assert_array_equal(np.asarray(srv.rho), np.asarray(ref.rho))
+
+    def test_select_serve_sharded_async_smoke(self, mesh8):
+        from repro.launch.select_serve import run_service_sharded
+
+        rep = run_service_sharded(K=1024, rounds=8, D=8, k=16, seed=0, reps=1, staleness=2)
+        assert rep["mode"] == "compiled_sharded_async"
+        assert rep["staleness"] == 2
+        assert rep["on_time_total"] > 0
+        assert rep["stale_credit_total"] > 0
+
+    def test_invalid_modes_raise(self):
+        fl = FLConfig(K=8, k=2, rounds=4)
+        vol = make_volatility("bernoulli", paper_success_rates(8))
+        with pytest.raises(ValueError, match="packed_lags"):
+            RoundProgram(fl=fl, vol=vol, rho=None, override="packed_lags")
+        with pytest.raises(ValueError, match="packed_lags"):
+            RoundProgram(fl=fl, vol=vol, rho=None, override="packed", staleness=2)
+        with pytest.raises(ValueError, match="feedback"):
+            RoundProgram(fl=fl, vol=vol, rho=None, feedback="nope")
+
+    def test_record_lag_trace_roundtrip_through_override(self):
+        # record -> pack -> override replay == model replay (whole pipeline)
+        rho = paper_success_rates(32)
+        lm = CompletionLag(make_volatility("markov", rho, stickiness=0.9), p_late=0.6, max_lag=2)
+        lp = record_lag_trace(lm, 30, seed=9)
+        a = async_selection_sim("e3cs", K=32, k=6, T=30, frac=0.5, seed=9, staleness=2,
+                                lag_model=ReplayLag(jnp.asarray(lp), 32), rho=rho)
+        b = async_selection_sim("e3cs", K=32, k=6, T=30, frac=0.5, seed=9, staleness=2,
+                                lag_model=lm, packed_lag_override=lp, rho=rho)
+        assert np.array_equal(a["masks"], b["masks"])
+        assert a["cep"] == b["cep"]

@@ -257,8 +257,16 @@ class TestShardedScanD8:
         state, successes, sigmas = run(state0, jax.random.PRNGKey(0), jnp.zeros((40, 0), jnp.float32))
         assert successes.shape == (40,)
         assert float(np.asarray(state.sel_counts)[:100].sum()) == 400.0
-        with pytest.raises(ValueError, match="mesh-sharded"):
-            build_scan_runner(fl, vol, rho, mesh=mesh8, carry_key=True)
+        # carry_key composes with the mesh since the RoundProgram unification:
+        # two 20-round chunks reproduce the one-shot horizon bit-for-bit
+        run_c, s0c = build_scan_runner(fl, vol, rho, outputs="lean", mesh=mesh8, carry_key=True, scan_length=20)
+        st, key = s0c, jax.random.PRNGKey(0)
+        succ = []
+        for _ in range(2):
+            st, key, s, _ = run_c(st, key, jnp.zeros((20, 0), jnp.float32))
+            succ.append(np.asarray(s))
+        assert np.array_equal(np.concatenate(succ), np.asarray(successes))
+        np.testing.assert_array_equal(np.asarray(st.sel_counts), np.asarray(state.sel_counts))
 
 
 class TestBisectTilesKernel:
