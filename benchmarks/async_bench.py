@@ -26,11 +26,14 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 try:
-    from .common import emit, save_json
+    from .common import emit, reporter
 except ImportError:  # running as a script: python benchmarks/async_bench.py
-    from common import emit, save_json
+    from common import emit, reporter
+
+from repro.obs import ROUND_TAPS
 
 from repro.configs.base import FLConfig
 from repro.core.volatility import BinaryLag, CompletionLag, make_volatility, paper_success_rates
@@ -49,7 +52,7 @@ def _time_runner(run, state0, key, xs_in, reps: int = 3):
     return best, out
 
 
-def bench_async_scan(K_list, T: int, S: int, alpha: float, out: dict, reps: int = 3):
+def bench_async_scan(K_list, T: int, S: int, alpha: float, out: dict, reps: int = 3, rep=None):
     rows = {}
     for K in K_list:
         k = max(1, K // 50)
@@ -59,10 +62,20 @@ def bench_async_scan(K_list, T: int, S: int, alpha: float, out: dict, reps: int 
         key = jax.random.PRNGKey(0)
 
         lag = CompletionLag(make_volatility("bernoulli", rho), p_late=0.7, lag_decay=0.5, max_lag=S)
-        run_a, st_a = build_scan_runner(fl, lag, rho, outputs="lean", staleness=S, alpha=alpha)
+        run_a, st_a = build_scan_runner(fl, lag, rho, outputs="lean", staleness=S, alpha=alpha, taps=True)
         async_s, aout = _time_runner(run_a, st_a, key, xs_in, reps)
         state = aout[0]
         acep, on_time = float(state.cep), float(state.succ_hist)
+        tap_counters = None
+        if rep is not None:
+            taps = aout[-1]
+            rep.metrics_stream(
+                f"async_scan_K{K}",
+                {name: np.asarray(v) for name, v in taps["series"].items()},
+                window=max(1, T // 10),
+                better=ROUND_TAPS.directions(),
+            )
+            tap_counters = {n: float(v) for n, v in taps["counters"].items()}
 
         sync_vol = make_volatility("bernoulli", rho)
         run_s, st_s = build_scan_runner(fl, sync_vol, rho, outputs="lean")
@@ -79,6 +92,8 @@ def bench_async_scan(K_list, T: int, S: int, alpha: float, out: dict, reps: int 
             "sync_s": sync_s, "sync_rounds_per_s": T / sync_s,
             "async_cep": acep, "on_time": on_time, "stale_recovered_frac": recovered,
         }
+        if tap_counters is not None:
+            rows[K]["tap_counters"] = tap_counters
         emit(f"async/scan/K={K}", async_s / T * 1e6, derived)
     out["scan"] = rows
     return rows
@@ -124,16 +139,17 @@ def bench_serve(J: int, K_max: int, rounds: int, S: int, out: dict):
 
 def run(smoke: bool = False):
     out = {}
+    rep = reporter("async", config={"smoke": smoke})
     if smoke:
-        bench_async_scan([10_000], T=128, S=2, alpha=0.5, out=out)
+        bench_async_scan([10_000], T=128, S=2, alpha=0.5, out=out, rep=rep)
         bench_overhead(K=10_000, T=128, out=out)
         bench_serve(J=4, K_max=512, rounds=10, S=2, out=out)
     else:
         # acceptance scale: the full K=1e6 x T=2500 horizon, S=2, on one host
-        bench_async_scan([100_000, 1_000_000], T=2500, S=2, alpha=0.5, out=out, reps=1)
+        bench_async_scan([100_000, 1_000_000], T=2500, S=2, alpha=0.5, out=out, reps=1, rep=rep)
         bench_overhead(K=100_000, T=500, out=out)
         bench_serve(J=8, K_max=65_536, rounds=30, S=2, out=out)
-    save_json("async", out)
+    rep.save(out)
     if out["overhead"]["ratio"] > 1.5:
         print(f"async,0,WARN:s0_overhead_{out['overhead']['ratio']:.2f}x_above_1.5x", flush=True)
     return out

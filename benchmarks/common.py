@@ -1,20 +1,33 @@
 """Shared helpers for the benchmark suite.
 
 Every benchmark prints ``name,us_per_call,derived`` CSV rows (harness
-convention) plus richer JSON dropped under ``results/bench/`` as
-``BENCH_<name>.json`` — the glob CI uploads as per-run artifacts so the
-perf trajectory is captured per-PR.
+convention) plus richer JSON dropped under the bench dir (see
+``repro.obs.paths``) as ``BENCH_<name>.json`` — the glob CI uploads as
+per-run artifacts so the perf trajectory is captured per-PR.
+
+Since the metrics spine, emission goes through ``repro.obs.Reporter``:
+``reporter(name)`` returns a Reporter whose ``save`` writes the bench
+JSON (with any attached windowed ``metrics`` streams) AND a paired JSONL
+run log under ``<results>/runlogs/``.  ``emit`` / ``save_json`` keep the
+historical call surface for simple benches.
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 
 import jax
 
-RESULTS = os.environ.get("REPRO_BENCH_OUT", "results/bench")
+from repro.obs import Reporter
+from repro.obs.paths import bench_dir
+
+RESULTS = bench_dir()  # legacy name; prefer repro.obs.paths at call time
 QUICK = os.environ.get("REPRO_BENCH_QUICK", "1") == "1"
+
+
+def reporter(name: str, config=None) -> Reporter:
+    """The unified per-benchmark reporter (bench JSON + JSONL run log)."""
+    return Reporter(name, config=config)
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
@@ -22,14 +35,28 @@ def emit(name: str, us_per_call: float, derived: str = ""):
 
 
 def save_json(name: str, obj):
-    os.makedirs(RESULTS, exist_ok=True)
-    with open(os.path.join(RESULTS, f"BENCH_{name}.json"), "w") as f:
-        json.dump(obj, f, indent=1, default=float)
+    """Write ``BENCH_<name>.json`` through the unified reporter (keeps the
+    one-shot call surface; also emits the paired run log)."""
+    Reporter(name).save(obj)
 
 
-def time_fn(fn, *args, iters: int = 10, warmup: int = 2):
+def time_fn(fn, *args, iters: int = 10, warmup: int = 2, blocking: bool = True):
+    """Mean wall-clock microseconds per call.
+
+    ``blocking=True`` (default) blocks on every call's outputs, so the
+    figure is true per-call latency.  ``blocking=False`` restores the old
+    pipelined-dispatch timing — calls are enqueued back-to-back and only
+    the last result is synced — which measures sustained dispatch
+    throughput but can understate per-call cost for multi-output fns
+    (device work overlaps host dispatch of the next call).
+    """
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
+    if blocking:
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            jax.block_until_ready(fn(*args))
+        return (time.perf_counter() - t0) / iters * 1e6  # us
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)

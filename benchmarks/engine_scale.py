@@ -37,9 +37,9 @@ import jax.numpy as jnp
 import numpy as np
 
 try:
-    from .common import emit, save_json, time_fn
+    from .common import emit, reporter, save_json, time_fn
 except ImportError:  # running as a script: python benchmarks/engine_scale.py
-    from common import emit, save_json, time_fn
+    from common import emit, reporter, save_json, time_fn
 
 from repro.core.selection import prob_alloc, prob_alloc_reference
 from repro.core.sim import selection_sim, selection_sim_loop
@@ -200,14 +200,18 @@ def bench_sharded_mega(D: int, K: int, T: int, block: int, out: dict):
     emit(f"engine/sharded/mega/K={K}", best / T * 1e6, f"D={D};rounds_per_s={rps:.2f}")
 
 
-def bench_sharded_async(D: int, K: int, T: int, S: int, block: int, out: dict):
+def bench_sharded_async(D: int, K: int, T: int, S: int, block: int, out: dict, rep=None):
     """The sharded-async composition: lag-model outcomes, the ``(S, K/D)``-
     sharded staleness ring and the K-sharded allocator/top-k in ONE compiled
-    lean horizon, next to the same-shape sync run for the overhead ratio."""
+    lean horizon, next to the same-shape sync run for the overhead ratio.
+    The async horizon runs with the in-scan taps stage enabled — the timing
+    measures the instrumented engine, and the tap series feed the windowed
+    ``metrics`` stream on the reporter."""
     from repro.configs.base import FLConfig
     from repro.core.volatility import BernoulliVolatility, CompletionLag, paper_success_rates
     from repro.engine.round_program import RoundProgram
     from repro.launch.mesh import make_host_mesh
+    from repro.obs import ROUND_TAPS
 
     k = max(100, K // 1000)
     rho = paper_success_rates(K)
@@ -219,8 +223,16 @@ def bench_sharded_async(D: int, K: int, T: int, S: int, block: int, out: dict):
 
     lag = CompletionLag(base, p_late=0.7, lag_decay=0.5, max_lag=S)
     pa = RoundProgram(fl=fl, vol=lag, rho=rho, staleness=S, alpha=0.5, mesh=mesh, block=block)
-    run_a, st_a = pa.build_runner(outputs="lean")
-    best_a, (state, on_time, stale, _) = _time_sharded_run(run_a, st_a, key, xs)
+    run_a, st_a = pa.build_runner(outputs="lean", taps=True)
+    best_a, (state, on_time, stale, _, taps) = _time_sharded_run(run_a, st_a, key, xs)
+    if rep is not None:
+        rep.metrics_stream(
+            "sharded_async",
+            {n: np.asarray(v) for n, v in taps["series"].items()},
+            window=max(1, T // 10),
+            better=ROUND_TAPS.directions(),
+        )
+        out["tap_counters"] = {n: float(v) for n, v in taps["counters"].items()}
 
     ps = RoundProgram(fl=fl, vol=base, rho=rho, mesh=mesh, block=block)
     run_s, st_s = ps.build_runner(outputs="lean")
@@ -248,11 +260,12 @@ def bench_sharded_async(D: int, K: int, T: int, S: int, block: int, out: dict):
 def run_sharded_async(smoke: bool = False):
     out = {"host_devices": len(jax.devices()), "cpu_count": os.cpu_count()}
     D = min(8, len(jax.devices()))
+    rep = reporter("sharded_async", config={"smoke": smoke, "D": D})
     if smoke:
-        bench_sharded_async(D, 1_000_000, 30, 2, 4, out)
+        bench_sharded_async(D, 1_000_000, 30, 2, 4, out, rep)
     else:
-        bench_sharded_async(D, 1_000_000, 100, 2, 4, out)
-    save_json("sharded_async", out)
+        bench_sharded_async(D, 1_000_000, 100, 2, 4, out, rep)
+    rep.save(out)
     return out
 
 

@@ -25,9 +25,11 @@ import jax.numpy as jnp
 import numpy as np
 
 try:
-    from .common import emit, save_json
+    from .common import emit, reporter
 except ImportError:  # running as a script: python benchmarks/scenarios_bench.py
-    from common import emit, save_json
+    from common import emit, reporter
+
+from repro.obs.paths import artifact_path
 
 from repro.configs.base import FLConfig
 from repro.core.volatility import make_volatility
@@ -99,9 +101,9 @@ def bench_replay(K_list, T: int, out: dict):
     return rows
 
 
-def bench_grid(K: int, T: int, out: dict):
+def bench_grid(K: int, T: int, out: dict, rep=None):
     t0 = time.perf_counter()
-    rows = run_grid(GRID_SELECTORS, GRID_SCENARIOS, K=K, k=max(1, K // 5), T=T, seed=0)
+    rows = run_grid(GRID_SELECTORS, GRID_SCENARIOS, K=K, k=max(1, K // 5), T=T, seed=0, log=rep)
     total_s = time.perf_counter() - t0
     for r in rows:
         emit(
@@ -129,21 +131,23 @@ def bench_multi_job(K: int, T: int, out: dict):
     return rows
 
 
-def run_late_credit(K: int = 100, T: int = 1000, staleness: int = 2, alpha: float = 0.5, out_dir: str = "results"):
+def run_late_credit(K: int = 100, T: int = 1000, staleness: int = 2, alpha: float = 0.5):
     """The late-credit feedback experiment: deadline vs late-credit E3CS
     feedback on the selector x scenario grid (same randomness per cell, so
-    every delta is the policy), written to ``results/late_credit_grid.*``.
+    every delta is the policy), written to ``late_credit_grid.*`` under the
+    results root (``repro.obs.paths`` — ``REPRO_RESULTS`` relocates it).
 
     ``python benchmarks/scenarios_bench.py --late-credit`` regenerates the
     committed artifact.
     """
     import json
-    import os
 
+    config = {"K": K, "T": T, "k": max(1, K // 5), "staleness": staleness, "alpha": alpha, "seed": 0}
+    rep = reporter("late_credit", config=config)
     t0 = time.perf_counter()
     rows = run_grid(
         GRID_SELECTORS, GRID_SCENARIOS, K=K, k=max(1, K // 5), T=T, seed=0,
-        staleness=staleness, alpha=alpha, feedback="late_credit",
+        staleness=staleness, alpha=alpha, feedback="late_credit", log=rep,
     )
     total_s = time.perf_counter() - t0
     table = format_grid(rows)
@@ -155,16 +159,16 @@ def run_late_credit(K: int = 100, T: int = 1000, staleness: int = 2, alpha: floa
                 total_s / len(rows) * 1e6,
                 f"acep={r['async_cep']:.0f};lc_cep={r['lc_cep']:.0f};lc_drift={r['lc_drift']:.2e}",
             )
-    os.makedirs(out_dir, exist_ok=True)
     meta = {
-        "K": K, "T": T, "k": max(1, K // 5), "staleness": staleness, "alpha": alpha,
-        "seed": 0, "feedback": "late_credit vs deadline",
+        **config,
+        "feedback": "late_credit vs deadline",
         "command": "python benchmarks/scenarios_bench.py --late-credit",
         "rows": rows,
     }
-    with open(os.path.join(out_dir, "late_credit_grid.json"), "w") as f:
+    rep.save({"total_s": total_s, **config})
+    with open(artifact_path("late_credit_grid.json"), "w") as f:
         json.dump(meta, f, indent=1, default=float)
-    with open(os.path.join(out_dir, "late_credit_grid.txt"), "w") as f:
+    with open(artifact_path("late_credit_grid.txt"), "w") as f:
         f.write(
             f"# late-credit feedback experiment: K={K} k={max(1, K // 5)} T={T} "
             f"S={staleness} alpha={alpha} seed=0\n"
@@ -180,15 +184,16 @@ def run_late_credit(K: int = 100, T: int = 1000, staleness: int = 2, alpha: floa
 
 def run(smoke: bool = False):
     out = {}
+    rep = reporter("scenarios", config={"smoke": smoke})
     if smoke:
         bench_replay([10_000], T=32, out=out)
-        bench_grid(K=64, T=200, out=out)
+        bench_grid(K=64, T=200, out=out, rep=rep)
         bench_multi_job(K=64, T=60, out=out)
     else:
         bench_replay([100_000, 1_000_000], T=64, out=out)
-        bench_grid(K=100, T=1000, out=out)
+        bench_grid(K=100, T=1000, out=out, rep=rep)
         bench_multi_job(K=100, T=300, out=out)
-    save_json("scenarios", out)
+    rep.save(out)
     rep = out["replay"]
     if any(r["bitident_vs_dense"] is False for r in rep.values()):
         print("scenarios,0,WARN:packed_replay_not_bit_identical", flush=True)

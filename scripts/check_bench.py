@@ -1,17 +1,31 @@
 #!/usr/bin/env python
 """Bench regression gate: compare the smoke ``BENCH_*.json`` results against a
-baseline and fail on throughput regressions.
+baseline and fail on regressions — scalar throughput leaves AND windowed
+metric streams.
 
 Usage:
     python scripts/check_bench.py [--results results/bench]
                                   [--baseline results/bench/baseline]
                                   [--tolerance 0.30] [--soft] [--update]
+                                  [--metrics-only]
 
-For every ``BENCH_<name>.json`` present in both trees, every numeric leaf
-whose key looks like a throughput (``*_per_s``, ``ticks_per_s``, ``speedup*``)
-is compared at its dotted path; the gate fails (exit 1) when
-``new < baseline * (1 - tolerance)`` for any of them.  Latency-like keys are
-deliberately ignored — only "bigger is better" metrics gate.
+Two gate surfaces per ``BENCH_<name>.json`` present in both trees:
+
+* **scalar leaves** — every numeric leaf whose key looks like a throughput
+  (``*_per_s``, ``ticks_per_s``, ``speedup*``) is compared at its dotted
+  path; the gate fails (exit 1) when ``new < baseline * (1 - tolerance)``.
+  Latency-like keys are deliberately ignored — only "bigger is better"
+  metrics gate.  Zero/negative baseline values, non-finite values (json
+  ``NaN``/``Infinity`` or ``null``) and keys present in only one tree are
+  skipped with a note instead of dividing by zero or raising.
+* **windowed metric streams** — the ``"metrics"`` block the unified
+  reporter writes (``repro.obs``): for each stream, each metric's
+  per-window ``p50`` array is compared window by window under the stream's
+  declared gate direction: ``"higher"`` fails when a window drops below
+  ``base * (1 - tol)``, ``"lower"`` when it rises above ``base * (1 +
+  tol)``, ``"equal"`` when it differs at all (beyond 1e-9 relative), and
+  ``"none"`` is reported but never gates.  Window-count mismatches (e.g. a
+  protocol change) are reported and skipped, not failed.
 
 * ``--update`` copies the current results over the baseline (CI does this on
   pushes to main, then saves the baseline to the actions cache; the committed
@@ -19,6 +33,8 @@ deliberately ignored — only "bigger is better" metrics gate.
 * ``--soft`` reports regressions but exits 0 — used when the baseline came
   from a different machine (the committed seed) rather than the CI cache, so
   hardware deltas don't fail PRs.
+* ``--metrics-only`` gates/prints only the windowed metric streams — the PR
+  metrics-diff step uses it for a per-window regression summary.
 * env ``BENCH_GATE_TOL`` overrides the default 30% tolerance.
 
 Files without a baseline counterpart are skipped with a note, so adding a new
@@ -28,6 +44,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import os
 import shutil
 import sys
@@ -37,40 +54,134 @@ THROUGHPUT_KEYS = ("_per_s", "ticks_per_s", "rounds_per_s")
 # reference timings inside the async serve report are a baseline for the
 # compiled path, not a gated product — both flap on shared CI runners
 EXCLUDE_PATH_PARTS = (".host.", "speedup")
+EQUAL_RTOL = 1e-9
 
 
 def is_throughput_key(key: str) -> bool:
     return any(pat in key for pat in THROUGHPUT_KEYS)
 
 
+def _finite_number(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool) and math.isfinite(v)
+
+
 def numeric_leaves(obj, prefix=""):
-    """Yield (dotted_path, value) for numeric leaves under throughput keys."""
+    """Yield (dotted_path, value) for numeric leaves under throughput keys;
+    the reporter's ``metrics`` block is gated separately, not as leaves."""
     if isinstance(obj, dict):
         for k, v in obj.items():
+            if not prefix and k == "metrics":
+                continue
             yield from numeric_leaves(v, f"{prefix}.{k}" if prefix else str(k))
     elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
         if is_throughput_key(prefix.rsplit(".", 1)[-1]) and not any(p in prefix for p in EXCLUDE_PATH_PARTS):
-            yield prefix, float(obj)
+            yield prefix, obj
 
 
-def compare_file(name: str, new_path: str, base_path: str, tol: float):
+def compare_scalars(new: dict, base: dict, tol: float):
+    """Gate throughput leaves; returns (checked, regressions, improvements,
+    notes).  Never divides by a zero baseline, never gates non-finite values,
+    and names one-sided keys instead of silently dropping them."""
+    new_leaves = dict(numeric_leaves(new))
+    base_leaves = dict(numeric_leaves(base))
+    regressions, improvements, notes = [], [], []
+    checked = 0
+    for path in sorted(set(base_leaves) | set(new_leaves)):
+        if path not in new_leaves:
+            notes.append(f"{path}: in baseline only (removed?) — skipped")
+            continue
+        if path not in base_leaves:
+            notes.append(f"{path}: new metric, no baseline — skipped")
+            continue
+        base_v, new_v = base_leaves[path], new_leaves[path]
+        if not _finite_number(base_v) or not _finite_number(new_v):
+            notes.append(f"{path}: non-finite value (base={base_v!r}, new={new_v!r}) — skipped")
+            continue
+        if base_v <= 0:
+            notes.append(f"{path}: baseline {base_v} <= 0, ratio undefined — skipped")
+            continue
+        checked += 1
+        ratio = float(new_v) / float(base_v)
+        if new_v < base_v * (1.0 - tol):
+            regressions.append((path, float(base_v), float(new_v), ratio))
+        elif ratio > 1.0 + tol:
+            improvements.append((path, float(base_v), float(new_v), ratio))
+    return checked, regressions, improvements, notes
+
+
+def _stream_p50s(block: dict):
+    """(metric, direction, p50_list) triples of one reporter metrics block."""
+    better = block.get("better") or {}
+    for metric, aggs in (block.get("aggs") or {}).items():
+        yield metric, better.get(metric, "none"), aggs.get("p50") or []
+
+
+def compare_metrics(new: dict, base: dict, tol: float):
+    """Gate the windowed metric streams; returns (checked, regressions,
+    notes).  ``regressions`` rows are (path, base, new, ratio) keyed
+    ``metrics.<stream>.<metric>.p50[w]``."""
+    new_m = new.get("metrics") or {}
+    base_m = base.get("metrics") or {}
+    regressions, notes = [], []
+    checked = 0
+    for stream in sorted(set(base_m) | set(new_m)):
+        if stream not in new_m:
+            notes.append(f"metrics.{stream}: in baseline only — skipped")
+            continue
+        if stream not in base_m:
+            notes.append(f"metrics.{stream}: new stream, no baseline — skipped")
+            continue
+        nb, bb = new_m[stream], base_m[stream]
+        if nb.get("window") != bb.get("window"):
+            notes.append(
+                f"metrics.{stream}: window {bb.get('window')} -> {nb.get('window')} changed — skipped"
+            )
+            continue
+        new_p50 = {m: (d, p) for m, d, p in _stream_p50s(nb)}
+        for metric, direction, base_p50 in _stream_p50s(bb):
+            path = f"metrics.{stream}.{metric}.p50"
+            if metric not in new_p50:
+                notes.append(f"{path}: in baseline only — skipped")
+                continue
+            _, cur_p50 = new_p50[metric]
+            if direction == "none":
+                continue
+            if len(cur_p50) != len(base_p50):
+                notes.append(f"{path}: {len(base_p50)} -> {len(cur_p50)} windows — skipped")
+                continue
+            for w, (b, n) in enumerate(zip(base_p50, cur_p50)):
+                if not _finite_number(b) or not _finite_number(n):
+                    notes.append(f"{path}[{w}]: non-finite (base={b!r}, new={n!r}) — skipped")
+                    continue
+                checked += 1
+                scale = abs(b) if b != 0 else 1.0
+                ratio = n / b if b != 0 else float("inf") if n else 1.0
+                if direction == "equal":
+                    if abs(n - b) > EQUAL_RTOL * max(scale, 1.0):
+                        regressions.append((f"{path}[{w}]", b, n, ratio))
+                elif direction == "higher":
+                    if b > 0 and n < b * (1.0 - tol):
+                        regressions.append((f"{path}[{w}]", b, n, ratio))
+                elif direction == "lower":
+                    if n > b * (1.0 + tol) + EQUAL_RTOL:
+                        regressions.append((f"{path}[{w}]", b, n, ratio))
+                else:
+                    notes.append(f"{path}: unknown direction {direction!r} — skipped")
+                    break
+    return checked, regressions, notes
+
+
+def compare_file(name: str, new_path: str, base_path: str, tol: float, metrics_only: bool = False):
     with open(new_path) as f:
         new = json.load(f)
     with open(base_path) as f:
         base = json.load(f)
-    new_leaves = dict(numeric_leaves(new))
-    regressions, improvements, checked = [], [], 0
-    for path, base_v in numeric_leaves(base):
-        if path not in new_leaves or base_v <= 0:
-            continue
-        checked += 1
-        new_v = new_leaves[path]
-        ratio = new_v / base_v
-        if new_v < base_v * (1.0 - tol):
-            regressions.append((path, base_v, new_v, ratio))
-        elif ratio > 1.0 + tol:
-            improvements.append((path, base_v, new_v, ratio))
-    return checked, regressions, improvements
+    if metrics_only:
+        checked_s, regs_s, imps, notes_s = 0, [], [], []
+    else:
+        checked_s, regs_s, imps, notes_s = compare_scalars(new, base, tol)
+    checked_m, regs_m, notes_m = compare_metrics(new, base, tol)
+    return checked_s + checked_m, regs_s + regs_m, imps, notes_s + notes_m
 
 
 def main() -> int:
@@ -80,6 +191,8 @@ def main() -> int:
     ap.add_argument("--tolerance", type=float, default=float(os.environ.get("BENCH_GATE_TOL", "0.30")))
     ap.add_argument("--soft", action="store_true", help="report regressions but exit 0")
     ap.add_argument("--update", action="store_true", help="copy current results over the baseline")
+    ap.add_argument("--metrics-only", action="store_true",
+                    help="gate only the windowed metric streams (PR metrics-diff step)")
     args = ap.parse_args()
     baseline = args.baseline or os.path.join(args.results, "baseline")
 
@@ -104,20 +217,24 @@ def main() -> int:
         if not os.path.exists(base_path):
             print(f"check_bench: {f}: no baseline yet, skipping")
             continue
-        checked, regs, imps = compare_file(f, os.path.join(args.results, f), base_path, args.tolerance)
+        checked, regs, imps, notes = compare_file(
+            f, os.path.join(args.results, f), base_path, args.tolerance, args.metrics_only
+        )
         status = "OK" if not regs else "REGRESSION"
         print(f"check_bench: {f}: {checked} metric(s) checked, {status}")
         for path, b, n, r in regs:
             any_regression = True
-            print(f"  REGRESSION {path}: {b:.1f} -> {n:.1f} ({r:.2f}x, tolerance {1 - args.tolerance:.2f}x)")
+            print(f"  REGRESSION {path}: {b:.4g} -> {n:.4g} ({r:.2f}x, tolerance {1 - args.tolerance:.2f}x)")
         for path, b, n, r in imps:
-            print(f"  improved   {path}: {b:.1f} -> {n:.1f} ({r:.2f}x)")
+            print(f"  improved   {path}: {b:.4g} -> {n:.4g} ({r:.2f}x)")
+        for note in notes:
+            print(f"  note       {note}")
 
     if any_regression and args.soft:
         print("check_bench: regressions found, but --soft set (cross-machine baseline) — not failing")
         return 0
     if any_regression:
-        print(f"check_bench: FAILED — throughput regressed by more than {args.tolerance:.0%}")
+        print(f"check_bench: FAILED — gated metrics regressed by more than {args.tolerance:.0%}")
         return 1
     print("check_bench: all gated metrics within tolerance")
     return 0

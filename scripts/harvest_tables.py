@@ -1,14 +1,29 @@
-"""Harvest table_training rows from the bench log into the cached JSON."""
-import json, os, re
+"""Harvest table_training rows from the bench log into the cached JSON.
+
+Reads ``<results>/bench_tables.log`` and writes ``BENCH_table_training.json``
+through the unified reporter (``repro.obs``), so the artifact lands in the
+same layout as every other bench (``REPRO_RESULTS`` / ``REPRO_BENCH_OUT``
+relocate it) and gains a paired JSONL run log.
+"""
+import ast
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.obs import Reporter
+from repro.obs.paths import artifact_path
+
 rows = {}
-for line in open('results/bench_tables.log'):
+for line in open(artifact_path("bench_tables.log")):
     m = re.match(r"table_(\w+)_(\w+)_(\w+)/([\w.\-]+),([\d.]+),final=([\d.]+);cep=(\d+);r2a=(.*)", line.strip())
-    if not m: continue
+    if not m:
+        continue
     task, dist, upd, scheme, us, final, cep, r2a = m.groups()
     rows.setdefault(task, {}).setdefault(f"{dist}_{upd}", {})[scheme] = {
         "final_acc": float(final), "cep": float(cep),
-        "rounds_to": eval(r2a), "wall_s": float(us)*60/1e6, "acc_curve": [],
+        "rounds_to": ast.literal_eval(r2a), "wall_s": float(us) * 60 / 1e6, "acc_curve": [],
     }
-os.makedirs('results/bench', exist_ok=True)
-json.dump(rows, open('results/bench/BENCH_table_training.json','w'), indent=1)
+Reporter("table_training").save(rows)
 print({t: {g: list(v) for g, v in d.items()} for t, d in rows.items()})

@@ -88,6 +88,8 @@ from repro.core.volatility import DEAD_LAG
 from repro.engine.sharded import _axis_size, _pad0, _shard_topk_merge, _shmap, masked_prob_alloc
 from repro.fl.round import ServerState, init_server_state, make_select_fn
 from repro.kernels.unpack_bits import unpack_bits, unpack_crumbs
+from repro.obs.taps import ROUND_TAPS
+from repro.obs.trace import stage
 
 __all__ = [
     "RoundProgram",
@@ -203,10 +205,11 @@ class _ShardCtx:
                     jnp.max(jnp.where(active_loc > 0, logw, -jnp.inf)), axis_name
                 )
                 w = jnp.exp(logw - gmax) * active_loc
-                p, capped = masked_prob_alloc(
-                    w, k, sigma, active=active_loc, n_iters=program.n_iters,
-                    tile=program.tile, axis_name=axis_name, block=program.block,
-                )
+                with stage("round.allocate"):
+                    p, capped = masked_prob_alloc(
+                        w, k, sigma, active=active_loc, n_iters=program.n_iters,
+                        tile=program.tile, axis_name=axis_name, block=program.block,
+                    )
                 k_sel = jax.random.fold_in(k1, d) if D > 1 else k1
                 scores = jnp.where(active_loc > 0, perturbed_scores(k_sel, p), -jnp.inf)
                 idx = _shard_topk_merge(scores, k, axis_name)
@@ -280,14 +283,20 @@ def _make_observe(program: "RoundProgram", K_loc: int, fold, vol=None):
 # ---------------------------------------------------------------------------
 
 
-def _make_step(program: "RoundProgram", ctx, lean: bool):
+def _make_step(program: "RoundProgram", ctx, lean: bool, taps: bool = False):
     """Assemble the scan body from the program's stages and a placement
     context.  This is the single copy of the round pipeline; every engine
     entry point scans (or host-steps) exactly this function.
 
     Sync carry is ``(state, key)``; async carry is ``(state, key, rings)``
     where ``rings`` is ``(credit,)`` or ``(credit, feedback)`` — see
-    ``RoundProgram.init_rings``.
+    ``RoundProgram.init_rings``.  With ``taps=True`` the carry additionally
+    threads the ``ROUND_TAPS`` counter pytree as a trailing element and each
+    round emits its gauge row as a trailing scan output.  Taps observe
+    values the round already computes (psum-reduced under a mesh, so every
+    placement emits the identical replicated scalars) and never touch the
+    PRNG stream or the state math — taps-on runs are bit-identical to the
+    goldens (pinned in ``tests/test_obs.py``).
     """
     fl = program.fl
     k, scheme, eta, K_glob = fl.k, fl.scheme, fl.eta, fl.K
@@ -296,63 +305,81 @@ def _make_step(program: "RoundProgram", ctx, lean: bool):
     alpha = program.alpha
     late_fb = (not sync) and program.feedback == "late_credit" and scheme == "e3cs" and S > 0
 
+    def tap_row(mask, x, sigma, capped, arriving=None):
+        stale = jnp.zeros((), jnp.float32) if arriving is None else ctx.psum(jnp.sum(arriving))
+        return {
+            "selected": ctx.psum(jnp.sum(mask)),
+            "on_time": ctx.psum(jnp.vdot(mask, x)),
+            "stale": stale,
+            "sigma": jnp.asarray(sigma, jnp.float32),
+            "capped_frac": ctx.psum(jnp.sum(capped.astype(jnp.float32))) / K_glob,
+        }
+
     def step(carry, x_over):
+        tapc = None
         if sync:
-            state, key = carry
+            (state, key, tapc) = carry if taps else (*carry, None)
         else:
-            state, key, rings = carry
+            (state, key, rings, tapc) = carry if taps else (*carry, None)
         key, k1, k2 = jax.random.split(key, 3)
         # allocate + select
-        idx, p, capped, sigma, mask = ctx.select(state, k1)
+        with stage("round.select"):
+            idx, p, capped, sigma, mask = ctx.select(state, k1)
         # observe
-        obs, vs = ctx.observe(x_over, k2, state.vol_state)
+        with stage("round.observe"):
+            obs, vs = ctx.observe(x_over, k2, state.vol_state)
         if sync:
             x = obs
         else:
             lag = obs
             x = (lag == 0).astype(jnp.float32)  # deadline-based selector feedback
         # update (selector state; Eq. 16/17 lives in e3cs_update)
-        e3cs = state.e3cs
-        if scheme == "e3cs":
-            e3cs = e3cs_update(state.e3cs, p, capped, mask, x, k, sigma, eta, **ctx.e3cs_kwargs)
-        loss_cache = jnp.where(mask > 0, 1.0 - x, state.loss_cache)  # pow-d loss proxy
-        ucb = state.ucb
-        if scheme == "ucb":
-            ucb = ucb_update(state.ucb, idx, ctx.gather(x))
+        with stage("round.update"):
+            e3cs = state.e3cs
+            if scheme == "e3cs":
+                e3cs = e3cs_update(state.e3cs, p, capped, mask, x, k, sigma, eta, **ctx.e3cs_kwargs)
+            loss_cache = jnp.where(mask > 0, 1.0 - x, state.loss_cache)  # pow-d loss proxy
+            ucb = state.ucb
+            if scheme == "ucb":
+                ucb = ucb_update(state.ucb, idx, ctx.gather(x))
         if sync:
             state = state._replace(
                 e3cs=e3cs, ucb=ucb, vol_state=vs, t=state.t + 1,
                 sel_counts=state.sel_counts + mask, loss_cache=loss_cache,
             )
             out = (ctx.psum(jnp.vdot(mask, x)), sigma) if lean else (mask, x, p, sigma)
+            if taps:
+                row = tap_row(mask, x, sigma, capped)
+                return (state, key, ROUND_TAPS.accumulate(tapc, row)), out + (row,)
             return (state, key), out
         # credit: pop this round's arrivals, push the new late completions
-        if S == 0:
-            arriving, pending = jnp.zeros_like(mask), rings[0]
-        else:
-            sched = lag_credit_schedule(mask, lag, S, alpha)
-            arriving, pending = ring_pop_push(rings[0], sched)
-        new_rings = (pending,)
-        if late_fb:
-            # buffer the selection-round importance weight next to the credit
-            # ring: the arriving slot is a ready-to-apply log-weight step
-            # (same residual/clamp as e3cs_update, decayed reward alpha**lag;
-            # the schedule rows are shared with the credit ring above)
-            xhat_rows = sched / jnp.maximum(p, 1e-12)
-            residual = jnp.asarray(k, p.dtype) - K_glob * sigma
-            rows = jnp.minimum(residual * eta * xhat_rows / K_glob, 1.0)
-            frozen = capped if ctx.active is None else capped | (ctx.active == 0)
-            rows = jnp.where(frozen, 0.0, rows)
-            arriving_fb, fb = ring_pop_push(rings[1], rows)
-            logw = e3cs.logw + arriving_fb
-            m = jnp.max(logw) if ctx.active is None else jnp.max(
-                jnp.where(ctx.active > 0, logw, -jnp.inf)
-            )
-            logw = logw - ctx.pmax(m)
-            if ctx.active is not None:
-                logw = logw * ctx.active
-            e3cs = e3cs._replace(logw=logw)
-            new_rings = (pending, fb)
+        with stage("round.credit"):
+            if S == 0:
+                arriving, pending = jnp.zeros_like(mask), rings[0]
+            else:
+                sched = lag_credit_schedule(mask, lag, S, alpha)
+                arriving, pending = ring_pop_push(rings[0], sched)
+            new_rings = (pending,)
+            if late_fb:
+                # buffer the selection-round importance weight next to the credit
+                # ring: the arriving slot is a ready-to-apply log-weight step
+                # (same residual/clamp as e3cs_update, decayed reward alpha**lag;
+                # the schedule rows are shared with the credit ring above)
+                xhat_rows = sched / jnp.maximum(p, 1e-12)
+                residual = jnp.asarray(k, p.dtype) - K_glob * sigma
+                rows = jnp.minimum(residual * eta * xhat_rows / K_glob, 1.0)
+                frozen = capped if ctx.active is None else capped | (ctx.active == 0)
+                rows = jnp.where(frozen, 0.0, rows)
+                arriving_fb, fb = ring_pop_push(rings[1], rows)
+                logw = e3cs.logw + arriving_fb
+                m = jnp.max(logw) if ctx.active is None else jnp.max(
+                    jnp.where(ctx.active > 0, logw, -jnp.inf)
+                )
+                logw = logw - ctx.pmax(m)
+                if ctx.active is not None:
+                    logw = logw * ctx.active
+                e3cs = e3cs._replace(logw=logw)
+                new_rings = (pending, fb)
         on_time = ctx.psum(jnp.vdot(mask, x))
         stale = ctx.psum(jnp.sum(arriving))
         state = state._replace(
@@ -361,6 +388,9 @@ def _make_step(program: "RoundProgram", ctx, lean: bool):
             cep=state.cep + on_time + stale, succ_hist=state.succ_hist + on_time,
         )
         out = (on_time, stale, sigma) if lean else (mask, lag, p, sigma, arriving)
+        if taps:
+            row = tap_row(mask, x, sigma, capped, arriving)
+            return (state, key, new_rings, ROUND_TAPS.accumulate(tapc, row)), out + (row,)
         return (state, key, new_rings), out
 
     return step
@@ -543,19 +573,28 @@ class RoundProgram:
             rings = rings + (jnp.zeros((S, K), jnp.float32),)
         return rings
 
-    def build_step(self, lean: bool = False):
+    def build_step(self, lean: bool = False, taps: bool = False):
         """The dense scan body ``step(carry, x_over)`` plus its initial
         state — what ``core.sim.selection_sim_loop`` host-steps per round and
-        ``build_runner`` scans over the horizon."""
+        ``build_runner`` scans over the horizon.  With ``taps=True`` the
+        carry gains a trailing ``ROUND_TAPS.init_counters()`` pytree and the
+        per-round output a trailing gauge row (see ``_make_step``); taps off
+        leaves the carry contract exactly as before."""
         if self.mesh is not None:
             raise ValueError("build_step is the dense body; sharded programs compile via build_runner")
-        step = _make_step(self, _LocalCtx(self), lean)
+        step = _make_step(self, _LocalCtx(self), lean, taps)
         state0 = init_server_state({}, self.fl.K, self.vol.init_state())
         return step, state0
 
     # -- compiled whole-horizon runners ----------------------------------
 
-    def build_runner(self, outputs: str = "full", carry_key: bool = False, scan_length: Optional[int] = None):
+    def build_runner(
+        self,
+        outputs: str = "full",
+        carry_key: bool = False,
+        scan_length: Optional[int] = None,
+        taps: bool = False,
+    ):
         """Compile the program over a whole horizon; returns ``(run, state0)``.
 
         Output contracts (the historical ``build_scan_runner`` ones):
@@ -576,20 +615,38 @@ class RoundProgram:
         Under a mesh, per-client state, trace rows and outputs are padded to
         ``K_pad`` (a multiple of D, of 8·D for ``"packed"``, of 4·D for
         ``"packed_lags"``); slice ``[:K]``.
+
+        ``taps=True`` appends one trailing payload to every contract above:
+        ``{"series": {gauge: (T,)}, "counters": {counter: scalar}}`` — the
+        ``ROUND_TAPS`` schema, identical for every placement.  Taps are
+        incompatible with ``carry_key`` (the streamed-carry contract is
+        pinned by external steppers).
         """
         if outputs not in ("full", "lean"):
             raise ValueError(f"unknown outputs mode {outputs!r} (want 'full' or 'lean')")
+        if taps and carry_key:
+            raise ValueError("taps=True extends the scan carry; the carry_key streaming contract forbids it")
         lean = outputs == "lean"
         T = self.fl.rounds if scan_length is None else int(scan_length)
         if self.mesh is None:
-            return self._build_local_runner(lean, carry_key, T)
-        return self._build_sharded_runner(lean, carry_key, T)
+            return self._build_local_runner(lean, carry_key, T, taps)
+        return self._build_sharded_runner(lean, carry_key, T, taps)
 
-    def _build_local_runner(self, lean: bool, carry_key: bool, T: int):
-        step, state0 = self.build_step(lean)
+    def _build_local_runner(self, lean: bool, carry_key: bool, T: int, taps: bool):
+        step, state0 = self.build_step(lean, taps)
         sync = self.staleness is None
+        tap0 = ROUND_TAPS.init_counters() if taps else None
 
         if sync:
+            if taps:
+
+                @jax.jit
+                def run_taps(state, key, xs_in):
+                    (state, key, tapc), out = jax.lax.scan(step, (state, key, tap0), xs_in, length=T)
+                    *outs, row = out
+                    return (state, *outs, {"series": row, "counters": tapc})
+
+                return run_taps, state0
 
             @jax.jit
             def run(state, key, xs_in):
@@ -607,6 +664,16 @@ class RoundProgram:
             def run_async(state, key, rings, xs_in):
                 (state, key, rings), out = jax.lax.scan(step, (state, key, rings), xs_in, length=T)
                 return (state, key, rings, *out)
+
+        elif taps:
+
+            @jax.jit
+            def run_async(state, key, xs_in):
+                (state, key, _, tapc), out = jax.lax.scan(
+                    step, (state, key, init_rings(), tap0), xs_in, length=T
+                )
+                *outs, row = out
+                return (state, *outs, {"series": row, "counters": tapc})
 
         else:
 
@@ -630,7 +697,7 @@ class RoundProgram:
         width = K_pad if self.override == "dense" else D
         return K_pad, K_pad // D, width, D
 
-    def _build_sharded_runner(self, lean: bool, carry_key: bool, T: int):
+    def _build_sharded_runner(self, lean: bool, carry_key: bool, T: int, taps: bool):
         fl, axis_name = self.fl, self.axis_name
         K, k, scheme = fl.K, fl.k, fl.scheme
         sync = self.staleness is None
@@ -679,16 +746,24 @@ class RoundProgram:
         )
         rings0 = self.init_rings() if not sync else ()  # sized (S, K_pad) via the mesh geometry
         rings_spec = tuple(P(None, axis_name) for _ in rings0)
+        # tap rows/counters are psum-reduced inside the body -> replicated P()
+        tap0 = ROUND_TAPS.init_counters() if taps else {}
+        tap_spec = {n: P() for n in tap0}
+        row_spec = {n: P() for n in ROUND_TAPS.gauge_names()}
         program = self
 
-        def horizon(state, key, rings, xs, vol_arr, rho_full, active_loc):
+        def horizon(state, key, rings, tapc, xs, vol_arr, rho_full, active_loc):
             vol_loc = _rebuild_vol(program.vol, vol_arr)
             ctx = _ShardCtx(program, vol_loc, rho_full, active_loc, Ks, D)
-            step = _make_step(program, ctx, lean)
-            carry0 = (state, key) if sync else (state, key, rings)
+            step = _make_step(program, ctx, lean, taps)
+            if sync:
+                carry0 = (state, key, tapc) if taps else (state, key)
+            else:
+                carry0 = (state, key, rings, tapc) if taps else (state, key, rings)
             carry, out = jax.lax.scan(step, carry0, xs, length=T)
             new_rings = () if sync else carry[2]
-            return (carry[0], carry[1], new_rings) + out
+            new_tapc = carry[-1] if taps else {}
+            return (carry[0], carry[1], new_rings, new_tapc) + out
 
         if sync:
             out_specs = (P(), P()) if lean else (P(None, axis_name),) * 3 + (P(),)
@@ -696,14 +771,16 @@ class RoundProgram:
             out_specs = (P(), P(), P()) if lean else (
                 P(None, axis_name), P(None, axis_name), P(None, axis_name), P(), P(None, axis_name)
             )
+        if taps:
+            out_specs = out_specs + (row_spec,)
         shm = _shmap(
             horizon,
             self.mesh,
             in_specs=(
-                state_spec, P(), rings_spec, P(None, axis_name),
+                state_spec, P(), rings_spec, tap_spec, P(None, axis_name),
                 {n: P(axis_name) for n in vol_arrays}, P(), P(axis_name),
             ),
-            out_specs=(state_spec, P(), rings_spec) + out_specs,
+            out_specs=(state_spec, P(), rings_spec, tap_spec) + out_specs,
         )
         pad_dtype = {"dense": jnp.int32 if not sync else jnp.float32}.get(self.override, jnp.uint8)
 
@@ -713,32 +790,40 @@ class RoundProgram:
             xs = jnp.asarray(xs_in, pad_dtype)
             return jnp.pad(xs, ((0, 0), (0, width - xs.shape[1])))
 
+        def _finish(state, tapc, out):
+            if not taps:
+                return (state, *out)
+            *outs, row = out
+            return (state, *outs, {"series": row, "counters": tapc})
+
         if carry_key and sync:
 
             @jax.jit
             def run(state, key, xs_in):
-                state, key, _, *out = shm(state, key, (), _pad_xs(xs_in), vol_arrays, rho_rep, active)
+                state, key, _, _, *out = shm(state, key, (), tap0, _pad_xs(xs_in), vol_arrays, rho_rep, active)
                 return (state, key, *out)
 
         elif carry_key:
 
             @jax.jit
             def run(state, key, rings, xs_in):
-                state, key, rings, *out = shm(state, key, rings, _pad_xs(xs_in), vol_arrays, rho_rep, active)
+                state, key, rings, _, *out = shm(
+                    state, key, rings, tap0, _pad_xs(xs_in), vol_arrays, rho_rep, active
+                )
                 return (state, key, rings, *out)
 
         elif sync:
 
             @jax.jit
             def run(state, key, xs_in):
-                state, _, _, *out = shm(state, key, (), _pad_xs(xs_in), vol_arrays, rho_rep, active)
-                return (state, *out)
+                state, _, _, tapc, *out = shm(state, key, (), tap0, _pad_xs(xs_in), vol_arrays, rho_rep, active)
+                return _finish(state, tapc, out)
 
         else:
 
             @jax.jit
             def run(state, key, xs_in):
-                state, _, _, *out = shm(state, key, rings0, _pad_xs(xs_in), vol_arrays, rho_rep, active)
-                return (state, *out)
+                state, _, _, tapc, *out = shm(state, key, rings0, tap0, _pad_xs(xs_in), vol_arrays, rho_rep, active)
+                return _finish(state, tapc, out)
 
         return run, state0

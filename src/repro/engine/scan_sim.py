@@ -109,6 +109,7 @@ def build_scan_runner(
     scan_length: Optional[int] = None,
     feedback: str = "deadline",
     block: int = 1,
+    taps: bool = False,
 ):
     """Compile a whole-horizon runner for an arbitrary volatility model.
 
@@ -133,6 +134,11 @@ def build_scan_runner(
     replay (``repro.scenarios.replay``) can resume the next chunk
     bit-identically — in every placement.
 
+    ``taps=True`` enables the in-scan telemetry stage: the runner's output
+    tuple gains one trailing ``{"series": {gauge: (T,)}, "counters":
+    {counter: scalar}}`` payload in the ``repro.obs.ROUND_TAPS`` schema —
+    identical across placements, bit-identical outputs otherwise.
+
     Unlike ``scan_selection_sim`` this builder is not memoised: hold on to
     the returned ``run`` to amortise compilation across repeat calls (the
     scenario harness and benchmarks do).
@@ -141,11 +147,12 @@ def build_scan_runner(
         fl=fl, vol=vol, rho=rho, override=override, staleness=staleness, alpha=alpha,
         feedback=feedback, mesh=mesh, block=block,
     )
-    return program.build_runner(outputs=outputs, carry_key=carry_key, scan_length=scan_length)
+    return program.build_runner(outputs=outputs, carry_key=carry_key, scan_length=scan_length, taps=taps)
 
 
 @functools.lru_cache(maxsize=64)
-def _compiled_runner(scheme, K, k, T, quota, frac, eta, sampler, volatility, stickiness, seed, override, allocator):
+def _compiled_runner(scheme, K, k, T, quota, frac, eta, sampler, volatility, stickiness, seed, override, allocator,
+                     taps=False):
     """Cache the jitted whole-horizon runner per static configuration, so
     repeat calls (sweeps, benchmarks) pay compilation once."""
     fl = FLConfig(
@@ -154,7 +161,7 @@ def _compiled_runner(scheme, K, k, T, quota, frac, eta, sampler, volatility, sti
     )
     rho = jnp.asarray(paper_success_rates(K))
     vol = make_volatility(volatility, rho, stickiness=stickiness, seed=seed)
-    return build_scan_runner(fl, vol, rho, override=override)
+    return build_scan_runner(fl, vol, rho, override=override, taps=taps)
 
 
 def scan_selection_sim(
@@ -174,6 +181,7 @@ def scan_selection_sim(
     vol=None,
     rho=None,
     allocator: str = "sort",
+    taps: bool = False,
 ) -> Dict[str, np.ndarray]:
     """Drop-in replacement for the legacy ``selection_sim`` loop.
 
@@ -182,6 +190,8 @@ def scan_selection_sim(
     uint8 bit-packed trace through the scan, unpacked on the fly.
     ``allocator="bisect"`` swaps E3CS's sorted ProbAlloc for the sort-free
     bisection (identical to ~1e-6 in p; the sharded engine's reference).
+    ``taps=True`` adds a ``"taps"`` entry — per-round ``ROUND_TAPS`` gauge
+    series plus final counters — without perturbing any other output.
     """
     if xs_override is not None and packed_override is not None:
         raise ValueError("pass at most one of xs_override / packed_override")
@@ -197,10 +207,10 @@ def scan_selection_sim(
             rho = paper_success_rates(K)
         if vol is None:
             vol = make_volatility(volatility, rho, stickiness=stickiness, seed=seed)
-        run, state = build_scan_runner(fl, vol, rho, override=override)
+        run, state = build_scan_runner(fl, vol, rho, override=override, taps=taps)
     else:
         run, state = _compiled_runner(
-            scheme, K, k, T, quota, frac, eta, sampler, volatility, stickiness, seed, override, allocator
+            scheme, K, k, T, quota, frac, eta, sampler, volatility, stickiness, seed, override, allocator, taps
         )
     key = jax.random.PRNGKey(seed)
     if override == "dense":
@@ -209,14 +219,25 @@ def scan_selection_sim(
         xs_in = jnp.asarray(packed_override, jnp.uint8)
     else:
         xs_in = jnp.zeros((T, 0), jnp.float32)
-    _, masks, xs, ps, sigmas = run(state, key, xs_in)
+    _, masks, xs, ps, sigmas, *rest = run(state, key, xs_in)
     masks = np.asarray(masks)
-    return {
+    out = {
         "masks": masks,
         "xs": np.asarray(xs),
         "ps": np.asarray(ps),
         "sigmas": np.asarray(sigmas),
         "counts": masks.sum(0),
+    }
+    if taps:
+        out["taps"] = _taps_to_numpy(rest[-1])
+    return out
+
+
+def _taps_to_numpy(payload) -> dict:
+    """Host-side view of a runner's trailing taps payload."""
+    return {
+        "series": {n: np.asarray(v) for n, v in payload["series"].items()},
+        "counters": {n: float(v) for n, v in payload["counters"].items()},
     }
 
 
@@ -241,6 +262,7 @@ def async_selection_sim(
     outputs: str = "full",
     feedback: str = "deadline",
     packed_lag_override: Optional[np.ndarray] = None,
+    taps: bool = False,
 ) -> Dict[str, np.ndarray]:
     """Whole-horizon *async* numerical experiment: completion-lag outcomes,
     bounded staleness buffer of ``staleness`` rounds, late credit
@@ -273,24 +295,27 @@ def async_selection_sim(
         rho = paper_success_rates(K)
     run, state = build_scan_runner(
         fl, lag_model, rho, override=override, outputs=outputs, staleness=int(staleness), alpha=alpha,
-        feedback=feedback,
+        feedback=feedback, taps=taps,
     )
     key = jax.random.PRNGKey(seed)
     if override == "packed_lags":
         xs_in = jnp.asarray(packed_lag_override, jnp.uint8)
     else:
         xs_in = jnp.zeros((T, 0), jnp.float32)
+    tap_payload = None
     if outputs == "lean":
-        state, on_time, stale, sigmas = run(state, key, xs_in)
+        state, on_time, stale, sigmas, *rest = run(state, key, xs_in)
         out = {}
     else:
-        state, masks, lags, ps, sigmas, arrived = run(state, key, xs_in)
+        state, masks, lags, ps, sigmas, arrived, *rest = run(state, key, xs_in)
         masks = np.asarray(masks)
         arrived = np.asarray(arrived)
         on_time = (masks * (np.asarray(lags) == 0)).sum(1)
         stale = arrived.sum(1)
         out = {"masks": masks, "lags": np.asarray(lags), "ps": np.asarray(ps), "arrived": arrived,
                "counts": masks.sum(0)}
+    if taps:
+        tap_payload = _taps_to_numpy(rest[-1])
     out.update({
         "on_time": np.asarray(on_time),
         "stale": np.asarray(stale),
@@ -300,4 +325,6 @@ def async_selection_sim(
         "sel_counts": np.asarray(state.sel_counts),
         "final_logw": np.asarray(state.e3cs.logw),
     })
+    if tap_payload is not None:
+        out["taps"] = tap_payload
     return out

@@ -355,6 +355,7 @@ def build_sharded_scan_runner(
     feedback: str = "deadline",
     carry_key: bool = False,
     scan_length: Optional[int] = None,
+    taps: bool = False,
 ):
     """Compile the whole T-round horizon with the K axis sharded over a mesh.
 
@@ -399,6 +400,10 @@ def build_sharded_scan_runner(
     ``(run, state0)`` with the ``build_scan_runner`` signatures; K-arrays in
     ``state0`` and the outputs are padded to ``K_pad`` (a multiple of D·8
     for packed, D·4 for packed_lags); slice ``[:K]``.
+
+    ``taps=True`` appends the ``repro.obs.ROUND_TAPS`` telemetry payload
+    (``{"series", "counters"}``, psum-reduced so replicated across shards)
+    as the runner's trailing output — same schema as the dense engine.
     """
     from repro.engine.round_program import RoundProgram  # deferred: round_program imports this module
 
@@ -407,7 +412,7 @@ def build_sharded_scan_runner(
         feedback=feedback, mesh=mesh, axis_name=axis_name, n_iters=n_iters, tile=tile,
         block=block,
     )
-    return program.build_runner(outputs=outputs, carry_key=carry_key, scan_length=scan_length)
+    return program.build_runner(outputs=outputs, carry_key=carry_key, scan_length=scan_length, taps=taps)
 
 
 def sharded_selection_sim(
@@ -428,10 +433,11 @@ def sharded_selection_sim(
     block: int = 1,
     vol=None,
     rho=None,
+    taps: bool = False,
 ):
     """Sharded counterpart of ``engine.scan_sim.scan_selection_sim``: same
     keyword surface plus a ``mesh``, same output dict (K-wide arrays sliced
-    back to the true population)."""
+    back to the true population; ``taps=True`` adds the ``"taps"`` entry)."""
     from repro.configs.base import FLConfig
     from repro.core.volatility import make_volatility, paper_success_rates
 
@@ -445,7 +451,9 @@ def sharded_selection_sim(
         rho = paper_success_rates(K)
     if vol is None:
         vol = make_volatility(volatility, jnp.asarray(rho), stickiness=stickiness, seed=seed)
-    run, state = build_sharded_scan_runner(fl, vol, rho, mesh, override=override, outputs=outputs, block=block)
+    run, state = build_sharded_scan_runner(
+        fl, vol, rho, mesh, override=override, outputs=outputs, block=block, taps=taps
+    )
     key = jax.random.PRNGKey(seed)
     if override == "dense":
         xs_in = jnp.asarray(xs_override, jnp.float32)
@@ -453,19 +461,33 @@ def sharded_selection_sim(
         xs_in = jnp.asarray(packed_override, jnp.uint8)
     else:
         xs_in = jnp.zeros((T, 0), jnp.float32)
-    if outputs == "lean":
-        state, successes, sigmas = run(state, key, xs_in)
+
+    def _taps_out(rest):
+        payload = rest[-1]
         return {
+            "series": {n: np.asarray(v) for n, v in payload["series"].items()},
+            "counters": {n: float(v) for n, v in payload["counters"].items()},
+        }
+
+    if outputs == "lean":
+        state, successes, sigmas, *rest = run(state, key, xs_in)
+        out = {
             "successes": np.asarray(successes),
             "sigmas": np.asarray(sigmas),
             "counts": np.asarray(state.sel_counts)[:K],
         }
-    state, masks, xs, ps, sigmas = run(state, key, xs_in)
+        if taps:
+            out["taps"] = _taps_out(rest)
+        return out
+    state, masks, xs, ps, sigmas, *rest = run(state, key, xs_in)
     masks = np.asarray(masks)[:, :K]
-    return {
+    out = {
         "masks": masks,
         "xs": np.asarray(xs)[:, :K],
         "ps": np.asarray(ps)[:, :K],
         "sigmas": np.asarray(sigmas),
         "counts": masks.sum(0),
     }
+    if taps:
+        out["taps"] = _taps_out(rest)
+    return out

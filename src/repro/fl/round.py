@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.selection import E3CSState, e3cs_init, e3cs_probs, e3cs_update, fedcs_select, random_select, sample_selection, selection_mask, ucb_init, ucb_select, ucb_update
+from repro.obs.trace import stage
 from repro.optim import sgd
 
 from .aggregation import aggregate, aggregate_async
@@ -73,16 +74,18 @@ def make_select_fn(fl_cfg, quota_fn, rho=None):
     def select(state: ServerState, rng: jax.Array):
         sigma = quota_fn(state.t)
         if fl_cfg.scheme == "e3cs":
-            if allocator == "bisect":
-                # sort-free fixed point (the shardable engine allocator);
-                # lazy import — repro.engine depends on this module
-                from repro.engine.sharded import masked_prob_alloc
+            with stage("round.allocate"):
+                if allocator == "bisect":
+                    # sort-free fixed point (the shardable engine allocator);
+                    # lazy import — repro.engine depends on this module
+                    from repro.engine.sharded import masked_prob_alloc
 
-                w = jnp.exp(state.e3cs.logw - jnp.max(state.e3cs.logw))
-                p, capped = masked_prob_alloc(w, k, sigma)
-            else:
-                p, capped = e3cs_probs(state.e3cs, k, sigma)
-            idx = sample_selection(rng, p, k, fl_cfg.sampler)
+                    w = jnp.exp(state.e3cs.logw - jnp.max(state.e3cs.logw))
+                    p, capped = masked_prob_alloc(w, k, sigma)
+                else:
+                    p, capped = e3cs_probs(state.e3cs, k, sigma)
+            with stage("round.sample"):
+                idx = sample_selection(rng, p, k, fl_cfg.sampler)
         elif fl_cfg.scheme == "random":
             idx = random_select(rng, K, k)
             p = jnp.full((K,), k / K)

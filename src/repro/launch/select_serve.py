@@ -39,8 +39,6 @@ from __future__ import annotations
 
 import argparse
 import collections
-import json
-import os
 import time
 
 import jax
@@ -50,6 +48,7 @@ import numpy as np
 from repro.core.volatility import BernoulliVolatility, BinaryLag, CompletionLag, paper_success_rates
 from repro.engine.multi_job import make_multi_job, multi_job_init, pack_jobs
 from repro.engine.round_program import staleness_ring_step
+from repro.obs import ROUND_TAPS, Reporter, SpanTimer
 
 __all__ = ["run_service", "run_service_compiled", "run_service_sharded", "main"]
 
@@ -62,8 +61,15 @@ def run_service(
     n_iters: int = 48,
     tile: int = 8192,
     scenario: str | None = None,
+    reporter: Reporter | None = None,
 ):
-    """Simulate the service loop; returns the throughput/latency report."""
+    """Simulate the service loop; returns the throughput/latency report.
+
+    Request latency is accumulated in a bucketed ``LatencyHistogram`` via a
+    ``SpanTimer`` (O(n_buckets) memory — nothing is stored per request); the
+    report's p50/p95/p99 come from the histogram, and with a ``reporter``
+    the full bucket counts land in the JSONL run log too.
+    """
     rng = np.random.default_rng(seed)
     # heterogeneous fleet: population, cohort, fairness and learning rate vary
     Ks, ks, fracs, etas = _heterogeneous_fleet(J, K_max, rng)
@@ -76,7 +82,9 @@ def run_service(
 
     # request queue: (enqueue_time, job_id, feedback bits)
     queue: collections.deque = collections.deque()
-    latencies, n_ticks = [], 0
+    spans = SpanTimer(lo=1e-6, hi=60.0)
+    request_hist = spans.get("request")
+    n_ticks = 0
     if scenario is None:
         xs_host = (rng.random((rounds, J, K_max)) < rhos[None]).astype(np.float32)
 
@@ -111,18 +119,18 @@ def run_service(
         batch = [queue.popleft() for _ in range(min(J, len(queue)))]
         keys = jax.vmap(lambda kk: jax.random.fold_in(kk, t))(base_keys)
         xs = jnp.asarray(np.stack([b[2] for b in batch]))
-        state, out = batched_step(cfg, state, keys, xs)
-        jax.block_until_ready(out["idx"])
+        with spans.span("dispatch", annotate=True):
+            state, out = batched_step(cfg, state, keys, xs)
+            jax.block_until_ready(out["idx"])
         t_done = time.perf_counter()
         cohorts = np.asarray(out["idx"])  # (J, k_max), -1 padded
         for (t_enq, j, _), cohort in zip(batch, cohorts):
-            latencies.append(t_done - t_enq)
+            request_hist.observe(t_done - t_enq)
             n_ticks += 1
             n_decisions += Ks[j]  # one accept/reject decision per live client
             assert (cohort >= 0).sum() == ks[j], (j, cohort)
     elapsed = time.perf_counter() - t_start
 
-    lat = np.asarray(latencies) * 1e3
     report = {
         "jobs": J,
         "K_max": K_max,
@@ -132,13 +140,17 @@ def run_service(
         "ticks_per_s": round(n_ticks / elapsed, 1),
         "client_decisions_per_s": round(n_decisions / elapsed, 1),
         "latency_ms": {
-            "p50": round(float(np.percentile(lat, 50)), 3),
-            "p95": round(float(np.percentile(lat, 95)), 3),
-            "max": round(float(lat.max()), 3),
+            "p50": round(request_hist.quantile(0.50) * 1e3, 3),
+            "p95": round(request_hist.quantile(0.95) * 1e3, 3),
+            "p99": round(request_hist.quantile(0.99) * 1e3, 3),
+            "max": round(request_hist.max * 1e3, 3),
         },
         "cohort_sizes": ks,
         "populations": Ks,
     }
+    if reporter is not None:
+        reporter.histogram("request_latency", request_hist)
+        reporter.histogram("dispatch_latency", spans.get("dispatch"))
     return report
 
 
@@ -163,6 +175,7 @@ def run_service_compiled(
     n_iters: int = 48,
     tile: int = 8192,
     reps: int = 3,
+    reporter: Reporter | None = None,
 ):
     """Compiled steady-state serving: the whole horizon in ONE ``lax.scan``.
 
@@ -234,6 +247,15 @@ def run_service_compiled(
         elapsed.append(time.perf_counter() - t0)
     best = min(elapsed)
     n_decisions = rounds * sum(Ks)
+    if reporter is not None:
+        # per-tick fleet-wide credit series (summed over the J jobs) ->
+        # the windowed stream CI diffs per PR
+        reporter.metrics_stream(
+            "serve_async",
+            {"on_time": np.asarray(on_time).sum(1), "stale": np.asarray(stale).sum(1)},
+            window=max(1, rounds // 10),
+            better={"on_time": "higher", "stale": "none"},
+        )
     return {
         "mode": "compiled_async" if S else "compiled_sync",
         "jobs": J,
@@ -263,6 +285,7 @@ def run_service_sharded(
     reps: int = 3,
     staleness: int = 0,
     alpha: float = 0.5,
+    reporter: Reporter | None = None,
 ):
     """Compiled steady-state serving of ONE fleet-scale job with the K axis
     sharded over a device mesh (``--mesh D``).
@@ -295,7 +318,9 @@ def run_service_sharded(
         volatility="bernoulli", staleness_rounds=S, staleness_alpha=alpha,
     )
     program = RoundProgram.from_config(fl, mesh=mesh, block=block)
-    run, state0 = program.build_runner(outputs="lean")
+    # serve with the in-scan taps stage on: the same compiled horizon that
+    # answers requests emits the ROUND_TAPS telemetry stream
+    run, state0 = program.build_runner(outputs="lean", taps=True)
     key = jax.random.PRNGKey(seed)
     xs = jnp.zeros((rounds, 0), jnp.float32)
     jax.block_until_ready(run(state0, key, xs)[0].sel_counts)  # compile off the clock
@@ -306,6 +331,7 @@ def run_service_sharded(
         jax.block_until_ready(out[0].sel_counts)
         elapsed.append(time.perf_counter() - t0)
     best = min(elapsed)
+    taps = out[-1]
     report = {
         "mode": "compiled_sharded_async" if S else "compiled_sharded",
         "mesh_devices": int(D),
@@ -317,9 +343,10 @@ def run_service_sharded(
         "client_decisions_per_s": round(rounds * K / best, 1),
         "round_us": round(best / rounds * 1e6, 1),
         "per_device_state_mb": round(4.0 * K / D / 1e6, 2),  # one (K/D,) float32 vector
+        "tap_counters": {n: float(v) for n, v in taps["counters"].items()},
     }
     if S:
-        state, on_time, stale, _ = out
+        state, on_time, stale, _, _ = out
         report.update({
             "staleness": S,
             "alpha": alpha,
@@ -328,14 +355,14 @@ def run_service_sharded(
         })
     else:
         report["successes_total"] = float(np.asarray(out[1]).sum())
+    if reporter is not None:
+        reporter.metrics_stream(
+            "serve_sharded",
+            {n: np.asarray(v) for n, v in taps["series"].items()},
+            window=max(1, rounds // 10),
+            better=ROUND_TAPS.directions(),
+        )
     return report
-
-
-def _save_report(report, name: str):
-    out_dir = os.environ.get("REPRO_BENCH_OUT", "results/bench")
-    os.makedirs(out_dir, exist_ok=True)
-    with open(os.path.join(out_dir, f"BENCH_{name}.json"), "w") as f:
-        json.dump(report, f, indent=1, default=float)
 
 
 def main():
@@ -363,20 +390,26 @@ def main():
     if args.mesh is not None:
         K = args.clients or (65_536 if args.smoke else 1_000_000)
         S = args.staleness if args.async_mode else 0
+        rep = Reporter("select_serve_sharded_async" if S else "select_serve_sharded", config=vars(args))
         report = run_service_sharded(
-            K=K, rounds=args.rounds, D=args.mesh, seed=args.seed, staleness=S, alpha=args.alpha
+            K=K, rounds=args.rounds, D=args.mesh, seed=args.seed, staleness=S, alpha=args.alpha,
+            reporter=rep,
         )
-        _save_report(report, "select_serve_sharded_async" if S else "select_serve_sharded")
     elif args.async_mode:
+        rep = Reporter("select_serve_async", config=vars(args))
         report = run_service_compiled(
             J=args.jobs, K_max=K_max, rounds=args.rounds, seed=args.seed,
-            staleness=args.staleness, alpha=args.alpha,
+            staleness=args.staleness, alpha=args.alpha, reporter=rep,
         )
-        _save_report(report, "select_serve_async")
     else:
-        report = run_service(J=args.jobs, K_max=K_max, rounds=args.rounds, seed=args.seed, scenario=args.scenario)
-        _save_report(report, "select_serve")
-    print(json.dumps(report, indent=1))
+        rep = Reporter("select_serve", config=vars(args))
+        report = run_service(
+            J=args.jobs, K_max=K_max, rounds=args.rounds, seed=args.seed, scenario=args.scenario,
+            reporter=rep,
+        )
+    path = rep.save(report)
+    with open(path) as f:
+        print(f.read())  # the saved artifact IS the CLI output — one emission path
 
 
 if __name__ == "__main__":

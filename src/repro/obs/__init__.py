@@ -1,0 +1,31 @@
+"""repro.obs — the metrics spine.
+
+Three layers, one schema:
+
+* :mod:`repro.obs.taps` — in-scan metric taps (typed counter/gauge
+  registry, windowed aggregates) the ``RoundProgram`` taps stage emits.
+* :mod:`repro.obs.runlog` — schema-versioned JSONL run logs every runner,
+  grid and serving loop writes through.
+* :mod:`repro.obs.trace` — stage-level trace annotations for device code
+  and bucketed host-side latency histograms.
+
+plus :mod:`repro.obs.paths` (one results layout) and
+:mod:`repro.obs.report` (the unified Reporter benchmarks emit through).
+
+This package must stay importable without the engine: it imports only
+numpy / stdlib at module scope (jax lazily), so ``repro.engine`` can
+depend on it without cycles.
+"""
+from .paths import artifact_path, bench_dir, bench_path, results_root, runlog_dir, runlog_path
+from .report import Reporter
+from .runlog import SCHEMA_VERSION, RunLog, read_runlog, validate_records
+from .taps import ROUND_TAPS, TapRegistry, TapSpec, window_reduce
+from .trace import LatencyHistogram, SpanTimer, stage
+
+__all__ = [
+    "artifact_path", "bench_dir", "bench_path", "results_root", "runlog_dir", "runlog_path",
+    "Reporter",
+    "SCHEMA_VERSION", "RunLog", "read_runlog", "validate_records",
+    "ROUND_TAPS", "TapRegistry", "TapSpec", "window_reduce",
+    "LatencyHistogram", "SpanTimer", "stage",
+]

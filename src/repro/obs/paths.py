@@ -1,0 +1,70 @@
+"""One results layout for every artifact the repo writes.
+
+Before the metrics spine, artifact paths were decided ad hoc per writer:
+bench JSON landed under ``$REPRO_BENCH_OUT`` (default ``results/bench``)
+but the late-credit grid was hardwired to ``results/`` — so redirecting a
+run's output moved *some* of its artifacts.  This module is the single
+resolution point:
+
+    <root>/                      results_root()
+      bench/                     bench_dir()      -- BENCH_<name>.json (+ baseline/)
+      runlogs/                   runlog_dir()     -- <run>.jsonl event streams
+      <name>.json|.txt           artifact_path()  -- grid tables & other run products
+
+``REPRO_RESULTS`` overrides the root directly.  For backwards
+compatibility ``REPRO_BENCH_OUT`` still overrides the bench dir; when it
+is the only override, the root is its parent (so ``REPRO_BENCH_OUT=/tmp/x/bench``
+routes runlogs to ``/tmp/x/runlogs`` and grid artifacts to ``/tmp/x/``).
+Env vars are read at call time, never cached, so tests and harness code
+can redirect a single run.
+"""
+from __future__ import annotations
+
+import os
+
+__all__ = ["results_root", "bench_dir", "runlog_dir", "artifact_path", "bench_path", "runlog_path"]
+
+
+def results_root() -> str:
+    """The root of the results tree (no directory is created)."""
+    root = os.environ.get("REPRO_RESULTS")
+    if root:
+        return root
+    bench = os.environ.get("REPRO_BENCH_OUT")
+    if bench:
+        parent = os.path.dirname(os.path.normpath(bench))
+        return parent or "."
+    return "results"
+
+
+def bench_dir() -> str:
+    """Where ``BENCH_<name>.json`` files (and ``baseline/``) live."""
+    return os.environ.get("REPRO_BENCH_OUT") or os.path.join(results_root(), "bench")
+
+
+def runlog_dir() -> str:
+    """Where JSONL run logs live."""
+    return os.path.join(results_root(), "runlogs")
+
+
+def _ensure(path: str) -> str:
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    return path
+
+
+def artifact_path(filename: str) -> str:
+    """A non-bench run artifact (grid tables, figures) under the root;
+    creates the directory."""
+    return _ensure(os.path.join(results_root(), filename))
+
+
+def bench_path(name: str) -> str:
+    """``BENCH_<name>.json`` under the bench dir; creates the directory."""
+    return _ensure(os.path.join(bench_dir(), f"BENCH_{name}.json"))
+
+
+def runlog_path(run: str) -> str:
+    """``<run>.jsonl`` under the runlog dir; creates the directory."""
+    return _ensure(os.path.join(runlog_dir(), f"{run}.jsonl"))

@@ -1,0 +1,126 @@
+"""The unified reporter: one emission path for every benchmark and runner.
+
+A ``Reporter`` owns a run's outward-facing artifacts:
+
+* the ``name,us_per_call,derived`` CSV rows the harness scrapes from
+  stdout (unchanged convention),
+* ``BENCH_<name>.json`` under the bench dir — now with an optional
+  ``"metrics"`` block of windowed streams ``check_bench`` can diff,
+* a paired JSONL run log (``runlog.RunLog``) carrying the same streams
+  as structured events.
+
+Benchmarks attach windowed metric streams with ``metrics_stream`` (handing
+it the per-round series from a taps-enabled run); serving loops attach
+latency histograms with ``histogram``.  ``save`` writes the bench JSON with
+everything accumulated so far; the run log is written incrementally.
+
+The ``"metrics"`` block in bench JSON looks like::
+
+    "metrics": {
+      "<stream>": {
+        "window": W, "n_windows": n, "dropped": d,
+        "better": {"on_time": "higher", ...},
+        "aggs": {"on_time": {"p50": [...], "p99": [...], ...}, ...}
+      }
+    }
+
+which is exactly what ``scripts/check_bench.py --metrics`` gates per
+window.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+from .paths import bench_path
+from .runlog import RunLog, _jsonable
+from .taps import window_reduce
+
+__all__ = ["Reporter"]
+
+
+class Reporter:
+    """One run's emission surface: CSV rows + bench JSON + JSONL run log.
+
+    ``Reporter("async_scan", config={...})`` opens the paired run log
+    eagerly; pass ``runlog=False`` for pure-JSON writers (e.g. table
+    harvesters) that should not produce an event stream.
+    """
+
+    def __init__(self, name: str, config: Optional[dict] = None, runlog: bool = True):
+        self.name = name
+        self.data: dict = {}
+        self.metrics: Dict[str, dict] = {}
+        self.log: Optional[RunLog] = RunLog(name, config=config) if runlog else None
+
+    # -- stdout CSV (harness convention, unchanged) -----------------------
+    def emit(self, name: str, us_per_call: float, derived: str = ""):
+        print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+    # -- structured streams ----------------------------------------------
+    def update(self, **data) -> "Reporter":
+        """Merge scalar results into the bench JSON payload."""
+        self.data.update(data)
+        return self
+
+    def metrics_stream(
+        self,
+        stream: str,
+        series: Dict[str, np.ndarray],
+        window: int,
+        better: Optional[Dict[str, str]] = None,
+    ) -> dict:
+        """Window-reduce per-round series and attach them as a named stream
+        (bench JSON ``metrics`` block + a ``metrics`` run-log event)."""
+        windows = window_reduce(series, window)
+        block = dict(windows)
+        block["better"] = dict(better or {})
+        self.metrics[stream] = block
+        if self.log is not None:
+            self.log.metrics(stream, windows, better=better)
+        return block
+
+    def histogram(self, name: str, hist) -> dict:
+        """Attach a latency histogram: summary into bench JSON under
+        ``hists.<name>``, full buckets into the run log."""
+        summary = hist.summary() if hasattr(hist, "summary") else dict(hist)
+        self.data.setdefault("hists", {})[name] = summary
+        if self.log is not None:
+            self.log.histogram(name, hist)
+        return summary
+
+    def grid_row(self, row: dict) -> dict:
+        if self.log is not None:
+            self.log.grid_row(row)
+        return row
+
+    # -- persistence -------------------------------------------------------
+    def save(self, obj: Optional[dict] = None, summary: bool = True) -> str:
+        """Write ``BENCH_<name>.json`` (merging ``obj`` if given) and close
+        the run log with a summary event."""
+        import json
+
+        if obj:
+            self.data.update(obj)
+        payload = dict(_jsonable(self.data))
+        if self.metrics:
+            payload["metrics"] = _jsonable(self.metrics)
+        path = bench_path(self.name)
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1, default=float)
+        if self.log is not None:
+            if summary:
+                self.log.summary(**{k: v for k, v in payload.items() if not isinstance(v, (dict, list))})
+            self.log.close()
+        return path
+
+    def close(self) -> None:
+        if self.log is not None:
+            self.log.close()
+
+    def __enter__(self) -> "Reporter":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

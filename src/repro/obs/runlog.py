@@ -1,0 +1,155 @@
+"""Schema-versioned JSONL run logs — the one event stream every runner,
+benchmark, grid and serving loop writes through.
+
+A run log is a sequence of JSON objects, one per line.  Every record
+carries ``{"schema": SCHEMA_VERSION, "event": <type>, "run": <run id>}``
+plus the event payload.  Event types:
+
+``header``     run identity: name, config dict, emitted first.
+``metrics``    one windowed metric stream (``taps.window_reduce`` output
+               plus the gate-direction map) under a stream name.
+``grid_row``   one (selector, scenario) row of a scenario-harness grid.
+``histogram``  a bucketed latency histogram (``trace.LatencyHistogram``).
+``summary``    final scalars (counters, throughput); emitted last.
+
+``RunLog`` is the writer; ``read_runlog`` / ``validate_records`` the
+reader side, used by the round-trip tests and by ``check_bench`` when
+diffing run logs.  Writers tolerate a missing filesystem target only by
+failing loudly — telemetry silently dropped is worse than a crash.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Iterator, List, Optional
+
+from .paths import runlog_path
+
+__all__ = ["SCHEMA_VERSION", "RunLog", "read_runlog", "validate_records", "EVENT_TYPES"]
+
+SCHEMA_VERSION = 1
+EVENT_TYPES = ("header", "metrics", "grid_row", "histogram", "summary")
+# payload keys required per event type (beyond the envelope)
+_REQUIRED: Dict[str, tuple] = {
+    "header": ("name", "config"),
+    "metrics": ("stream", "windows"),
+    "grid_row": ("row",),
+    "histogram": ("name", "hist"),
+    "summary": ("data",),
+}
+
+
+def _jsonable(obj: Any) -> Any:
+    """Coerce numpy / jax scalars and arrays into plain JSON types."""
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if hasattr(obj, "item") and getattr(obj, "ndim", None) == 0:
+        return obj.item()
+    if hasattr(obj, "tolist"):
+        return obj.tolist()
+    if isinstance(obj, float) and obj != obj:  # NaN → null, valid JSON
+        return None
+    return obj
+
+
+class RunLog:
+    """Append-only JSONL writer for one run.
+
+    ``RunLog("my_run", config={...})`` opens ``<results>/runlogs/my_run.jsonl``
+    (via ``paths.runlog_path``) and writes the header; pass ``path=`` to
+    override the location entirely.  Use as a context manager or call
+    ``close``; ``summary`` is normally the last record you emit.
+    """
+
+    def __init__(self, run: str, config: Optional[dict] = None, path: Optional[str] = None):
+        self.run = run
+        self.path = path if path is not None else runlog_path(run)
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        self._fh = open(self.path, "w")
+        self.event("header", name=run, config=_jsonable(config or {}))
+
+    # -- record emission -------------------------------------------------
+    def event(self, event: str, **payload) -> dict:
+        if event not in EVENT_TYPES:
+            raise ValueError(f"unknown event type {event!r} (want one of {EVENT_TYPES})")
+        missing = [k for k in _REQUIRED[event] if k not in payload]
+        if missing:
+            raise ValueError(f"event {event!r} missing required keys {missing}")
+        rec = {"schema": SCHEMA_VERSION, "event": event, "run": self.run, **_jsonable(payload)}
+        self._fh.write(json.dumps(rec) + "\n")
+        self._fh.flush()
+        return rec
+
+    def metrics(self, stream: str, windows: dict, better: Optional[Dict[str, str]] = None) -> dict:
+        """One windowed metric stream (the ``taps.window_reduce`` shape)."""
+        return self.event("metrics", stream=stream, windows=windows, better=better or {})
+
+    def grid_row(self, row: dict) -> dict:
+        return self.event("grid_row", row=row)
+
+    def histogram(self, name: str, hist) -> dict:
+        """A ``trace.LatencyHistogram`` (or its ``to_record()`` dict)."""
+        rec = hist.to_record() if hasattr(hist, "to_record") else dict(hist)
+        return self.event("histogram", name=name, hist=rec)
+
+    def summary(self, **data) -> dict:
+        return self.event("summary", data=data)
+
+    # -- lifecycle --------------------------------------------------------
+    def close(self) -> str:
+        if not self._fh.closed:
+            self._fh.close()
+        return self.path
+
+    def __enter__(self) -> "RunLog":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def read_runlog(path: str) -> List[dict]:
+    """Parse a JSONL run log into its records (empty lines skipped)."""
+    records = []
+    with open(path) as fh:
+        for i, line in enumerate(fh):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                records.append(json.loads(line))
+            except json.JSONDecodeError as e:
+                raise ValueError(f"{path}:{i + 1}: invalid JSON ({e})") from e
+    return records
+
+
+def iter_metrics(records: List[dict]) -> Iterator[dict]:
+    """The metric-stream records of a parsed run log."""
+    return (r for r in records if r.get("event") == "metrics")
+
+
+def validate_records(records: List[dict]) -> None:
+    """Schema check for a parsed run log; raises ValueError on violation.
+
+    Enforces: every record carries the envelope at a known schema version;
+    the first record is the header; required payload keys per event type.
+    """
+    if not records:
+        raise ValueError("empty run log")
+    for i, rec in enumerate(records):
+        if rec.get("schema") != SCHEMA_VERSION:
+            raise ValueError(f"record {i}: schema {rec.get('schema')!r} != {SCHEMA_VERSION}")
+        ev = rec.get("event")
+        if ev not in EVENT_TYPES:
+            raise ValueError(f"record {i}: unknown event {ev!r}")
+        if "run" not in rec:
+            raise ValueError(f"record {i}: missing run id")
+        missing = [k for k in _REQUIRED[ev] if k not in rec]
+        if missing:
+            raise ValueError(f"record {i} ({ev}): missing keys {missing}")
+    if records[0]["event"] != "header":
+        raise ValueError("first record must be the header")

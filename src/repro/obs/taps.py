@@ -1,0 +1,176 @@
+"""In-scan metric taps: a typed registry of counters and gauges carried as a
+pytree inside the ``lax.scan`` carry.
+
+A *tap* observes values the round body already computes (cohort mask,
+credited successes, quota floor) and turns them into a uniform telemetry
+schema without host callbacks and without touching the round's math or PRNG
+stream — taps-on runs are bit-identical to taps-off runs (pinned against the
+``tests/golden`` matrix in ``tests/test_obs.py``).
+
+Three kinds:
+
+* **gauge** — a per-round scalar, emitted as a scan output row.  Under a
+  mesh each gauge is reduced across shards (``psum``) inside the scan body,
+  so every placement emits the identical replicated value.
+* **counter** — a running sum riding in the scan carry (the pytree the
+  registry's ``init_counters`` builds); lands once in the run summary.
+* **hist** — a bucketed host-side histogram (``repro.obs.trace``): latency
+  quantiles for serving loops, where per-request storage is not an option.
+  Hist taps never enter the scan.
+
+Per-round gauge series are reduced into **step-windowed aggregates**
+(``window_reduce``: p50 / p99 / mean / sum per window of W rounds) — the
+shape the JSONL run logs and ``BENCH_*.json`` ``metrics`` streams carry, and
+what ``scripts/check_bench.py`` diffs per window across PRs.
+
+``ROUND_TAPS`` is the registry the ``RoundProgram`` taps stage emits; every
+engine placement (local, ``mesh=D``, async ``S>0``) produces the same
+schema.  To add a metric: add a ``TapSpec`` here, produce the gauge in
+``round_program._make_step``'s tap block, and it flows through windows,
+run logs, bench JSON and the CI gate with no further wiring.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["TapSpec", "TapRegistry", "ROUND_TAPS", "window_reduce", "WINDOW_AGGS"]
+
+KINDS = ("counter", "gauge", "hist")
+# gate directions check_bench understands; "none" = report, never gate
+DIRECTIONS = ("higher", "lower", "equal", "none")
+WINDOW_AGGS = ("p50", "p99", "mean", "sum")
+
+
+@dataclasses.dataclass(frozen=True)
+class TapSpec:
+    """One typed metric: its name, kind, gate direction and provenance."""
+
+    name: str
+    kind: str
+    doc: str = ""
+    better: str = "none"  # how check_bench should gate the windowed p50
+    source: Tuple[str, ...] = ()  # counters: gauge row keys summed per round ((), = +1/round)
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown tap kind {self.kind!r} (want one of {KINDS})")
+        if self.better not in DIRECTIONS:
+            raise ValueError(f"unknown gate direction {self.better!r} (want one of {DIRECTIONS})")
+        if self.source and self.kind != "counter":
+            raise ValueError(f"tap {self.name!r}: only counters accumulate a source")
+
+
+class TapRegistry:
+    """An ordered, name-unique set of ``TapSpec`` — the schema one taps
+    stage emits."""
+
+    def __init__(self, *specs: TapSpec):
+        self.specs: Dict[str, TapSpec] = {}
+        for s in specs:
+            if s.name in self.specs:
+                raise ValueError(f"duplicate tap {s.name!r}")
+            self.specs[s.name] = s
+        for s in self.counters():
+            for src in s.source:
+                if src not in self.specs or self.specs[src].kind != "gauge":
+                    raise ValueError(f"counter {s.name!r} accumulates unknown gauge {src!r}")
+
+    def __iter__(self):
+        return iter(self.specs.values())
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.specs
+
+    def gauges(self) -> Sequence[TapSpec]:
+        return [s for s in self.specs.values() if s.kind == "gauge"]
+
+    def counters(self) -> Sequence[TapSpec]:
+        return [s for s in self.specs.values() if s.kind == "counter"]
+
+    def gauge_names(self) -> Tuple[str, ...]:
+        return tuple(s.name for s in self.gauges())
+
+    def directions(self) -> Dict[str, str]:
+        """Gate-direction map for the windowed gauge streams."""
+        return {s.name: s.better for s in self.gauges()}
+
+    def init_counters(self):
+        """Zeroed counter pytree for the scan carry (jnp scalars)."""
+        import jax.numpy as jnp
+
+        return {s.name: jnp.zeros((), jnp.float32) for s in self.counters()}
+
+    def accumulate(self, counters, row):
+        """One scan-carry counter update from this round's gauge row."""
+        out = {}
+        for s in self.counters():
+            inc = sum((row[f] for f in s.source), 0.0) if s.source else 1.0
+            out[s.name] = counters[s.name] + inc
+        return out
+
+    def validate_row(self, row: dict):
+        """The schema contract: a tap row is exactly the gauge set."""
+        want = set(self.gauge_names())
+        got = set(row)
+        if want != got:
+            raise ValueError(f"tap row schema mismatch: missing {sorted(want - got)}, extra {sorted(got - want)}")
+
+
+ROUND_TAPS = TapRegistry(
+    TapSpec("selected", "gauge", "clients in this round's cohort", better="equal"),
+    TapSpec("on_time", "gauge", "successes credited at the deadline (Eq. 8 numerator)", better="higher"),
+    TapSpec("stale", "gauge", "decayed alpha**lag late credit arriving this round"),
+    TapSpec("sigma", "gauge", "fairness quota floor in force this round"),
+    TapSpec("capped_frac", "gauge", "fraction of the population at the ProbAlloc p<=1 cap"),
+    TapSpec("rounds", "counter", "rounds executed"),
+    TapSpec("cum_selected", "counter", "cumulative cohort slots issued", source=("selected",)),
+    TapSpec("cum_credit", "counter", "running staleness-aware CEP", source=("on_time", "stale")),
+)
+
+
+def window_reduce(series: Dict[str, np.ndarray], window: int, aggs: Sequence[str] = WINDOW_AGGS) -> dict:
+    """Reduce per-round series into step-windowed aggregates.
+
+    ``series`` maps metric name -> (T,) array; rounds are grouped into
+    ``T // window`` full windows of ``window`` rounds (a trailing partial
+    window is dropped and reported as ``dropped`` — windows stay comparable
+    across runs).  Returns::
+
+        {"window": W, "n_windows": n, "dropped": d,
+         "aggs": {name: {"p50": [...], "p99": [...], "mean": [...], "sum": [...]}}}
+
+    Percentiles use numpy's default linear interpolation, so values are
+    hand-checkable (``tests/test_obs.py`` pins a 2-window example exactly).
+    """
+    if window < 1:
+        raise ValueError(f"window must be >= 1, got {window}")
+    out: dict = {"window": int(window), "aggs": {}}
+    n_windows: Optional[int] = None
+    for name, s in series.items():
+        s = np.asarray(s, np.float64).reshape(-1)
+        n = s.shape[0] // window
+        if n_windows is None:
+            n_windows, dropped = n, s.shape[0] - n * window
+            out["n_windows"], out["dropped"] = int(n_windows), int(dropped)
+        elif n != n_windows:
+            raise ValueError(f"series {name!r} has {n} windows, expected {n_windows}")
+        w = s[: n * window].reshape(n, window)
+        cell = {}
+        for agg in aggs:
+            if agg == "p50":
+                cell[agg] = np.percentile(w, 50, axis=1).tolist() if n else []
+            elif agg == "p99":
+                cell[agg] = np.percentile(w, 99, axis=1).tolist() if n else []
+            elif agg == "mean":
+                cell[agg] = w.mean(axis=1).tolist() if n else []
+            elif agg == "sum":
+                cell[agg] = w.sum(axis=1).tolist() if n else []
+            else:
+                raise ValueError(f"unknown aggregate {agg!r} (want a subset of {WINDOW_AGGS})")
+        out["aggs"][name] = cell
+    if n_windows is None:
+        out["n_windows"], out["dropped"] = 0, 0
+    return out

@@ -116,18 +116,27 @@ def run_grid(
     K: int = 100, k: int = 20, T: int = 500, seed: int = 0, frac: float = 0.5,
     staleness: Optional[int] = 2, alpha: float = 0.5,
     feedback: Optional[str] = None,
+    log=None,
 ) -> List[Dict[str, float]]:
     """The full grid, one compiled run per cell (two with ``staleness``: the
     sync drop semantics and the async staleness-buffer semantics; three with
-    ``feedback="late_credit"``, adding the late-credit feedback policy)."""
-    return [
-        evaluate_cell(
-            sel, sc, K=K, k=k, T=T, seed=seed, frac=frac, staleness=staleness, alpha=alpha,
-            feedback=feedback,
-        )
-        for sc in scenarios
-        for sel in selectors
-    ]
+    ``feedback="late_credit"``, adding the late-credit feedback policy).
+
+    ``log`` is any sink with a ``grid_row(row)`` method — ``repro.obs``'s
+    ``Reporter`` or ``RunLog`` — each cell is streamed to it as it finishes,
+    so a killed sweep still leaves the completed rows in the JSONL run log.
+    """
+    rows = []
+    for sc in scenarios:
+        for sel in selectors:
+            row = evaluate_cell(
+                sel, sc, K=K, k=k, T=T, seed=seed, frac=frac, staleness=staleness, alpha=alpha,
+                feedback=feedback,
+            )
+            if log is not None:
+                log.grid_row(row)
+            rows.append(row)
+    return rows
 
 
 def run_grid_multi_job(

@@ -1,0 +1,443 @@
+"""Metrics-spine tests: in-scan taps bit-identity against the committed
+goldens, windowed aggregates hand-checked, JSONL run-log round-trip, the
+latency histogram, the results layout, and the check_bench gate edges.
+
+The taps contract under test: ``taps=True`` adds one trailing
+``{"series", "counters"}`` payload to every runner's outputs and changes
+NOTHING else — the masks/lags/state streams must still equal
+``tests/golden/round_program_goldens.npz`` bit-for-bit, in every placement.
+"""
+import importlib.util
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import FLConfig
+from repro.core.volatility import CompletionLag, make_volatility, paper_success_rates
+from repro.engine.round_program import RoundProgram
+from repro.engine.scan_sim import async_selection_sim, scan_selection_sim
+from repro.engine.sharded import sharded_selection_sim
+from repro.obs import (
+    ROUND_TAPS,
+    LatencyHistogram,
+    Reporter,
+    RunLog,
+    SpanTimer,
+    TapRegistry,
+    TapSpec,
+    read_runlog,
+    stage,
+    validate_records,
+    window_reduce,
+)
+from repro.obs import paths as obs_paths
+from repro.obs.runlog import SCHEMA_VERSION, iter_metrics
+from repro.scenarios.replay import pack_trace
+
+K, k, T, SEED, FRAC = 128, 16, 50, 3, 0.5
+GOLD = np.load(os.path.join(os.path.dirname(__file__), "golden", "round_program_goldens.npz"))
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _load_module(relpath, name):
+    spec = importlib.util.spec_from_file_location(name, os.path.join(REPO, relpath))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture(scope="module")
+def check_bench():
+    return _load_module("scripts/check_bench.py", "check_bench")
+
+
+@pytest.fixture(scope="module")
+def mesh8():
+    from repro.launch.mesh import make_host_mesh
+
+    if len(jax.devices()) < 8:
+        pytest.skip("needs XLA_FLAGS=--xla_force_host_platform_device_count=8 (set in conftest)")
+    return make_host_mesh(8)
+
+
+def _rho():
+    return paper_success_rates(K)
+
+
+def _lag_model():
+    return CompletionLag(make_volatility("bernoulli", _rho()), p_late=0.7, lag_decay=0.5, max_lag=2)
+
+
+class TestTapsBitIdentity:
+    """taps=True reproduces the pre-taps goldens bit-for-bit — the telemetry
+    stage must not touch the PRNG stream or the round math."""
+
+    def test_sync_d1_golden(self):
+        out = scan_selection_sim("e3cs", K=K, k=k, T=T, frac=FRAC, seed=SEED, taps=True)
+        assert np.array_equal(pack_trace(out["masks"]), GOLD["sync_d1_e3cs_masks"])
+        assert np.array_equal(out["counts"], GOLD["sync_d1_e3cs_counts"])
+        taps = out["taps"]
+        assert set(taps["series"]) == set(ROUND_TAPS.gauge_names())
+        assert all(v.shape == (T,) for v in taps["series"].values())
+        np.testing.assert_array_equal(taps["series"]["selected"], out["masks"].sum(1))
+        assert taps["counters"]["rounds"] == float(T)
+        assert taps["counters"]["cum_selected"] == float(out["masks"].sum())
+        # sync rounds have no staleness buffer: the stale gauge is flat zero
+        np.testing.assert_array_equal(taps["series"]["stale"], np.zeros(T))
+
+    def test_sync_d8_golden(self, mesh8):
+        out = sharded_selection_sim("e3cs", mesh8, K=K, k=k, T=T, frac=FRAC, seed=SEED, taps=True)
+        assert np.array_equal(pack_trace(out["masks"]), GOLD["sync_d8_e3cs_masks"])
+        assert np.array_equal(out["counts"], GOLD["sync_d8_e3cs_counts"])
+        np.testing.assert_array_equal(out["taps"]["series"]["selected"], np.full(T, float(k)))
+
+    def test_async_d1_golden(self):
+        out = async_selection_sim(
+            "e3cs", K=K, k=k, T=T, frac=FRAC, seed=SEED, staleness=2, alpha=0.5,
+            lag_model=_lag_model(), rho=_rho(), taps=True,
+        )
+        assert np.array_equal(pack_trace(out["masks"]), GOLD["async_d1_e3cs_masks"])
+        assert np.array_equal(out["lags"].astype(np.int8), GOLD["async_d1_e3cs_lags"])
+        assert np.float32(out["cep"]) == GOLD["async_d1_e3cs_cep"]
+        taps = out["taps"]
+        np.testing.assert_allclose(taps["series"]["on_time"], out["on_time"], atol=1e-4)
+        np.testing.assert_allclose(taps["series"]["stale"], out["stale"], atol=1e-4)
+        assert taps["counters"]["cum_credit"] == pytest.approx(float(out["cep"]), rel=1e-5)
+
+    def test_async_same_stream_every_placement(self, mesh8):
+        """The schema contract: the D=8 sharded-async tap stream equals the
+        D=1 stream (psum-reduced gauges are placement-invariant).  Uses the
+        packed-lag replay + `random` selector composition, where D=8 is
+        bit-identical to D=1 (generated e3cs runs draw shard-local
+        randomness, so only mesh=1 matches those — covered below)."""
+        lp = GOLD["lag_trace_packed"]
+        fl = FLConfig(K=K, k=k, rounds=T, scheme="random", quota_frac=FRAC)
+
+        def go(mesh):
+            pm = RoundProgram(fl=fl, vol=_lag_model(), rho=_rho(), override="packed_lags",
+                              staleness=2, alpha=0.5, mesh=mesh)
+            run, s0 = pm.build_runner(outputs="lean", taps=True)
+            st, on_time, stale, _, payload = run(s0, jax.random.PRNGKey(SEED), jnp.asarray(lp))
+            return st, np.asarray(on_time), np.asarray(stale), payload
+
+        st1, on1, stale1, tap1 = go(None)
+        st8, on8, stale8, tap8 = go(mesh8)
+        np.testing.assert_array_equal(on1, on8)
+        np.testing.assert_array_equal(stale1, stale8)
+        assert float(st1.cep) == float(st8.cep)
+        for name in ROUND_TAPS.gauge_names():
+            np.testing.assert_allclose(
+                np.asarray(tap1["series"][name]), np.asarray(tap8["series"][name]), atol=1e-4, err_msg=name
+            )
+        for name, v in tap1["counters"].items():
+            assert float(v) == pytest.approx(float(tap8["counters"][name]), rel=1e-5), name
+
+    def test_async_mesh1_stream_matches_dense_e3cs(self):
+        """Generated e3cs async: a 1-device mesh is bit-identical to the
+        dense engine — taps included."""
+        from repro.launch.mesh import make_host_mesh
+
+        fl = FLConfig(K=K, k=k, rounds=T, scheme="e3cs", quota_frac=FRAC, allocator="bisect")
+
+        def go(mesh):
+            pm = RoundProgram(fl=fl, vol=_lag_model(), rho=_rho(), staleness=2, alpha=0.5, mesh=mesh)
+            run, s0 = pm.build_runner(outputs="lean", taps=True)
+            st, on_time, stale, _, payload = run(s0, jax.random.PRNGKey(SEED), jnp.zeros((T, 0), jnp.float32))
+            return st, np.asarray(on_time), np.asarray(stale), payload
+
+        st1, on1, stale1, tap1 = go(None)
+        stm, onm, stalem, tapm = go(make_host_mesh(1))
+        np.testing.assert_array_equal(on1, onm)
+        np.testing.assert_array_equal(stale1, stalem)
+        for name in ROUND_TAPS.gauge_names():
+            np.testing.assert_array_equal(
+                np.asarray(tap1["series"][name]), np.asarray(tapm["series"][name]), err_msg=name
+            )
+
+    def test_async_d8_taps_off_unchanged(self, mesh8):
+        fl = FLConfig(K=K, k=k, rounds=T, scheme="e3cs", quota_frac=FRAC, allocator="bisect")
+
+        def go(taps):
+            pm = RoundProgram(fl=fl, vol=_lag_model(), rho=_rho(), staleness=2, alpha=0.5, mesh=mesh8)
+            run, s0 = pm.build_runner(outputs="lean", taps=taps)
+            return run(s0, jax.random.PRNGKey(SEED), jnp.zeros((T, 0), jnp.float32))
+
+        st_off, on_off, stale_off, _ = go(False)
+        st_on, on_on, stale_on, _, _ = go(True)
+        np.testing.assert_array_equal(np.asarray(on_off), np.asarray(on_on))
+        np.testing.assert_array_equal(np.asarray(stale_off), np.asarray(stale_on))
+        np.testing.assert_array_equal(np.asarray(st_off.sel_counts), np.asarray(st_on.sel_counts))
+
+    def test_taps_with_carry_key_raises(self):
+        fl = FLConfig(K=32, k=4, rounds=8, scheme="e3cs", quota_frac=FRAC)
+        pm = RoundProgram(fl=fl, vol=make_volatility("bernoulli", paper_success_rates(32)),
+                          rho=paper_success_rates(32))
+        with pytest.raises(ValueError, match="carry_key"):
+            pm.build_runner(taps=True, carry_key=True)
+
+
+class TestTapRegistry:
+    def test_round_taps_schema(self):
+        assert set(ROUND_TAPS.gauge_names()) == {"selected", "on_time", "stale", "sigma", "capped_frac"}
+        assert ROUND_TAPS.directions()["selected"] == "equal"
+        assert ROUND_TAPS.directions()["on_time"] == "higher"
+
+    def test_spec_validation(self):
+        with pytest.raises(ValueError):
+            TapSpec("x", "nope")
+        with pytest.raises(ValueError):
+            TapSpec("x", "gauge", better="sideways")
+
+    def test_accumulate_sources(self):
+        reg = TapRegistry(
+            TapSpec("a", "gauge"),
+            TapSpec("b", "gauge"),
+            TapSpec("ticks", "counter"),
+            TapSpec("total", "counter", source=("a", "b")),
+        )
+        c = reg.init_counters()
+        row = {"a": jnp.float32(2.0), "b": jnp.float32(3.0)}
+        c = reg.accumulate(c, row)
+        c = reg.accumulate(c, row)
+        assert float(c["ticks"]) == 2.0
+        assert float(c["total"]) == 10.0
+
+
+class TestWindowReduce:
+    def test_hand_checked(self):
+        # [1..7] window 3: two full windows, one element dropped;
+        # p99 interpolates linearly inside each 3-sample window
+        out = window_reduce({"v": np.arange(1.0, 8.0)}, window=3)
+        assert out["n_windows"] == 2 and out["dropped"] == 1
+        aggs = out["aggs"]["v"]
+        np.testing.assert_allclose(aggs["sum"], [6.0, 15.0])
+        np.testing.assert_allclose(aggs["mean"], [2.0, 5.0])
+        np.testing.assert_allclose(aggs["p50"], [2.0, 5.0])
+        np.testing.assert_allclose(aggs["p99"], [2.98, 5.98])
+
+    def test_tiny_three_client_horizon(self):
+        # a K=3, k=1 horizon: the selected gauge is exactly 1 every round,
+        # so every windowed aggregate of it is hand-computable
+        out = scan_selection_sim("random", K=3, k=1, T=8, frac=0.0, seed=0, taps=True)
+        red = window_reduce(out["taps"]["series"], window=4)
+        assert red["n_windows"] == 2 and red["dropped"] == 0
+        np.testing.assert_allclose(red["aggs"]["selected"]["sum"], [4.0, 4.0])
+        np.testing.assert_allclose(red["aggs"]["selected"]["p50"], [1.0, 1.0])
+        np.testing.assert_allclose(red["aggs"]["selected"]["mean"], [1.0, 1.0])
+        assert out["taps"]["counters"]["cum_selected"] == 8.0
+
+    def test_mismatched_lengths_raise(self):
+        with pytest.raises(ValueError):
+            window_reduce({"a": np.arange(6.0), "b": np.arange(5.0)}, window=3)
+
+
+class TestRunLogRoundTrip:
+    def test_full_round_trip(self, tmp_path):
+        path = str(tmp_path / "run.jsonl")
+        hist = LatencyHistogram()
+        hist.observe(0.002)
+        with RunLog("unit", config={"K": 4}, path=path) as log:
+            log.metrics("s1", window_reduce({"v": np.arange(8.0)}, window=4), better={"v": "higher"})
+            log.grid_row({"selector": "e3cs", "cep": 1.0})
+            log.histogram("lat", hist.to_record())
+            log.summary(done=True)
+        records = read_runlog(path)
+        validate_records(records)
+        assert records[0]["event"] == "header"
+        assert records[0]["schema"] == SCHEMA_VERSION
+        assert records[0]["config"] == {"K": 4}
+        events = [r["event"] for r in records]
+        assert events == ["header", "metrics", "grid_row", "histogram", "summary"]
+        streams = {r["stream"]: r for r in iter_metrics(records)}
+        assert "s1" in streams and streams["s1"]["windows"]["n_windows"] == 2
+        assert streams["s1"]["better"] == {"v": "higher"}
+
+    def test_jsonable_coercion(self, tmp_path):
+        path = str(tmp_path / "np.jsonl")
+        with RunLog("unit", path=path) as log:
+            log.summary(a=np.float32(1.5), b=jnp.int32(2), c=float("nan"), d=np.arange(3))
+        rec = read_runlog(path)[-1]["data"]
+        assert rec["a"] == 1.5 and rec["b"] == 2 and rec["c"] is None and rec["d"] == [0, 1, 2]
+
+    def test_validate_rejects_bad(self):
+        with pytest.raises(ValueError):
+            validate_records([])
+        with pytest.raises(ValueError):  # missing required payload key
+            validate_records([{"schema": SCHEMA_VERSION, "event": "metrics", "run": "x"}])
+        with pytest.raises(ValueError):  # wrong schema version
+            validate_records([{"schema": 99, "event": "header", "run": "x", "name": "x", "config": {}}])
+        with pytest.raises(ValueError):  # first record must be the header
+            validate_records([
+                {"schema": SCHEMA_VERSION, "event": "summary", "run": "x", "data": {}},
+            ])
+
+
+class TestReporter:
+    def test_bench_json_with_metrics_block(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_RESULTS", str(tmp_path))
+        rep = Reporter("unit", config={"smoke": True})
+        rep.metrics_stream("s", {"v": np.arange(10.0)}, window=5, better={"v": "higher"})
+        path = rep.save({"rounds_per_s": 42.0})
+        assert path == str(tmp_path / "bench" / "BENCH_unit.json")
+        blob = json.load(open(path))
+        assert blob["rounds_per_s"] == 42.0
+        assert blob["metrics"]["s"]["n_windows"] == 2
+        assert blob["metrics"]["s"]["better"] == {"v": "higher"}
+        records = read_runlog(str(tmp_path / "runlogs" / "unit.jsonl"))
+        validate_records(records)
+        assert records[-1]["event"] == "summary"
+
+
+class TestPaths:
+    def test_env_layout(self, monkeypatch, tmp_path):
+        monkeypatch.delenv("REPRO_RESULTS", raising=False)
+        monkeypatch.delenv("REPRO_BENCH_OUT", raising=False)
+        assert obs_paths.results_root() == "results"
+        monkeypatch.setenv("REPRO_BENCH_OUT", str(tmp_path / "r" / "bench"))
+        assert obs_paths.results_root() == str(tmp_path / "r")
+        assert obs_paths.bench_dir() == str(tmp_path / "r" / "bench")
+        monkeypatch.setenv("REPRO_RESULTS", str(tmp_path / "override"))
+        assert obs_paths.results_root() == str(tmp_path / "override")
+        assert obs_paths.artifact_path("x.json") == str(tmp_path / "override" / "x.json")
+        assert obs_paths.bench_path("n").endswith(os.path.join("bench", "BENCH_n.json"))
+        assert obs_paths.runlog_path("n").endswith(os.path.join("runlogs", "n.jsonl"))
+
+
+class TestLatencyHistogram:
+    def test_quantiles_bracket_samples(self):
+        h = LatencyHistogram(lo=1e-4, hi=1.0, n_buckets=32)
+        samples = [0.001, 0.002, 0.004, 0.008, 0.016]
+        for s in samples:
+            h.observe(s)
+        s = h.summary()
+        assert s["count"] == 5
+        assert s["min_s"] == 0.001 and s["max_s"] == 0.016
+        assert s["min_s"] <= s["p50_s"] <= s["max_s"]
+        assert s["p50_s"] <= s["p99_s"] <= s["max_s"]
+        assert s["mean_s"] == pytest.approx(np.mean(samples), rel=1e-6)
+        rec = h.to_record()
+        assert len(rec["counts"]) == 32 and sum(rec["counts"]) == 5
+
+    def test_out_of_range_clamped(self):
+        h = LatencyHistogram(lo=1e-3, hi=1e-2, n_buckets=8)
+        h.observe(1e-6)
+        h.observe(5.0)
+        assert h.quantile(0.0) >= 1e-6
+        assert math.isfinite(h.quantile(0.99))
+
+    def test_span_timer(self):
+        t = SpanTimer()
+        with t.span("work"):
+            pass
+        with t.span("work", annotate=True):
+            pass
+        assert t.get("work").summary()["count"] == 2
+        assert "work" in t.summary()
+
+
+class TestStage:
+    def test_host_and_traced(self):
+        with stage("unit.host"):
+            x = jnp.ones(4)
+
+        @jax.jit
+        def f(v):
+            with stage("unit.traced"):
+                return v * 2
+
+        np.testing.assert_array_equal(np.asarray(f(x)), np.full(4, 2.0))
+
+
+class TestCheckBench:
+    def _compare(self, cb, new, base, tol=0.3, metrics_only=False):
+        if metrics_only:
+            checked_m, regs_m, notes_m = cb.compare_metrics(new, base, tol)
+            return checked_m, regs_m, [], notes_m
+        cs, rs, imps, ns = cb.compare_scalars(new, base, tol)
+        cm, rm, nm = cb.compare_metrics(new, base, tol)
+        return cs + cm, rs + rm, imps, ns + nm
+
+    def test_scalar_regression_and_improvement(self, check_bench):
+        checked, regs, imps, notes = self._compare(
+            check_bench,
+            {"a": {"rounds_per_s": 5.0}, "b": {"ticks_per_s": 20.0}},
+            {"a": {"rounds_per_s": 10.0}, "b": {"ticks_per_s": 10.0}},
+        )
+        assert checked == 2
+        assert [r[0] for r in regs] == ["a.rounds_per_s"]
+        assert [i[0] for i in imps] == ["b.ticks_per_s"]
+
+    def test_zero_and_nonfinite_baselines_noted(self, check_bench):
+        checked, regs, imps, notes = self._compare(
+            check_bench,
+            {"a": {"rounds_per_s": 5.0}, "b": {"rounds_per_s": 5.0}},
+            {"a": {"rounds_per_s": 0.0}, "b": {"rounds_per_s": float("nan")}},
+        )
+        assert checked == 0 and not regs
+        assert any("<= 0" in n for n in notes)
+        assert any("non-finite" in n for n in notes)
+
+    def test_one_sided_keys_noted_not_failed(self, check_bench):
+        checked, regs, imps, notes = self._compare(
+            check_bench,
+            {"new_only": {"rounds_per_s": 5.0}},
+            {"old_only": {"rounds_per_s": 5.0}},
+        )
+        assert checked == 0 and not regs
+        assert any("no baseline" in n for n in notes)
+        assert any("baseline only" in n for n in notes)
+
+    def _metrics_doc(self, p50, window=5, direction="higher"):
+        return {"metrics": {"s": {
+            "window": window, "n_windows": len(p50), "dropped": 0,
+            "better": {"v": direction},
+            "aggs": {"v": {"p50": list(p50), "p99": list(p50), "mean": list(p50), "sum": list(p50)}},
+        }}}
+
+    def test_metrics_direction_gates(self, check_bench):
+        base = self._metrics_doc([10.0, 10.0])
+        ok = self._metrics_doc([9.0, 11.0])
+        bad = self._metrics_doc([10.0, 6.0])
+        assert not self._compare(check_bench, ok, base, metrics_only=True)[1]
+        regs = self._compare(check_bench, bad, base, metrics_only=True)[1]
+        assert [r[0] for r in regs] == ["metrics.s.v.p50[1]"]
+        # "lower" flips the inequality
+        base_l = self._metrics_doc([10.0], direction="lower")
+        assert not self._compare(check_bench, self._metrics_doc([12.0], direction="lower"),
+                                 base_l, metrics_only=True)[1]
+        assert self._compare(check_bench, self._metrics_doc([14.0], direction="lower"),
+                             base_l, metrics_only=True)[1]
+        # "equal" gates any drift; "none" never gates
+        base_e = self._metrics_doc([10.0], direction="equal")
+        assert self._compare(check_bench, self._metrics_doc([10.0001], direction="equal"),
+                             base_e, metrics_only=True)[1]
+        base_n = self._metrics_doc([10.0], direction="none")
+        assert not self._compare(check_bench, self._metrics_doc([0.0], direction="none"),
+                                 base_n, metrics_only=True)[1]
+
+    def test_window_mismatch_skipped(self, check_bench):
+        base = self._metrics_doc([10.0, 10.0])
+        new = self._metrics_doc([10.0, 10.0, 10.0])
+        checked, regs, _, notes = self._compare(check_bench, new, base, metrics_only=True)
+        assert checked == 0 and not regs
+        assert any("windows" in n for n in notes)
+        new_w = self._metrics_doc([10.0, 10.0], window=7)
+        _, regs, _, notes = self._compare(check_bench, new_w, base, metrics_only=True)
+        assert not regs and any("window" in n for n in notes)
+
+    def test_metrics_block_not_gated_as_leaves(self, check_bench):
+        doc = self._metrics_doc([10.0])
+        assert dict(check_bench.numeric_leaves(doc)) == {}
+
+
+class TestTimeFn:
+    def test_both_modes(self):
+        common = _load_module("benchmarks/common.py", "bench_common")
+        us_block = common.time_fn(lambda: jnp.ones(8) * 2, iters=2, warmup=1)
+        us_pipe = common.time_fn(lambda: jnp.ones(8) * 2, iters=2, warmup=1, blocking=False)
+        assert us_block > 0 and us_pipe > 0
