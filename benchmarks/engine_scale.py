@@ -206,12 +206,17 @@ def bench_sharded_async(D: int, K: int, T: int, S: int, block: int, out: dict, r
     lean horizon, next to the same-shape sync run for the overhead ratio.
     The async horizon runs with the in-scan taps stage enabled — the timing
     measures the instrumented engine, and the tap series feed the windowed
-    ``metrics`` stream on the reporter."""
+    ``metrics`` stream on the reporter.  A third timed run adds the
+    client-axis sketch stage (window W = T // 2, i.e. 50 at the full
+    protocol) on top of taps: ``sketch_rounds_per_s`` gates like any
+    throughput leaf, ``sketch_overhead_x`` records the cost vs taps-only
+    (the acceptance bar is <= 1.15x), and the psum-merged sketch stream
+    feeds the ``fairness`` metrics stream + the alert detector pass."""
     from repro.configs.base import FLConfig
     from repro.core.volatility import BernoulliVolatility, CompletionLag, paper_success_rates
     from repro.engine.round_program import RoundProgram
     from repro.launch.mesh import make_host_mesh
-    from repro.obs import ROUND_TAPS
+    from repro.obs import ROUND_TAPS, SketchSpec
 
     k = max(100, K // 1000)
     rho = paper_success_rates(K)
@@ -233,6 +238,29 @@ def bench_sharded_async(D: int, K: int, T: int, S: int, block: int, out: dict, r
             better=ROUND_TAPS.directions(),
         )
         out["tap_counters"] = {n: float(v) for n, v in taps["counters"].items()}
+
+    W_sk = max(1, T // 2)  # 50 at the full T=100 protocol, 15 under smoke
+    sk_spec = SketchSpec(window=W_sk, n_regions=4)
+    run_k, st_k = pa.build_runner(outputs="lean", taps=True, sketch=sk_spec)
+    best_k, (_, _, _, _, taps_k) = _time_sharded_run(run_k, st_k, key, xs)
+    sketch_overhead = best_k / best_a
+    out["sketch"] = {
+        "window": W_sk, "n_regions": sk_spec.n_regions,
+        "sketch_rounds_per_s": round(T / best_k, 2),
+        "sketch_overhead_x": round(sketch_overhead, 3),
+    }
+    emit(
+        f"engine/sharded_async_sketch/K={K}",
+        best_k / T * 1e6,
+        f"D={D};W={W_sk};rounds_per_s={T / best_k:.2f};overhead_vs_taps={sketch_overhead:.3f}x",
+    )
+    if rep is not None:
+        fair = rep.fairness_stream("fairness", taps_k["sketches"])
+        rep.alerts(
+            series={n: np.asarray(v) for n, v in taps_k["series"].items()},
+            fairness=fair,
+            expected_selected=k,
+        )
 
     ps = RoundProgram(fl=fl, vol=base, rho=rho, mesh=mesh, block=block)
     run_s, st_s = ps.build_runner(outputs="lean")

@@ -35,6 +35,10 @@ Two gate surfaces per ``BENCH_<name>.json`` present in both trees:
   hardware deltas don't fail PRs.
 * ``--metrics-only`` gates/prints only the windowed metric streams — the PR
   metrics-diff step uses it for a per-window regression summary.
+* ``--streams <regex>`` restricts the metrics gate to stream names matching
+  the pattern — the CI fairness step runs ``--metrics-only --streams
+  fairness`` so the windowed fairness series (Jain / Gini / top-decile
+  share, emitted by sketch-enabled benchmarks) gate on their own line.
 * env ``BENCH_GATE_TOL`` overrides the default 30% tolerance.
 
 Files without a baseline counterpart are skipped with a note, so adding a new
@@ -46,6 +50,7 @@ import argparse
 import json
 import math
 import os
+import re
 import shutil
 import sys
 
@@ -116,15 +121,18 @@ def _stream_p50s(block: dict):
         yield metric, better.get(metric, "none"), aggs.get("p50") or []
 
 
-def compare_metrics(new: dict, base: dict, tol: float):
+def compare_metrics(new: dict, base: dict, tol: float, streams=None):
     """Gate the windowed metric streams; returns (checked, regressions,
     notes).  ``regressions`` rows are (path, base, new, ratio) keyed
-    ``metrics.<stream>.<metric>.p50[w]``."""
+    ``metrics.<stream>.<metric>.p50[w]``.  ``streams`` (a compiled regex or
+    None) restricts the gate to matching stream names."""
     new_m = new.get("metrics") or {}
     base_m = base.get("metrics") or {}
     regressions, notes = [], []
     checked = 0
     for stream in sorted(set(base_m) | set(new_m)):
+        if streams is not None and not streams.search(stream):
+            continue
         if stream not in new_m:
             notes.append(f"metrics.{stream}: in baseline only — skipped")
             continue
@@ -171,7 +179,8 @@ def compare_metrics(new: dict, base: dict, tol: float):
     return checked, regressions, notes
 
 
-def compare_file(name: str, new_path: str, base_path: str, tol: float, metrics_only: bool = False):
+def compare_file(name: str, new_path: str, base_path: str, tol: float,
+                 metrics_only: bool = False, streams=None):
     with open(new_path) as f:
         new = json.load(f)
     with open(base_path) as f:
@@ -180,7 +189,7 @@ def compare_file(name: str, new_path: str, base_path: str, tol: float, metrics_o
         checked_s, regs_s, imps, notes_s = 0, [], [], []
     else:
         checked_s, regs_s, imps, notes_s = compare_scalars(new, base, tol)
-    checked_m, regs_m, notes_m = compare_metrics(new, base, tol)
+    checked_m, regs_m, notes_m = compare_metrics(new, base, tol, streams)
     return checked_s + checked_m, regs_s + regs_m, imps, notes_s + notes_m
 
 
@@ -193,7 +202,11 @@ def main() -> int:
     ap.add_argument("--update", action="store_true", help="copy current results over the baseline")
     ap.add_argument("--metrics-only", action="store_true",
                     help="gate only the windowed metric streams (PR metrics-diff step)")
+    ap.add_argument("--streams", default=None, metavar="REGEX",
+                    help="restrict the metrics gate to stream names matching this regex "
+                         "(e.g. 'fairness' for the CI fairness step)")
     args = ap.parse_args()
+    streams_re = re.compile(args.streams) if args.streams else None
     baseline = args.baseline or os.path.join(args.results, "baseline")
 
     names = sorted(
@@ -218,7 +231,8 @@ def main() -> int:
             print(f"check_bench: {f}: no baseline yet, skipping")
             continue
         checked, regs, imps, notes = compare_file(
-            f, os.path.join(args.results, f), base_path, args.tolerance, args.metrics_only
+            f, os.path.join(args.results, f), base_path, args.tolerance,
+            args.metrics_only, streams_re,
         )
         status = "OK" if not regs else "REGRESSION"
         print(f"check_bench: {f}: {checked} metric(s) checked, {status}")

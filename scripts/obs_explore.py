@@ -1,0 +1,297 @@
+#!/usr/bin/env python
+"""Run-log explorer: render JSONL run logs into the text/CSV reports CI
+uploads (and humans actually read).
+
+Usage:
+    python scripts/obs_explore.py summarize <log.jsonl | dir> [...] [-o OUT]
+    python scripts/obs_explore.py fairness  <log.jsonl | dir> [...] [--csv] [-o OUT]
+    python scripts/obs_explore.py diff      <A.jsonl | dirA> <B.jsonl | dirB>
+                                            [--tolerance 0.05] [--strict] [-o OUT]
+
+* ``summarize`` — one screen per log: header, event counts, alert listing,
+  metric-stream overview (first/last window p50 per metric) and the final
+  summary scalars.
+* ``fairness`` — the client-axis fairness telemetry (Jain / Gini /
+  top-decile share / region CEP skew — the ``fairness`` tap group) as a
+  window-by-window table, or ``--csv`` rows
+  (``run,stream,metric,window,p50``) for spreadsheets.
+* ``diff`` — pair two runs (or two directories of runs, matched by the
+  header ``run`` name, falling back to the filename stem) and compare every
+  shared metric stream window by window under its declared gate direction;
+  new/disappeared alerts are listed.  Exits 0 unless ``--strict`` and a
+  gated direction regressed beyond ``--tolerance`` — the PR CI step runs it
+  informationally against the committed baseline log.
+
+Directories are scanned non-recursively for ``*.jsonl`` (a ``baseline/``
+subdirectory therefore never collides with the fresh logs above it).
+Reads every supported run-log schema (v1 logs simply have no alerts or
+timestamps).  Stdlib-only on purpose: usable in CI steps and on laptops
+without the jax stack installed.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+FAIRNESS_METRICS = ("jain", "gini", "top_decile_share", "region_cep_skew")
+
+
+# ---------------------------------------------------------------------------
+# loading
+# ---------------------------------------------------------------------------
+
+
+def read_records(path: str) -> List[dict]:
+    records = []
+    with open(path) as fh:
+        for i, line in enumerate(fh):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                records.append(json.loads(line))
+            except json.JSONDecodeError as e:
+                raise SystemExit(f"{path}:{i + 1}: invalid JSON ({e})")
+    return records
+
+
+def expand_paths(paths: List[str]) -> List[str]:
+    out = []
+    for p in paths:
+        if os.path.isdir(p):
+            out.extend(sorted(glob.glob(os.path.join(p, "*.jsonl"))))
+        else:
+            out.append(p)
+    return out
+
+
+def run_name(records: List[dict], path: str) -> str:
+    for r in records:
+        if r.get("event") == "header":
+            return str(r.get("run") or r.get("name") or "")
+    return os.path.splitext(os.path.basename(path))[0]
+
+
+def metric_streams(records: List[dict]) -> Dict[str, dict]:
+    """stream name -> {"better": {...}, "p50": {metric: [...]}, "window": W}."""
+    out: Dict[str, dict] = {}
+    for r in records:
+        if r.get("event") != "metrics":
+            continue
+        w = r.get("windows") or {}
+        aggs = w.get("aggs") or {}
+        out[str(r.get("stream"))] = {
+            "better": r.get("better") or {},
+            "window": w.get("window"),
+            "n_windows": w.get("n_windows"),
+            "p50": {m: (cell or {}).get("p50") or [] for m, cell in aggs.items()},
+        }
+    return out
+
+
+def alerts_of(records: List[dict]) -> List[dict]:
+    return [r for r in records if r.get("event") == "alert"]
+
+
+def summary_of(records: List[dict]) -> dict:
+    for r in reversed(records):
+        if r.get("event") == "summary":
+            return r.get("data") or {}
+    return {}
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return "null"
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+# ---------------------------------------------------------------------------
+# subcommands
+# ---------------------------------------------------------------------------
+
+
+def cmd_summarize(args) -> Tuple[int, List[str]]:
+    lines: List[str] = []
+    for path in expand_paths(args.logs):
+        records = read_records(path)
+        name = run_name(records, path)
+        counts: Dict[str, int] = {}
+        for r in records:
+            counts[str(r.get("event"))] = counts.get(str(r.get("event")), 0) + 1
+        lines.append(f"== {name} ({path})")
+        lines.append("   events: " + ", ".join(f"{k}={v}" for k, v in sorted(counts.items())))
+        for a in alerts_of(records):
+            lines.append(
+                f"   ALERT [{a.get('severity')}] {a.get('rule')}: "
+                f"{a.get('message') or json.dumps(a.get('detail'))}"
+            )
+        for stream, st in metric_streams(records).items():
+            for metric, p50 in st["p50"].items():
+                better = st["better"].get(metric, "none")
+                if p50:
+                    lines.append(
+                        f"   {stream}.{metric} [{better}] windows={len(p50)} "
+                        f"p50 first={_fmt(p50[0])} last={_fmt(p50[-1])}"
+                    )
+        summ = summary_of(records)
+        if summ:
+            scalars = {k: v for k, v in summ.items() if isinstance(v, (int, float, str))}
+            lines.append("   summary: " + ", ".join(f"{k}={_fmt(v)}" for k, v in sorted(scalars.items())))
+        lines.append("")
+    return 0, lines
+
+
+def cmd_fairness(args) -> Tuple[int, List[str]]:
+    lines: List[str] = []
+    if args.csv:
+        lines.append("run,stream,metric,window,p50")
+    found = False
+    for path in expand_paths(args.logs):
+        records = read_records(path)
+        name = run_name(records, path)
+        for stream, st in metric_streams(records).items():
+            fair = {m: v for m, v in st["p50"].items() if m in FAIRNESS_METRICS}
+            if not fair:
+                continue
+            found = True
+            if args.csv:
+                for metric, p50 in fair.items():
+                    for w, v in enumerate(p50):
+                        lines.append(f"{name},{stream},{metric},{w},{_fmt(v)}")
+            else:
+                lines.append(f"== {name} / {stream}")
+                for metric, p50 in fair.items():
+                    better = st["better"].get(metric, "none")
+                    vals = " ".join(_fmt(v) for v in p50)
+                    lines.append(f"   {metric:<18} [{better:>6}] {vals}")
+                lines.append("")
+    if not found and not args.csv:
+        lines.append("no fairness streams found (run with sketches enabled to emit them)")
+    return 0, lines
+
+
+def _pair_runs(a_paths: List[str], b_paths: List[str]):
+    def index(paths):
+        idx = {}
+        for p in paths:
+            recs = read_records(p)
+            idx[run_name(recs, p)] = (p, recs)
+        return idx
+
+    A, B = index(a_paths), index(b_paths)
+    shared = [n for n in A if n in B]
+    only_a = [n for n in A if n not in B]
+    only_b = [n for n in B if n not in A]
+    return [(n, A[n], B[n]) for n in shared], only_a, only_b
+
+
+def cmd_diff(args) -> Tuple[int, List[str]]:
+    a_paths = expand_paths([args.a])
+    b_paths = expand_paths([args.b])
+    pairs, only_a, only_b = _pair_runs(a_paths, b_paths)
+    lines: List[str] = [f"diff: A={args.a}  B={args.b}  tolerance={args.tolerance:.0%}"]
+    regressions = 0
+    for name in only_a:
+        lines.append(f"  only in A: {name}")
+    for name in only_b:
+        lines.append(f"  only in B: {name}")
+    for name, (pa, ra), (pb, rb) in pairs:
+        lines.append(f"== {name}")
+        sa, sb = metric_streams(ra), metric_streams(rb)
+        for stream in sorted(set(sa) | set(sb)):
+            if stream not in sa or stream not in sb:
+                lines.append(f"   {stream}: only in {'A' if stream in sa else 'B'}")
+                continue
+            better = {**sa[stream]["better"], **sb[stream]["better"]}
+            for metric in sorted(set(sa[stream]["p50"]) | set(sb[stream]["p50"])):
+                pa50 = sa[stream]["p50"].get(metric) or []
+                pb50 = sb[stream]["p50"].get(metric) or []
+                if not pa50 or not pb50:
+                    lines.append(f"   {stream}.{metric}: only in {'A' if pa50 else 'B'}")
+                    continue
+                if len(pa50) != len(pb50):
+                    lines.append(
+                        f"   {stream}.{metric}: window count {len(pa50)} -> {len(pb50)} (skipped)"
+                    )
+                    continue
+                direction = better.get(metric, "none")
+                worst = None
+                for w, (va, vb) in enumerate(zip(pa50, pb50)):
+                    if not isinstance(va, (int, float)) or not isinstance(vb, (int, float)):
+                        continue
+                    delta = vb - va
+                    rel = delta / abs(va) if va else 0.0
+                    bad = (
+                        (direction == "higher" and rel < -args.tolerance)
+                        or (direction == "lower" and rel > args.tolerance)
+                        or (direction == "equal" and abs(rel) > 1e-9)
+                    )
+                    if worst is None or abs(rel) > abs(worst[1]):
+                        worst = (w, rel, va, vb, bad)
+                if worst is None:
+                    continue
+                w, rel, va, vb, bad = worst
+                mark = " REGRESSED" if bad else ""
+                if bad:
+                    regressions += 1
+                lines.append(
+                    f"   {stream}.{metric} [{direction}] worst window {w}: "
+                    f"{_fmt(va)} -> {_fmt(vb)} ({rel:+.1%}){mark}"
+                )
+        aa = {json.dumps((a.get("rule"), a.get("severity"))) for a in alerts_of(ra)}
+        for a in alerts_of(rb):
+            tag = json.dumps((a.get("rule"), a.get("severity")))
+            star = "NEW " if tag not in aa else ""
+            lines.append(
+                f"   {star}ALERT [{a.get('severity')}] {a.get('rule')}: "
+                f"{a.get('message') or json.dumps(a.get('detail'))}"
+            )
+        lines.append("")
+    if not pairs:
+        lines.append("no runs in common (nothing to diff)")
+    lines.append(f"{regressions} gated regression(s)")
+    return (1 if args.strict and regressions else 0), lines
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("summarize", help="per-log overview: events, alerts, streams, summary")
+    p.add_argument("logs", nargs="+")
+    p.add_argument("-o", "--out", default=None, help="write the report here as well as stdout")
+
+    p = sub.add_parser("fairness", help="fairness telemetry as a table or CSV")
+    p.add_argument("logs", nargs="+")
+    p.add_argument("--csv", action="store_true")
+    p.add_argument("-o", "--out", default=None)
+
+    p = sub.add_parser("diff", help="window-by-window comparison of two runs / run dirs")
+    p.add_argument("a")
+    p.add_argument("b")
+    p.add_argument("--tolerance", type=float, default=0.05)
+    p.add_argument("--strict", action="store_true", help="exit 1 on gated regressions")
+    p.add_argument("-o", "--out", default=None)
+
+    args = ap.parse_args(argv)
+    rc, lines = {"summarize": cmd_summarize, "fairness": cmd_fairness, "diff": cmd_diff}[args.cmd](args)
+    text = "\n".join(lines) + "\n"
+    sys.stdout.write(text)
+    if args.out:
+        d = os.path.dirname(args.out)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(args.out, "w") as fh:
+            fh.write(text)
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -11,7 +11,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["jain_index", "selection_entropy", "cep", "success_ratio", "class_selection_stats"]
+__all__ = [
+    "jain_index", "selection_entropy", "gini", "top_share",
+    "cep", "success_ratio", "class_selection_stats",
+]
 
 
 def jain_index(counts: jax.Array) -> jax.Array:
@@ -28,6 +31,30 @@ def selection_entropy(counts: jax.Array) -> jax.Array:
     p = counts / jnp.maximum(jnp.sum(counts), 1e-12)
     h = -jnp.sum(jnp.where(p > 0, p * jnp.log(p), 0.0))
     return h / jnp.log(counts.shape[0])
+
+
+def gini(counts: jax.Array) -> jax.Array:
+    """Exact Gini coefficient of selection counts in [0, 1); 0 == even.
+
+    Sorted-rank formula ``G = (2 * sum_i i*c_(i) / (K * sum c)) - (K+1)/K``
+    — the dense-state oracle for the grouped-data Gini the sketch stream
+    streams at scale (``repro.obs.sketches.fairness_series``).
+    """
+    c = jnp.sort(counts.astype(jnp.float32))
+    K = c.shape[0]
+    total = jnp.maximum(jnp.sum(c), 1e-12)
+    ranks = jnp.arange(1, K + 1, dtype=jnp.float32)
+    return 2.0 * jnp.vdot(ranks, c) / (K * total) - (K + 1.0) / K
+
+
+def top_share(counts: jax.Array, frac: float = 0.1) -> jax.Array:
+    """Selection-mass share of the most-selected ``frac`` of clients (the
+    exact twin of the sketch stream's fractional-bucket estimate)."""
+    c = jnp.sort(counts.astype(jnp.float32))[::-1]
+    K = c.shape[0]
+    target = frac * K
+    take = jnp.minimum(jnp.maximum(target - jnp.arange(K, dtype=jnp.float32), 0.0), 1.0)
+    return jnp.vdot(take, c) / jnp.maximum(jnp.sum(c), 1e-12)
 
 
 def cep(sel_masks: jax.Array, xs: jax.Array) -> jax.Array:

@@ -88,6 +88,7 @@ from repro.core.volatility import DEAD_LAG
 from repro.engine.sharded import _axis_size, _pad0, _shard_topk_merge, _shmap, masked_prob_alloc
 from repro.fl.round import ServerState, init_server_state, make_select_fn
 from repro.kernels.unpack_bits import unpack_bits, unpack_crumbs
+from repro.obs.sketches import SKETCH_FIELDS, SketchSpec, lag_bins, region_ids, sketch_carry0, sketch_step
 from repro.obs.taps import ROUND_TAPS
 from repro.obs.trace import stage
 
@@ -283,7 +284,8 @@ def _make_observe(program: "RoundProgram", K_loc: int, fold, vol=None):
 # ---------------------------------------------------------------------------
 
 
-def _make_step(program: "RoundProgram", ctx, lean: bool, taps: bool = False):
+def _make_step(program: "RoundProgram", ctx, lean: bool, taps: bool = False,
+               sketch: Optional[SketchSpec] = None, region=None):
     """Assemble the scan body from the program's stages and a placement
     context.  This is the single copy of the round pipeline; every engine
     entry point scans (or host-steps) exactly this function.
@@ -297,6 +299,15 @@ def _make_step(program: "RoundProgram", ctx, lean: bool, taps: bool = False):
     placement emits the identical replicated scalars) and never touch the
     PRNG stream or the state math — taps-on runs are bit-identical to the
     goldens (pinned in ``tests/test_obs.py``).
+
+    With ``sketch=<SketchSpec>`` (requires taps) the carry further threads
+    the per-shard sketch accumulators and each round emits a trailing
+    *local* sketch row — zeros except every ``sketch.window``-th round,
+    gated on the global ``state.t`` (``repro.obs.sketches``).  The runner
+    merges shards with one post-scan psum and windows the stream; like
+    taps, sketches never touch the round's math or PRNG stream.  ``region``
+    is the (K_loc,) int32 region-id slab (defaults to the spec's global
+    layout — the sharded runner passes the shard slice).
     """
     fl = program.fl
     k, scheme, eta, K_glob = fl.k, fl.scheme, fl.eta, fl.K
@@ -304,6 +315,10 @@ def _make_step(program: "RoundProgram", ctx, lean: bool, taps: bool = False):
     S = 0 if sync else int(program.staleness)
     alpha = program.alpha
     late_fb = (not sync) and program.feedback == "late_credit" and scheme == "e3cs" and S > 0
+    if sketch is not None:
+        L = lag_bins(program.staleness)
+        if region is None:
+            region = jnp.asarray(region_ids(sketch, ctx.K_loc))
 
     def tap_row(mask, x, sigma, capped, arriving=None):
         stale = jnp.zeros((), jnp.float32) if arriving is None else ctx.psum(jnp.sum(arriving))
@@ -316,11 +331,21 @@ def _make_step(program: "RoundProgram", ctx, lean: bool, taps: bool = False):
         }
 
     def step(carry, x_over):
-        tapc = None
+        tapc = skc = None
         if sync:
-            (state, key, tapc) = carry if taps else (*carry, None)
+            if sketch is not None:
+                (state, key, tapc, skc) = carry
+            elif taps:
+                (state, key, tapc) = carry
+            else:
+                (state, key) = carry
         else:
-            (state, key, rings, tapc) = carry if taps else (*carry, None)
+            if sketch is not None:
+                (state, key, rings, tapc, skc) = carry
+            elif taps:
+                (state, key, rings, tapc) = carry
+            else:
+                (state, key, rings) = carry
         key, k1, k2 = jax.random.split(key, 3)
         # allocate + select
         with stage("round.select"):
@@ -350,7 +375,14 @@ def _make_step(program: "RoundProgram", ctx, lean: bool, taps: bool = False):
             out = (ctx.psum(jnp.vdot(mask, x)), sigma) if lean else (mask, x, p, sigma)
             if taps:
                 row = tap_row(mask, x, sigma, capped)
-                return (state, key, ROUND_TAPS.accumulate(tapc, row)), out + (row,)
+                new_tapc = ROUND_TAPS.accumulate(tapc, row)
+                if sketch is not None:
+                    skc2, sk_row = sketch_step(
+                        sketch, skc, mask, x, None, p, state.sel_counts, state.t,
+                        region, ctx.active, L,
+                    )
+                    return (state, key, new_tapc, skc2), out + (row, sk_row)
+                return (state, key, new_tapc), out + (row,)
             return (state, key), out
         # credit: pop this round's arrivals, push the new late completions
         with stage("round.credit"):
@@ -390,7 +422,14 @@ def _make_step(program: "RoundProgram", ctx, lean: bool, taps: bool = False):
         out = (on_time, stale, sigma) if lean else (mask, lag, p, sigma, arriving)
         if taps:
             row = tap_row(mask, x, sigma, capped, arriving)
-            return (state, key, new_rings, ROUND_TAPS.accumulate(tapc, row)), out + (row,)
+            new_tapc = ROUND_TAPS.accumulate(tapc, row)
+            if sketch is not None:
+                skc2, sk_row = sketch_step(
+                    sketch, skc, mask, x, lag, p, state.sel_counts, state.t,
+                    region, ctx.active, L,
+                )
+                return (state, key, new_rings, new_tapc, skc2), out + (row, sk_row)
+            return (state, key, new_rings, new_tapc), out + (row,)
         return (state, key, new_rings), out
 
     return step
@@ -594,6 +633,7 @@ class RoundProgram:
         carry_key: bool = False,
         scan_length: Optional[int] = None,
         taps: bool = False,
+        sketch: Optional[SketchSpec] = None,
     ):
         """Compile the program over a whole horizon; returns ``(run, state0)``.
 
@@ -618,26 +658,73 @@ class RoundProgram:
 
         ``taps=True`` appends one trailing payload to every contract above:
         ``{"series": {gauge: (T,)}, "counters": {counter: scalar}}`` — the
-        ``ROUND_TAPS`` schema, identical for every placement.  Taps are
-        incompatible with ``carry_key`` (the streamed-carry contract is
-        pinned by external steppers).
+        ``ROUND_TAPS`` schema, identical for every placement.  With
+        ``carry_key=True`` the taps counters thread through the streamed
+        carry instead: seed them with ``ROUND_TAPS.init_counters()`` and the
+        signature becomes sync ``run(state, key, tapc, xs_in) -> (state,
+        key, tapc, *outs, series)`` / async ``run(state, key, rings, tapc,
+        xs_in) -> (state, key, rings, tapc, *outs, series)``, where
+        ``series`` is the per-chunk ``{gauge: (T,)}`` row dict — concatenate
+        chunks host-side (``repro.scenarios.replay.replay_packed_stream``
+        does); chunked and one-shot streams are bit-identical.
+
+        ``sketch=<SketchSpec>`` (requires ``taps=True``, one-shot only)
+        additionally runs the client-axis sketch stage
+        (``repro.obs.sketches``): the taps payload gains a ``"sketches"``
+        key mapping ``SKETCH_FIELDS`` to ``(T // window, ...)`` streams —
+        psum-merged under a mesh, so every placement emits the identical
+        stream, and bit-identical to sketches-off runs on every other
+        output.
         """
         if outputs not in ("full", "lean"):
             raise ValueError(f"unknown outputs mode {outputs!r} (want 'full' or 'lean')")
-        if taps and carry_key:
-            raise ValueError("taps=True extends the scan carry; the carry_key streaming contract forbids it")
+        if sketch is not None and not taps:
+            raise ValueError("sketch streams ride the taps stage; pass taps=True")
+        if sketch is not None and carry_key:
+            raise ValueError(
+                "sketch streams are one-shot (the windowed emission is sliced in-jit); "
+                "chunked carry_key horizons stream taps counters instead"
+            )
         lean = outputs == "lean"
         T = self.fl.rounds if scan_length is None else int(scan_length)
         if self.mesh is None:
-            return self._build_local_runner(lean, carry_key, T, taps)
-        return self._build_sharded_runner(lean, carry_key, T, taps)
+            return self._build_local_runner(lean, carry_key, T, taps, sketch)
+        return self._build_sharded_runner(lean, carry_key, T, taps, sketch)
 
-    def _build_local_runner(self, lean: bool, carry_key: bool, T: int, taps: bool):
-        step, state0 = self.build_step(lean, taps)
+    def _build_local_runner(self, lean: bool, carry_key: bool, T: int, taps: bool,
+                            sketch: Optional[SketchSpec] = None):
+        step = _make_step(self, _LocalCtx(self), lean, taps, sketch)
+        state0 = init_server_state({}, self.fl.K, self.vol.init_state())
         sync = self.staleness is None
         tap0 = ROUND_TAPS.init_counters() if taps else None
+        if sketch is not None:
+            W = sketch.window
+            sk0 = sketch_carry0(self.fl.K, lag_bins(self.staleness))
 
         if sync:
+            if sketch is not None:
+
+                @jax.jit
+                def run_sketch(state, key, xs_in):
+                    (state, key, tapc, _), out = jax.lax.scan(
+                        step, (state, key, tap0, sk0), xs_in, length=T
+                    )
+                    *outs, row, sk = out
+                    stream = jax.tree.map(lambda a: a[W - 1 :: W], sk)
+                    return (state, *outs, {"series": row, "counters": tapc, "sketches": stream})
+
+                return run_sketch, state0
+
+            if taps and carry_key:
+
+                @jax.jit
+                def run_stream(state, key, tapc, xs_in):
+                    (state, key, tapc), out = jax.lax.scan(step, (state, key, tapc), xs_in, length=T)
+                    *outs, row = out
+                    return (state, key, tapc, *outs, row)
+
+                return run_stream, state0
+
             if taps:
 
                 @jax.jit
@@ -658,7 +745,28 @@ class RoundProgram:
 
         init_rings = self.init_rings
 
-        if carry_key:
+        if sketch is not None:
+
+            @jax.jit
+            def run_async(state, key, xs_in):
+                (state, key, _, tapc, _), out = jax.lax.scan(
+                    step, (state, key, init_rings(), tap0, sk0), xs_in, length=T
+                )
+                *outs, row, sk = out
+                stream = jax.tree.map(lambda a: a[W - 1 :: W], sk)
+                return (state, *outs, {"series": row, "counters": tapc, "sketches": stream})
+
+        elif taps and carry_key:
+
+            @jax.jit
+            def run_async(state, key, rings, tapc, xs_in):
+                (state, key, rings, tapc), out = jax.lax.scan(
+                    step, (state, key, rings, tapc), xs_in, length=T
+                )
+                *outs, row = out
+                return (state, key, rings, tapc, *outs, row)
+
+        elif carry_key:
 
             @jax.jit
             def run_async(state, key, rings, xs_in):
@@ -697,7 +805,8 @@ class RoundProgram:
         width = K_pad if self.override == "dense" else D
         return K_pad, K_pad // D, width, D
 
-    def _build_sharded_runner(self, lean: bool, carry_key: bool, T: int, taps: bool):
+    def _build_sharded_runner(self, lean: bool, carry_key: bool, T: int, taps: bool,
+                              sketch: Optional[SketchSpec] = None):
         fl, axis_name = self.fl, self.axis_name
         K, k, scheme = fl.K, fl.k, fl.scheme
         sync = self.staleness is None
@@ -750,19 +859,34 @@ class RoundProgram:
         tap0 = ROUND_TAPS.init_counters() if taps else {}
         tap_spec = {n: P() for n in tap0}
         row_spec = {n: P() for n in ROUND_TAPS.gauge_names()}
+        # the sketch stream is psum-merged after the scan -> replicated P();
+        # the per-shard sketch carry never crosses the shard_map boundary
+        if sketch is not None:
+            W = sketch.window
+            L = lag_bins(self.staleness)
+            region_pad = jnp.asarray(_pad0(jnp.asarray(region_ids(sketch, K)), K_pad), jnp.int32)
+            sk_spec = {n: P() for n in SKETCH_FIELDS}
+        else:
+            region_pad = jnp.zeros((K_pad,), jnp.int32)
         program = self
 
-        def horizon(state, key, rings, tapc, xs, vol_arr, rho_full, active_loc):
+        def horizon(state, key, rings, tapc, xs, vol_arr, rho_full, active_loc, region_loc):
             vol_loc = _rebuild_vol(program.vol, vol_arr)
             ctx = _ShardCtx(program, vol_loc, rho_full, active_loc, Ks, D)
-            step = _make_step(program, ctx, lean, taps)
-            if sync:
-                carry0 = (state, key, tapc) if taps else (state, key)
-            else:
-                carry0 = (state, key, rings, tapc) if taps else (state, key, rings)
+            step = _make_step(program, ctx, lean, taps, sketch,
+                              region_loc if sketch is not None else None)
+            tail = (tapc,) if taps else ()
+            if sketch is not None:
+                tail = tail + (sketch_carry0(Ks, L),)
+            carry0 = ((state, key) if sync else (state, key, rings)) + tail
             carry, out = jax.lax.scan(step, carry0, xs, length=T)
             new_rings = () if sync else carry[2]
-            new_tapc = carry[-1] if taps else {}
+            new_tapc = (carry[2] if sync else carry[3]) if taps else {}
+            if sketch is not None:
+                *rest, sk = out
+                sk = jax.tree.map(lambda a: jax.lax.psum(a, axis_name), sk)
+                sk = jax.tree.map(lambda a: a[W - 1 :: W], sk)
+                out = tuple(rest) + (sk,)
             return (carry[0], carry[1], new_rings, new_tapc) + out
 
         if sync:
@@ -773,12 +897,14 @@ class RoundProgram:
             )
         if taps:
             out_specs = out_specs + (row_spec,)
+        if sketch is not None:
+            out_specs = out_specs + (sk_spec,)
         shm = _shmap(
             horizon,
             self.mesh,
             in_specs=(
                 state_spec, P(), rings_spec, tap_spec, P(None, axis_name),
-                {n: P(axis_name) for n in vol_arrays}, P(), P(axis_name),
+                {n: P(axis_name) for n in vol_arrays}, P(), P(axis_name), P(axis_name),
             ),
             out_specs=(state_spec, P(), rings_spec, tap_spec) + out_specs,
         )
@@ -793,22 +919,47 @@ class RoundProgram:
         def _finish(state, tapc, out):
             if not taps:
                 return (state, *out)
+            if sketch is not None:
+                *outs, row, sk = out
+                return (state, *outs, {"series": row, "counters": tapc, "sketches": sk})
             *outs, row = out
             return (state, *outs, {"series": row, "counters": tapc})
 
-        if carry_key and sync:
+        if carry_key and sync and taps:
+
+            @jax.jit
+            def run(state, key, tapc, xs_in):
+                state, key, _, tapc, *out = shm(
+                    state, key, (), tapc, _pad_xs(xs_in), vol_arrays, rho_rep, active, region_pad
+                )
+                *outs, row = out
+                return (state, key, tapc, *outs, row)
+
+        elif carry_key and sync:
 
             @jax.jit
             def run(state, key, xs_in):
-                state, key, _, _, *out = shm(state, key, (), tap0, _pad_xs(xs_in), vol_arrays, rho_rep, active)
+                state, key, _, _, *out = shm(
+                    state, key, (), tap0, _pad_xs(xs_in), vol_arrays, rho_rep, active, region_pad
+                )
                 return (state, key, *out)
+
+        elif carry_key and taps:
+
+            @jax.jit
+            def run(state, key, rings, tapc, xs_in):
+                state, key, rings, tapc, *out = shm(
+                    state, key, rings, tapc, _pad_xs(xs_in), vol_arrays, rho_rep, active, region_pad
+                )
+                *outs, row = out
+                return (state, key, rings, tapc, *outs, row)
 
         elif carry_key:
 
             @jax.jit
             def run(state, key, rings, xs_in):
                 state, key, rings, _, *out = shm(
-                    state, key, rings, tap0, _pad_xs(xs_in), vol_arrays, rho_rep, active
+                    state, key, rings, tap0, _pad_xs(xs_in), vol_arrays, rho_rep, active, region_pad
                 )
                 return (state, key, rings, *out)
 
@@ -816,14 +967,18 @@ class RoundProgram:
 
             @jax.jit
             def run(state, key, xs_in):
-                state, _, _, tapc, *out = shm(state, key, (), tap0, _pad_xs(xs_in), vol_arrays, rho_rep, active)
+                state, _, _, tapc, *out = shm(
+                    state, key, (), tap0, _pad_xs(xs_in), vol_arrays, rho_rep, active, region_pad
+                )
                 return _finish(state, tapc, out)
 
         else:
 
             @jax.jit
             def run(state, key, xs_in):
-                state, _, _, tapc, *out = shm(state, key, rings0, tap0, _pad_xs(xs_in), vol_arrays, rho_rep, active)
+                state, _, _, tapc, *out = shm(
+                    state, key, rings0, tap0, _pad_xs(xs_in), vol_arrays, rho_rep, active, region_pad
+                )
                 return _finish(state, tapc, out)
 
         return run, state0

@@ -110,6 +110,7 @@ def build_scan_runner(
     feedback: str = "deadline",
     block: int = 1,
     taps: bool = False,
+    sketch=None,
 ):
     """Compile a whole-horizon runner for an arbitrary volatility model.
 
@@ -147,7 +148,9 @@ def build_scan_runner(
         fl=fl, vol=vol, rho=rho, override=override, staleness=staleness, alpha=alpha,
         feedback=feedback, mesh=mesh, block=block,
     )
-    return program.build_runner(outputs=outputs, carry_key=carry_key, scan_length=scan_length, taps=taps)
+    return program.build_runner(
+        outputs=outputs, carry_key=carry_key, scan_length=scan_length, taps=taps, sketch=sketch
+    )
 
 
 @functools.lru_cache(maxsize=64)
@@ -235,10 +238,13 @@ def scan_selection_sim(
 
 def _taps_to_numpy(payload) -> dict:
     """Host-side view of a runner's trailing taps payload."""
-    return {
+    out = {
         "series": {n: np.asarray(v) for n, v in payload["series"].items()},
         "counters": {n: float(v) for n, v in payload["counters"].items()},
     }
+    if "sketches" in payload:
+        out["sketches"] = {n: np.asarray(v) for n, v in payload["sketches"].items()}
+    return out
 
 
 def async_selection_sim(

@@ -48,7 +48,7 @@ import numpy as np
 from repro.core.volatility import BernoulliVolatility, BinaryLag, CompletionLag, paper_success_rates
 from repro.engine.multi_job import make_multi_job, multi_job_init, pack_jobs
 from repro.engine.round_program import staleness_ring_step
-from repro.obs import ROUND_TAPS, Reporter, SpanTimer
+from repro.obs import ROUND_TAPS, Reporter, SketchSpec, SpanTimer
 
 __all__ = ["run_service", "run_service_compiled", "run_service_sharded", "main"]
 
@@ -256,6 +256,9 @@ def run_service_compiled(
             window=max(1, rounds // 10),
             better={"on_time": "higher", "stale": "none"},
         )
+        # detector pass over the credit series: an on-time collapse mid-serve
+        # lands as an ``alert`` event in this run's JSONL log
+        reporter.alerts(series={"on_time": np.asarray(on_time).sum(1)})
     return {
         "mode": "compiled_async" if S else "compiled_sync",
         "jobs": J,
@@ -318,9 +321,11 @@ def run_service_sharded(
         volatility="bernoulli", staleness_rounds=S, staleness_alpha=alpha,
     )
     program = RoundProgram.from_config(fl, mesh=mesh, block=block)
-    # serve with the in-scan taps stage on: the same compiled horizon that
-    # answers requests emits the ROUND_TAPS telemetry stream
-    run, state0 = program.build_runner(outputs="lean", taps=True)
+    # serve with the in-scan taps AND sketch stages on: the same compiled
+    # horizon that answers requests emits the ROUND_TAPS telemetry stream
+    # plus the psum-merged client-axis sketch stream (fairness telemetry)
+    sk_spec = SketchSpec(window=max(1, rounds // 5), n_regions=4)
+    run, state0 = program.build_runner(outputs="lean", taps=True, sketch=sk_spec)
     key = jax.random.PRNGKey(seed)
     xs = jnp.zeros((rounds, 0), jnp.float32)
     jax.block_until_ready(run(state0, key, xs)[0].sel_counts)  # compile off the clock
@@ -361,6 +366,14 @@ def run_service_sharded(
             {n: np.asarray(v) for n, v in taps["series"].items()},
             window=max(1, rounds // 10),
             better=ROUND_TAPS.directions(),
+        )
+        # client-axis fairness telemetry + the detector pass: starvation /
+        # outage / drift land as ``alert`` events in the serving run log
+        fair = reporter.fairness_stream("fairness", taps["sketches"])
+        reporter.alerts(
+            series={n: np.asarray(v) for n, v in taps["series"].items()},
+            fairness=fair,
+            expected_selected=k,
         )
     return report
 

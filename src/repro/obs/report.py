@@ -33,9 +33,11 @@ from typing import Dict, Optional
 
 import numpy as np
 
+from .alerts import AlertRules, detect_alerts, log_alerts
 from .paths import bench_path
 from .runlog import RunLog, _jsonable
-from .taps import window_reduce
+from .sketches import fairness_series
+from .taps import ROUND_TAPS, window_reduce
 
 __all__ = ["Reporter"]
 
@@ -45,14 +47,16 @@ class Reporter:
 
     ``Reporter("async_scan", config={...})`` opens the paired run log
     eagerly; pass ``runlog=False`` for pure-JSON writers (e.g. table
-    harvesters) that should not produce an event stream.
+    harvesters) that should not produce an event stream.  Reruns under the
+    same name never truncate an earlier log: the run log is opened with
+    ``unique=True`` (numbered sibling paths, stable ``run`` header name).
     """
 
     def __init__(self, name: str, config: Optional[dict] = None, runlog: bool = True):
         self.name = name
         self.data: dict = {}
         self.metrics: Dict[str, dict] = {}
-        self.log: Optional[RunLog] = RunLog(name, config=config) if runlog else None
+        self.log: Optional[RunLog] = RunLog(name, config=config, unique=True) if runlog else None
 
     # -- stdout CSV (harness convention, unchanged) -----------------------
     def emit(self, name: str, us_per_call: float, derived: str = ""):
@@ -80,6 +84,35 @@ class Reporter:
         if self.log is not None:
             self.log.metrics(stream, windows, better=better)
         return block
+
+    def fairness_stream(self, stream: str, sketches) -> Dict[str, np.ndarray]:
+        """Derive the client-axis fairness series from a runner's
+        ``"sketches"`` payload and attach them as a metrics stream (window=1:
+        the sketch cadence already windows the rounds).  Directions come
+        from the ``fairness`` tap group, so ``check_bench`` gates the
+        stream like any other."""
+        series = fairness_series(sketches)
+        self.metrics_stream(stream, series, window=1, better=ROUND_TAPS.directions("fairness"))
+        return series
+
+    def alerts(
+        self,
+        series: Optional[Dict[str, np.ndarray]] = None,
+        fairness: Optional[Dict[str, np.ndarray]] = None,
+        expected_selected: Optional[float] = None,
+        rules: AlertRules = AlertRules(),
+    ) -> list:
+        """Run the rule-based detector pass (``repro.obs.alerts``) over tap
+        + fairness series; append ``alert`` events to the run log and an
+        ``alerts`` list to the bench JSON.  Returns the ``Alert`` list."""
+        found = detect_alerts(series, fairness, expected_selected, rules)
+        self.data["alerts"] = [
+            {"rule": a.rule, "severity": a.severity, "message": a.message, **a.detail}
+            for a in found
+        ]
+        if self.log is not None:
+            log_alerts(self.log, found)
+        return found
 
     def histogram(self, name: str, hist) -> dict:
         """Attach a latency histogram: summary into bench JSON under

@@ -46,13 +46,21 @@ WINDOW_AGGS = ("p50", "p99", "mean", "sum")
 
 @dataclasses.dataclass(frozen=True)
 class TapSpec:
-    """One typed metric: its name, kind, gate direction and provenance."""
+    """One typed metric: its name, kind, gate direction and provenance.
+
+    ``group`` partitions a registry into independent row schemas: the
+    ``"round"`` group is the in-scan gauge row the engine emits every round;
+    the ``"fairness"`` group names the client-axis series derived host-side
+    from the sketch stream (``repro.obs.sketches.fairness_series``) — same
+    windowing, run-log and gating machinery, different producer.
+    """
 
     name: str
     kind: str
     doc: str = ""
     better: str = "none"  # how check_bench should gate the windowed p50
     source: Tuple[str, ...] = ()  # counters: gauge row keys summed per round ((), = +1/round)
+    group: str = "round"
 
     def __post_init__(self):
         if self.kind not in KINDS:
@@ -84,18 +92,21 @@ class TapRegistry:
     def __contains__(self, name: str) -> bool:
         return name in self.specs
 
-    def gauges(self) -> Sequence[TapSpec]:
-        return [s for s in self.specs.values() if s.kind == "gauge"]
+    def gauges(self, group: Optional[str] = None) -> Sequence[TapSpec]:
+        return [s for s in self.specs.values() if s.kind == "gauge" and group in (None, s.group)]
 
     def counters(self) -> Sequence[TapSpec]:
         return [s for s in self.specs.values() if s.kind == "counter"]
 
-    def gauge_names(self) -> Tuple[str, ...]:
-        return tuple(s.name for s in self.gauges())
+    def gauge_names(self, group: Optional[str] = "round") -> Tuple[str, ...]:
+        """Gauge names of one group (default: the in-scan ``"round"`` row
+        schema, what the engine's tap stage emits); ``group=None`` = all."""
+        return tuple(s.name for s in self.gauges(group))
 
-    def directions(self) -> Dict[str, str]:
-        """Gate-direction map for the windowed gauge streams."""
-        return {s.name: s.better for s in self.gauges()}
+    def directions(self, group: Optional[str] = None) -> Dict[str, str]:
+        """Gate-direction map for the windowed gauge streams (all groups by
+        default — extra keys are harmless to consumers of one stream)."""
+        return {s.name: s.better for s in self.gauges(group)}
 
     def init_counters(self):
         """Zeroed counter pytree for the scan carry (jnp scalars)."""
@@ -111,9 +122,9 @@ class TapRegistry:
             out[s.name] = counters[s.name] + inc
         return out
 
-    def validate_row(self, row: dict):
-        """The schema contract: a tap row is exactly the gauge set."""
-        want = set(self.gauge_names())
+    def validate_row(self, row: dict, group: Optional[str] = "round"):
+        """The schema contract: a tap row is exactly one group's gauge set."""
+        want = set(self.gauge_names(group))
         got = set(row)
         if want != got:
             raise ValueError(f"tap row schema mismatch: missing {sorted(want - got)}, extra {sorted(got - want)}")
@@ -128,6 +139,16 @@ ROUND_TAPS = TapRegistry(
     TapSpec("rounds", "counter", "rounds executed"),
     TapSpec("cum_selected", "counter", "cumulative cohort slots issued", source=("selected",)),
     TapSpec("cum_credit", "counter", "running staleness-aware CEP", source=("on_time", "stale")),
+    # client-axis fairness series, derived host-side from the sketch stream
+    # (repro.obs.sketches.fairness_series) at the sketch cadence
+    TapSpec("jain", "gauge", "exact Jain index of cumulative selection counts",
+            better="higher", group="fairness"),
+    TapSpec("gini", "gauge", "grouped-data Gini of cumulative selection counts",
+            better="lower", group="fairness"),
+    TapSpec("top_decile_share", "gauge", "selection-mass share of the most-selected 10% of clients",
+            better="lower", group="fairness"),
+    TapSpec("region_cep_skew", "gauge", "max per-region on-time credit rate over the fleet average",
+            group="fairness"),
 )
 
 

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.fairness import cep, jain_index, selection_entropy, success_ratio
+from repro.core.fairness import cep, gini, jain_index, selection_entropy, success_ratio, top_share
 from repro.core.volatility import CompletionLag
 from repro.engine.multi_job import make_multi_job, multi_job_init, pack_jobs
 from repro.engine.scan_sim import async_selection_sim, scan_selection_sim
@@ -47,6 +47,8 @@ def _metrics(masks: np.ndarray, xs: np.ndarray) -> Dict[str, float]:
         "eff_participation": float(success_ratio(jnp.asarray(masks), jnp.asarray(xs))),
         "jain": float(jain_index(jnp.asarray(counts))),
         "entropy": float(selection_entropy(jnp.asarray(counts))),
+        "gini": float(gini(jnp.asarray(counts))),
+        "top_decile_share": float(top_share(jnp.asarray(counts), 0.1)),
     }
 
 
@@ -219,7 +221,10 @@ def format_grid(rows: List[Dict[str, float]]) -> str:
     it was run with ``feedback="late_credit"``)."""
     has_async = any("async_cep" in r for r in rows)
     has_lc = any("lc_cep" in r for r in rows)
-    hdr = f"{'scenario':<22} {'selector':<16} {'cep':>9} {'eff_part':>9} {'jain':>6} {'entropy':>8}"
+    hdr = (
+        f"{'scenario':<22} {'selector':<16} {'cep':>9} {'eff_part':>9} {'jain':>6} "
+        f"{'gini':>6} {'top10%':>6} {'entropy':>8}"
+    )
     if has_async:
         hdr += f" {'acep':>9} {'aeff':>7}"
     if has_lc:
@@ -228,7 +233,9 @@ def format_grid(rows: List[Dict[str, float]]) -> str:
     for r in rows:
         line = (
             f"{r['scenario']:<22} {r['selector']:<16} {r['cep']:>9.0f} "
-            f"{r['eff_participation']:>9.3f} {r['jain']:>6.3f} {r['entropy']:>8.3f}"
+            f"{r['eff_participation']:>9.3f} {r['jain']:>6.3f} "
+            f"{r.get('gini', float('nan')):>6.3f} {r.get('top_decile_share', float('nan')):>6.3f} "
+            f"{r['entropy']:>8.3f}"
         )
         if has_async:
             if "async_cep" in r:

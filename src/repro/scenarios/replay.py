@@ -334,6 +334,7 @@ def replay_packed_stream(
     staleness: int | None = None,
     alpha: float = 0.5,
     feedback: str = "deadline",
+    taps: bool = False,
 ):
     """Replay a disk-resident packed trace through the scan engine in
     ``chunk``-round pieces: the memmap is sliced per chunk and each slice is
@@ -354,10 +355,18 @@ def replay_packed_stream(
     computed or supplied — only the ``fedcs`` selector consumes the
     marginal, so other schemes skip the extra streaming pass over the
     trace).
+
+    ``taps=True`` threads the ``ROUND_TAPS`` counter pytree through the
+    streamed carry and folds the per-chunk gauge rows back into one stream:
+    the result gains a ``"taps"`` entry (``{"series": {gauge: (T,)},
+    "counters": {...}}``), bit-identical to a one-shot taps run however the
+    horizon is chunked (pinned in ``tests/test_obs.py``) — K=1e7 replays
+    emit telemetry without abandoning the streaming memory envelope.
     """
     from repro.configs.base import FLConfig
     from repro.core.volatility import make_volatility
     from repro.engine.round_program import RoundProgram
+    from repro.obs.taps import ROUND_TAPS
 
     packed, meta = load_packed_trace(path)
     is_lags = meta["kind"] == "lags"
@@ -380,23 +389,34 @@ def replay_packed_stream(
         fl=fl, vol=vol, rho=rho, override="packed_lags" if is_lags else "packed",
         staleness=staleness, alpha=alpha, feedback=feedback,
     )
-    run, state = program.build_runner(outputs="lean", carry_key=True, scan_length=chunk)
+    run, state = program.build_runner(outputs="lean", carry_key=True, scan_length=chunk, taps=taps)
     run_tail = (
-        program.build_runner(outputs="lean", carry_key=True, scan_length=T % chunk)[0]
+        program.build_runner(outputs="lean", carry_key=True, scan_length=T % chunk, taps=taps)[0]
         if T % chunk
         else None
     )
     key = jax.random.PRNGKey(seed)
     rings = program.init_rings() if is_lags else None
+    tapc = ROUND_TAPS.init_counters() if taps else None
     cols = ([], []) if not is_lags else ([], [], [])
+    rows = []
     for lo in range(0, T, chunk):
         hi = min(lo + chunk, T)
         step_run = run if hi - lo == chunk else run_tail
         xs = jnp.asarray(packed[lo:hi])  # one chunk of rows on device
         if is_lags:
-            state, key, rings, *outs = step_run(state, key, rings, xs)
+            if taps:
+                state, key, rings, tapc, *outs = step_run(state, key, rings, tapc, xs)
+            else:
+                state, key, rings, *outs = step_run(state, key, rings, xs)
         else:
-            state, key, *outs = step_run(state, key, xs)
+            if taps:
+                state, key, tapc, *outs = step_run(state, key, tapc, xs)
+            else:
+                state, key, *outs = step_run(state, key, xs)
+        if taps:
+            *outs, row = outs
+            rows.append(row)
         for c, o in zip(cols, outs):
             c.append(np.asarray(o))
     if is_lags:
@@ -417,4 +437,9 @@ def replay_packed_stream(
         }
     if rho_out is not None:
         out["rho"] = np.asarray(rho_out)
+    if taps:
+        out["taps"] = {
+            "series": {n: np.concatenate([np.asarray(r[n]) for r in rows]) for n in rows[0]},
+            "counters": {n: float(v) for n, v in tapc.items()},
+        }
     return out

@@ -1,11 +1,17 @@
 """Metrics-spine tests: in-scan taps bit-identity against the committed
-goldens, windowed aggregates hand-checked, JSONL run-log round-trip, the
-latency histogram, the results layout, and the check_bench gate edges.
+goldens, the client-axis sketch layer (dense-recompute oracle, psum-merge
+property, placement invariance, fairness series), chunked carry_key+taps
+streams, windowed aggregates hand-checked, JSONL run-log round-trip (schema
+v2: timestamps, alerts, NaN sanitation, overwrite protection), the alert
+detector, the run-log explorer CLI, the latency histogram, the results
+layout, and the check_bench gate edges.
 
 The taps contract under test: ``taps=True`` adds one trailing
 ``{"series", "counters"}`` payload to every runner's outputs and changes
 NOTHING else — the masks/lags/state streams must still equal
 ``tests/golden/round_program_goldens.npz`` bit-for-bit, in every placement.
+``sketch=<SketchSpec>`` extends that contract: the payload gains a
+``"sketches"`` stream and every other output still matches the goldens.
 """
 import importlib.util
 import json
@@ -18,25 +24,38 @@ import numpy as np
 import pytest
 
 from repro.configs import FLConfig
+from repro.core.fairness import gini as gini_exact
+from repro.core.fairness import jain_index
+from repro.core.fairness import top_share as top_share_exact
 from repro.core.volatility import CompletionLag, make_volatility, paper_success_rates
 from repro.engine.round_program import RoundProgram
 from repro.engine.scan_sim import async_selection_sim, scan_selection_sim
 from repro.engine.sharded import sharded_selection_sim
 from repro.obs import (
     ROUND_TAPS,
+    SKETCH_FIELDS,
+    AlertRules,
     LatencyHistogram,
     Reporter,
     RunLog,
+    SketchSpec,
     SpanTimer,
     TapRegistry,
     TapSpec,
+    detect_alerts,
+    fairness_series,
+    iter_alerts,
+    merge_sketches,
     read_runlog,
+    sketch_from_dense,
     stage,
     validate_records,
     window_reduce,
 )
 from repro.obs import paths as obs_paths
+from repro.obs.alerts import Alert
 from repro.obs.runlog import SCHEMA_VERSION, iter_metrics
+from repro.obs.sketches import FAIRNESS_SERIES, lag_bins, region_ids
 from repro.scenarios.replay import pack_trace
 
 K, k, T, SEED, FRAC = 128, 16, 50, 3, 0.5
@@ -173,19 +192,505 @@ class TestTapsBitIdentity:
         np.testing.assert_array_equal(np.asarray(stale_off), np.asarray(stale_on))
         np.testing.assert_array_equal(np.asarray(st_off.sel_counts), np.asarray(st_on.sel_counts))
 
-    def test_taps_with_carry_key_raises(self):
+    def test_sketch_validation(self):
         fl = FLConfig(K=32, k=4, rounds=8, scheme="e3cs", quota_frac=FRAC)
         pm = RoundProgram(fl=fl, vol=make_volatility("bernoulli", paper_success_rates(32)),
                           rho=paper_success_rates(32))
-        with pytest.raises(ValueError, match="carry_key"):
-            pm.build_runner(taps=True, carry_key=True)
+        with pytest.raises(ValueError, match="taps"):
+            pm.build_runner(sketch=SketchSpec(window=4))
+        with pytest.raises(ValueError, match="one-shot"):
+            pm.build_runner(taps=True, carry_key=True, sketch=SketchSpec(window=4))
+
+
+def _sync_program(mesh=None, allocator="sort"):
+    """The exact composition behind the sync goldens (``scan_selection_sim``
+    / ``sharded_selection_sim`` defaults at K,k,T,SEED,FRAC)."""
+    fl = FLConfig(K=K, k=k, rounds=T, scheme="e3cs", quota="const", quota_frac=FRAC,
+                  eta=0.5, sampler="plackett_luce", allocator=allocator)
+    rho = jnp.asarray(paper_success_rates(K))
+    vol = make_volatility("bernoulli", rho, stickiness=0.8, seed=SEED)
+    return RoundProgram(fl=fl, vol=vol, rho=rho, mesh=mesh)
+
+
+def _async_program(mesh=None, K_=K, k_=k):
+    fl = FLConfig(K=K_, k=k_, rounds=T, scheme="e3cs", quota="const", quota_frac=FRAC,
+                  eta=0.5, sampler="plackett_luce",
+                  allocator="bisect" if mesh is not None else "sort")
+    rho = paper_success_rates(K_)
+    lag = CompletionLag(make_volatility("bernoulli", rho), p_late=0.7, lag_decay=0.5, max_lag=2)
+    return RoundProgram(fl=fl, vol=lag, rho=rho, staleness=2, alpha=0.5, mesh=mesh)
+
+
+class TestSketches:
+    """The client-axis sketch layer: golden bit-identity, the dense-state
+    oracle, psum-merge placement properties, and the fairness series."""
+
+    W = 10
+    SPEC = SketchSpec(window=W, count_bins=8, prob_bins=10, n_regions=4)
+
+    # -- golden bit-identity ------------------------------------------------
+
+    def test_sync_d1_sketch_on_matches_golden(self):
+        run, s0 = _sync_program().build_runner(outputs="full", taps=True, sketch=self.SPEC)
+        _, masks, xs, ps, _, payload = run(s0, jax.random.PRNGKey(SEED), jnp.zeros((T, 0), jnp.float32))
+        assert np.array_equal(pack_trace(np.asarray(masks)), GOLD["sync_d1_e3cs_masks"])
+        assert set(payload["sketches"]) == set(SKETCH_FIELDS)
+        assert all(np.asarray(v).shape[0] == T // self.W for v in payload["sketches"].values())
+        # oracle: every emission row equals the dense recompute at that round
+        self._check_emissions(payload["sketches"], np.asarray(masks), np.asarray(xs),
+                              np.asarray(ps), None, K)
+
+    def test_sync_d8_sketch_on_matches_golden(self, mesh8):
+        run, s0 = _sync_program(mesh8, allocator="bisect").build_runner(
+            outputs="full", taps=True, sketch=self.SPEC
+        )
+        _, masks, xs, ps, _, payload = run(s0, jax.random.PRNGKey(SEED), jnp.zeros((T, 0), jnp.float32))
+        masks = np.asarray(masks)[:, :K]
+        assert np.array_equal(pack_trace(masks), GOLD["sync_d8_e3cs_masks"])
+        self._check_emissions(payload["sketches"], np.asarray(masks), np.asarray(xs)[:, :K],
+                              np.asarray(ps)[:, :K], None, K)
+
+    def test_async_d1_sketch_on_matches_golden(self):
+        run, s0 = _async_program().build_runner(outputs="full", taps=True, sketch=self.SPEC)
+        _, masks, lags, ps, _, _, payload = run(s0, jax.random.PRNGKey(SEED), jnp.zeros((T, 0), jnp.float32))
+        assert np.array_equal(pack_trace(np.asarray(masks)), GOLD["async_d1_e3cs_masks"])
+        assert np.array_equal(np.asarray(lags).astype(np.int8), GOLD["async_d1_e3cs_lags"])
+        self._check_emissions(payload["sketches"], np.asarray(masks), None,
+                              np.asarray(ps), np.asarray(lags), K)
+
+    def _check_emissions(self, sketches, masks, xs, ps, lags, K_true, active=None):
+        """Every emitted sketch row equals ``sketch_from_dense`` of the run's
+        own dense per-client state at that emission round."""
+        spec, W = self.SPEC, self.W
+        Kp = masks.shape[1]
+        region = region_ids(spec, K_true)
+        if Kp != K_true:  # shard padding: ids pad with 0, active mask excludes
+            region = np.pad(region, (0, Kp - K_true))
+        act = np.asarray(active, np.float64) if active is not None else (
+            (np.arange(Kp) < K_true).astype(np.float64)
+        )
+        L = lag_bins(None if lags is None else 2)
+        x_ontime = xs if lags is None else (lags == 0).astype(np.float64)
+        code = (1 - x_ontime).astype(np.int64) if lags is None else np.where(
+            lags < 0, L - 1, np.clip(lags, 0, L - 2)
+        ).astype(np.int64)
+        n_emits = T // W
+        for i in range(n_emits):
+            t = (i + 1) * W  # emission fires on the post-increment round counter
+            counts = masks[:t].sum(0)
+            cum = (masks[:t] * x_ontime[:t]).sum(0)
+            lag_hist = np.zeros(L)
+            np.add.at(lag_hist, code[:t].reshape(-1), (masks[:t]).reshape(-1))
+            want = sketch_from_dense(spec, counts, ps[t - 1], cum, lag_hist, region, act)
+            for n in SKETCH_FIELDS:
+                np.testing.assert_allclose(
+                    np.asarray(sketches[n][i], np.float64), want[n], rtol=1e-6,
+                    err_msg=f"{n} @ emission {i}",
+                )
+
+    # -- placement invariance ----------------------------------------------
+
+    def test_sync_mesh1_sketch_matches_dense_golden(self):
+        """mesh=1 completes the sync golden matrix: bit-identical to the
+        dense bisect engine (``sync_d1_e3cs_bisect_masks``), sketch stream
+        byte-for-byte included."""
+        from repro.launch.mesh import make_host_mesh
+
+        def go(mesh):
+            run, s0 = _sync_program(mesh, allocator="bisect").build_runner(
+                outputs="full", taps=True, sketch=self.SPEC
+            )
+            _, masks, *_, payload = run(s0, jax.random.PRNGKey(SEED), jnp.zeros((T, 0), jnp.float32))
+            return np.asarray(masks), payload
+
+        m1, p1 = go(None)
+        mm, pm_ = go(make_host_mesh(1))
+        assert np.array_equal(pack_trace(m1), GOLD["sync_d1_e3cs_bisect_masks"])
+        np.testing.assert_array_equal(m1, mm)
+        for n in SKETCH_FIELDS:
+            np.testing.assert_array_equal(
+                np.asarray(p1["sketches"][n]), np.asarray(pm_["sketches"][n]), err_msg=n
+            )
+
+    def test_async_mesh1_sketch_matches_dense(self):
+        """Generated e3cs async: mesh=1 emits the byte-identical sketch
+        stream to the dense engine (the async mesh=1 cell of the matrix)."""
+        from repro.launch.mesh import make_host_mesh
+
+        fl = FLConfig(K=K, k=k, rounds=T, scheme="e3cs", quota_frac=FRAC, allocator="bisect")
+
+        def go(mesh):
+            pm = RoundProgram(fl=fl, vol=_lag_model(), rho=_rho(), staleness=2, alpha=0.5, mesh=mesh)
+            run, s0 = pm.build_runner(outputs="lean", taps=True, sketch=self.SPEC)
+            *_, payload = run(s0, jax.random.PRNGKey(SEED), jnp.zeros((T, 0), jnp.float32))
+            return payload
+
+        p1, pm_ = go(None), go(make_host_mesh(1))
+        for n in SKETCH_FIELDS:
+            np.testing.assert_array_equal(
+                np.asarray(p1["sketches"][n]), np.asarray(pm_["sketches"][n]), err_msg=n
+            )
+
+    def test_sketch_stream_placement_invariant(self, mesh8):
+        """Local and mesh=8 emit the byte-identical sketch stream under a
+        replayed lag trace (the composition where the PRNG paths coincide;
+        generated volatility draws shard-local randomness)."""
+        lp = GOLD["lag_trace_packed"]
+        fl = FLConfig(K=K, k=k, rounds=T, scheme="random", quota_frac=FRAC)
+
+        def go(mesh):
+            pm = RoundProgram(fl=fl, vol=_lag_model(), rho=_rho(), override="packed_lags",
+                              staleness=2, alpha=0.5, mesh=mesh)
+            run, s0 = pm.build_runner(outputs="lean", taps=True, sketch=self.SPEC)
+            *_, payload = run(s0, jax.random.PRNGKey(SEED), jnp.asarray(lp))
+            return payload
+
+        p1, p8 = go(None), go(mesh8)
+        for n in SKETCH_FIELDS:
+            np.testing.assert_array_equal(
+                np.asarray(p1["sketches"][n]), np.asarray(p8["sketches"][n]), err_msg=n
+            )
+        for name in ROUND_TAPS.gauge_names():
+            np.testing.assert_allclose(
+                np.asarray(p1["series"][name]), np.asarray(p8["series"][name]), atol=1e-4, err_msg=name
+            )
+
+    def test_sharded_sketch_merge_property_ragged_async(self, mesh8):
+        """Satellite: the psum-merged D=8 sketch of a ragged-K async run
+        equals the dense recompute of that run's own (T, K_pad) streams —
+        the merge is exact addition, shard padding excluded via the active
+        mask."""
+        K_r, k_r = 130, 12  # K_pad = 136, ragged final shard
+        pm = _async_program(mesh8, K_=K_r, k_=k_r)
+        run, s0 = pm.build_runner(outputs="full", taps=True, sketch=self.SPEC)
+        _, masks, lags, ps, _, _, payload = run(
+            s0, jax.random.PRNGKey(SEED), jnp.zeros((T, 0), jnp.float32)
+        )
+        masks, lags, ps = np.asarray(masks), np.asarray(lags), np.asarray(ps)
+        Kp = masks.shape[1]
+        assert Kp == 136
+        spec, W = self.SPEC, self.W
+        region = np.pad(region_ids(spec, K_r), (0, Kp - K_r))
+        act = (np.arange(Kp) < K_r).astype(np.float64)
+        L = lag_bins(2)
+        x_ontime = (lags == 0).astype(np.float64)
+        code = np.where(lags < 0, L - 1, np.clip(lags, 0, L - 2)).astype(np.int64)
+        for i in range(T // W):
+            t = (i + 1) * W
+            counts = masks[:t].sum(0)
+            cum = (masks[:t] * x_ontime[:t]).sum(0)
+            lag_hist = np.zeros(L)
+            np.add.at(lag_hist, code[:t].reshape(-1), masks[:t].reshape(-1))
+            want = sketch_from_dense(spec, counts, ps[t - 1], cum, lag_hist, region, act)
+            for n in SKETCH_FIELDS:
+                np.testing.assert_allclose(
+                    np.asarray(payload["sketches"][n][i], np.float64), want[n], rtol=1e-6,
+                    err_msg=f"{n} @ emission {i}",
+                )
+
+    def test_merge_sketches_is_addition(self):
+        rng = np.random.default_rng(0)
+        a = {n: rng.random((3, 4)) for n in SKETCH_FIELDS}
+        b = {n: rng.random((3, 4)) for n in SKETCH_FIELDS}
+        m = merge_sketches(a, b)
+        for n in SKETCH_FIELDS:
+            np.testing.assert_allclose(m[n], a[n] + b[n])
+
+    # -- fairness series ----------------------------------------------------
+
+    def test_fairness_series_uniform_fleet(self):
+        """Uniform counts: Jain 1, Gini 0, top-decile share = 10%, region
+        skew 1 — all exact, whatever the bucketing."""
+        spec = SketchSpec(window=1, count_bins=8, prob_bins=4, n_regions=4)
+        Kn = 200
+        counts = np.full(Kn, 5.0)
+        region = region_ids(spec, Kn)
+        row = sketch_from_dense(spec, counts, np.full(Kn, 0.5), counts, np.zeros(2), region)
+        stream = {n: np.asarray(v)[None] for n, v in row.items()}
+        fair = fairness_series(stream)
+        assert fair["jain"][0] == pytest.approx(1.0)
+        assert fair["gini"][0] == pytest.approx(0.0, abs=1e-12)
+        assert fair["top_decile_share"][0] == pytest.approx(0.1)
+        assert fair["region_cep_skew"][0] == pytest.approx(1.0)
+
+    def test_fairness_series_vs_exact_oracles(self):
+        """On a real run: sketch Jain is *exact* (streamed moments), grouped
+        Gini / top-decile track the ``core.fairness`` exact twins."""
+        run, s0 = _sync_program().build_runner(outputs="full", taps=True, sketch=self.SPEC)
+        state, masks, *_ , payload = run(s0, jax.random.PRNGKey(SEED), jnp.zeros((T, 0), jnp.float32))
+        fair = fairness_series(payload["sketches"])
+        masks = np.asarray(masks)
+        for i in range(T // self.W):
+            counts = jnp.asarray(masks[: (i + 1) * self.W].sum(0))
+            assert fair["jain"][i] == pytest.approx(float(jain_index(counts)), rel=1e-5)
+            assert abs(fair["gini"][i] - float(gini_exact(counts))) < 0.12
+            assert abs(fair["top_decile_share"][i] - float(top_share_exact(counts))) < 0.12
+        assert np.all(fair["region_cep_skew"] >= 1.0)
+
+    def test_spec_validation(self):
+        with pytest.raises(ValueError):
+            SketchSpec(window=0)
+        with pytest.raises(ValueError):
+            SketchSpec(count_bins=1)
+        with pytest.raises(ValueError):
+            SketchSpec(n_regions=0)
+        with pytest.raises(ValueError):
+            SketchSpec(n_regions=2, regions=np.array([0, 1, 2]))
+        with pytest.raises(ValueError):
+            region_ids(SketchSpec(n_regions=2, regions=np.array([0, 1])), K=3)
+        np.testing.assert_array_equal(region_ids(SketchSpec(n_regions=2), 4), [0, 0, 1, 1])
+
+
+class TestCarryKeyTapsStreams:
+    """Satellite: ``taps=True`` + ``carry_key=True`` threads the counter
+    pytree through the streamed carry — chunked horizons emit the bit-
+    identical tap stream to one-shot runs, in every placement."""
+
+    C = 10  # chunk length; T = 50 -> 5 chunks
+
+    def _drive_chunks(self, pm, async_mode, mesh=False):
+        run_full, s0 = pm.build_runner(outputs="lean", carry_key=True, taps=True)
+        run_chunk, _ = pm.build_runner(outputs="lean", carry_key=True, taps=True,
+                                       scan_length=self.C)
+        key = jax.random.PRNGKey(SEED)
+        tapc = ROUND_TAPS.init_counters()
+        xs = jnp.zeros((T, 0), jnp.float32)
+        if async_mode:
+            rings = pm.init_rings()
+            state, key_f, rings_f, tapc_f, *outs_f, row_f = run_full(s0, key, rings, tapc, xs)
+            state_c, key_c, rings_c, tapc_c = s0, key, pm.init_rings(), ROUND_TAPS.init_counters()
+            rows = []
+            for c in range(T // self.C):
+                state_c, key_c, rings_c, tapc_c, *outs, row = run_chunk(
+                    state_c, key_c, rings_c, tapc_c, jnp.zeros((self.C, 0), jnp.float32)
+                )
+                rows.append(row)
+        else:
+            state, key_f, tapc_f, *outs_f, row_f = run_full(s0, key, tapc, xs)
+            state_c, key_c, tapc_c = s0, key, ROUND_TAPS.init_counters()
+            rows = []
+            for c in range(T // self.C):
+                state_c, key_c, tapc_c, *outs, row = run_chunk(
+                    state_c, key_c, tapc_c, jnp.zeros((self.C, 0), jnp.float32)
+                )
+                rows.append(row)
+        series_f = {n: np.asarray(row_f[n]) for n in ROUND_TAPS.gauge_names()}
+        series_c = {n: np.concatenate([np.asarray(r[n]) for r in rows]) for n in ROUND_TAPS.gauge_names()}
+        for n in ROUND_TAPS.gauge_names():
+            np.testing.assert_array_equal(series_f[n], series_c[n], err_msg=n)
+        for n, v in tapc_f.items():
+            assert float(v) == float(tapc_c[n]), n
+        np.testing.assert_array_equal(np.asarray(state.sel_counts), np.asarray(state_c.sel_counts))
+
+    def test_local_sync_chunked_equals_oneshot(self):
+        self._drive_chunks(_sync_program(), async_mode=False)
+
+    def test_local_async_chunked_equals_oneshot(self):
+        self._drive_chunks(_async_program(), async_mode=True)
+
+    def test_sharded_sync_chunked_equals_oneshot(self, mesh8):
+        self._drive_chunks(_sync_program(mesh8, allocator="bisect"), async_mode=False)
+
+    def test_replay_packed_stream_emits_taps(self, tmp_path):
+        """K=big horizons replayed in chunks emit the same telemetry as the
+        one-shot in-memory run."""
+        from repro.scenarios import replay_packed_stream, save_packed_trace
+
+        lp = GOLD["lag_trace_packed"]
+        path = save_packed_trace(str(tmp_path / "lags"), lp, K, kind="lags")
+        out = replay_packed_stream("e3cs", path, k, chunk=16, frac=FRAC, seed=SEED, taps=True)
+        ref = async_selection_sim(
+            "e3cs", K=K, k=k, T=T, frac=FRAC, seed=SEED, staleness=2, alpha=0.5,
+            packed_lag_override=lp, outputs="lean", taps=True,
+        )
+        for n in ROUND_TAPS.gauge_names():
+            np.testing.assert_array_equal(
+                out["taps"]["series"][n], ref["taps"]["series"][n], err_msg=n
+            )
+        for n, v in out["taps"]["counters"].items():
+            assert v == pytest.approx(ref["taps"]["counters"][n], rel=1e-6), n
+
+
+class TestAlerts:
+    def test_severity_validation(self):
+        with pytest.raises(ValueError):
+            Alert("outage", "apocalyptic", {})
+
+    def test_outage_fires_on_windowed_collapse(self):
+        on_time = np.concatenate([np.full(40, 10.0), np.full(10, 1.0)])
+        alerts = detect_alerts(series={"on_time": on_time}, rules=AlertRules(window=10))
+        assert [a.rule for a in alerts] == ["outage"]
+        assert alerts[0].severity == "critical"
+        assert alerts[0].detail["window"] == 4
+        # healthy series: silent
+        assert detect_alerts(series={"on_time": np.full(50, 10.0)}, rules=AlertRules(window=10)) == []
+
+    def test_starvation_fires_on_fairness_thresholds(self):
+        fair = {"jain": np.array([0.9, 0.3]), "top_decile_share": np.array([0.2, 0.8])}
+        alerts = detect_alerts(fairness=fair)
+        assert sorted(a.rule for a in alerts) == ["starvation", "starvation"]
+        assert all(a.severity == "warn" for a in alerts)
+        assert detect_alerts(fairness={"jain": np.array([0.8]), "top_decile_share": np.array([0.3])}) == []
+
+    def test_drift_fires_on_cohort_and_cap(self):
+        alerts = detect_alerts(
+            series={"selected": np.array([16.0, 16.0, 15.0]), "capped_frac": np.full(10, 0.9)},
+            expected_selected=16,
+            rules=AlertRules(window=5),
+        )
+        rules = sorted(a.rule for a in alerts)
+        assert rules == ["drift", "drift"]
+        sel = next(a for a in alerts if a.detail.get("metric") == "selected")
+        assert sel.severity == "critical" and sel.detail["first_round"] == 2
+
+    def test_empty_inputs_silent(self):
+        assert detect_alerts() == []
+        assert detect_alerts(series={}, fairness={}) == []
+
+
+class TestRunLogV2:
+    def test_alert_event_round_trip(self, tmp_path):
+        path = str(tmp_path / "a.jsonl")
+        with RunLog("unit", path=path) as log:
+            log.alert("outage", "critical", {"window": 3}, "credit fell")
+            log.summary(done=True)
+        records = read_runlog(path)
+        validate_records(records)
+        alerts = list(iter_alerts(records))
+        assert len(alerts) == 1
+        assert alerts[0]["rule"] == "outage" and alerts[0]["severity"] == "critical"
+        assert all("ts" in r for r in records)
+
+    def test_nan_sanitized_everywhere(self, tmp_path):
+        """Satellite regression: NaN/inf inside numpy scalars AND arrays
+        serialize as null — the file must contain no bare NaN tokens."""
+        path = str(tmp_path / "nan.jsonl")
+        with RunLog("unit", path=path) as log:
+            log.summary(
+                a=np.float64("nan"), b=float("inf"),
+                c=np.array([1.0, np.nan, np.inf]), d={"deep": jnp.float32(np.nan)},
+            )
+        raw = open(path).read()
+        assert "NaN" not in raw and "Infinity" not in raw
+        data = read_runlog(path)[-1]["data"]
+        assert data["a"] is None and data["b"] is None
+        assert data["c"] == [1.0, None, None]
+        assert data["d"]["deep"] is None
+
+    def test_overwrite_protection(self, tmp_path):
+        """Satellite: a rerun under the same name refuses to truncate the
+        existing log unless overwrite=True; unique=True writes a numbered
+        sibling with the header run name unchanged."""
+        path = str(tmp_path / "r.jsonl")
+        RunLog("r", path=path).close()
+        with pytest.raises(FileExistsError):
+            RunLog("r", path=path)
+        log2 = RunLog("r", path=path, unique=True)
+        assert log2.path == str(tmp_path / "r.2.jsonl")
+        log2.close()
+        assert read_runlog(log2.path)[0]["run"] == "r"  # header name stays stable
+        log3 = RunLog("r", path=path, overwrite=True)
+        assert log3.path == path
+        log3.close()
+
+    def test_v1_records_still_validate(self):
+        v1 = [
+            {"schema": 1, "event": "header", "run": "x", "name": "x", "config": {}},
+            {"schema": 1, "event": "summary", "run": "x", "data": {}},
+        ]
+        validate_records(v1)  # no ts required at v1
+        with pytest.raises(ValueError, match="schema >= 2"):
+            validate_records([
+                {"schema": 1, "event": "header", "run": "x", "name": "x", "config": {}},
+                {"schema": 1, "event": "alert", "run": "x", "rule": "r", "severity": "warn", "detail": {}},
+            ])
+        with pytest.raises(ValueError, match="ts"):
+            validate_records([
+                {"schema": 2, "event": "header", "run": "x", "name": "x", "config": {}},
+            ])
+
+
+class TestObsExplore:
+    @pytest.fixture()
+    def explorer(self):
+        return _load_module("scripts/obs_explore.py", "obs_explore")
+
+    def _write_log(self, path, run, jain_last=0.8, alert=False):
+        with RunLog(run, config={"K": 8}, path=path) as log:
+            log.metrics(
+                "fairness",
+                window_reduce({"jain": np.array([0.5, jain_last])}, window=1),
+                better={"jain": "higher"},
+            )
+            if alert:
+                log.alert("starvation", "warn", {"jain": jain_last}, "low jain")
+            log.summary(rounds_per_s=10.0)
+        return path
+
+    def test_summarize_and_fairness(self, tmp_path, capsys, explorer):
+        self._write_log(str(tmp_path / "a.jsonl"), "a", alert=True)
+        assert explorer.main(["summarize", str(tmp_path)]) == 0
+        text = capsys.readouterr().out
+        assert "== a" in text and "ALERT [warn] starvation" in text and "fairness.jain" in text
+        assert explorer.main(["fairness", str(tmp_path / "a.jsonl"), "--csv"]) == 0
+        csv = capsys.readouterr().out.strip().splitlines()
+        assert csv[0] == "run,stream,metric,window,p50"
+        assert csv[1].startswith("a,fairness,jain,0,")
+
+    def test_diff_pairs_by_header_name(self, tmp_path, capsys, explorer):
+        a_dir, b_dir = tmp_path / "A", tmp_path / "B"
+        a_dir.mkdir(), b_dir.mkdir()
+        self._write_log(str(a_dir / "x.jsonl"), "run1", jain_last=0.8)
+        # same header name, different filename: still paired
+        self._write_log(str(b_dir / "y.jsonl"), "run1", jain_last=0.2, alert=True)
+        rc = explorer.main(["diff", str(a_dir), str(b_dir), "--strict"])
+        text = capsys.readouterr().out
+        assert rc == 1  # jain dropped 75% under direction "higher" -> gated regression
+        assert "REGRESSED" in text and "NEW ALERT" in text
+        # tolerant run: reported but exit 0 without --strict
+        assert explorer.main(["diff", str(a_dir), str(b_dir)]) == 0
+
+    def test_output_file(self, tmp_path, capsys, explorer):
+        self._write_log(str(tmp_path / "a.jsonl"), "a")
+        out = str(tmp_path / "rep" / "report.txt")
+        assert explorer.main(["summarize", str(tmp_path / "a.jsonl"), "-o", out]) == 0
+        capsys.readouterr()
+        assert "== a" in open(out).read()
+
+
+class TestFairnessExactMetrics:
+    """``core.fairness.gini`` / ``top_share`` — the dense oracles the sketch
+    stream approximates."""
+
+    def test_gini_edge_cases(self):
+        assert float(gini_exact(jnp.full(10, 3.0))) == pytest.approx(0.0, abs=1e-6)
+        # one client holds everything: G -> (K-1)/K
+        one = jnp.zeros(10).at[3].set(5.0)
+        assert float(gini_exact(one)) == pytest.approx(0.9, abs=1e-6)
+
+    def test_top_share_edge_cases(self):
+        assert float(top_share_exact(jnp.full(10, 2.0), 0.1)) == pytest.approx(0.1, rel=1e-5)
+        one = jnp.zeros(10).at[3].set(5.0)
+        assert float(top_share_exact(one, 0.1)) == pytest.approx(1.0, rel=1e-5)
 
 
 class TestTapRegistry:
     def test_round_taps_schema(self):
+        # the default "round" group is exactly the in-scan gauges — the
+        # fairness group (host-derived from sketches) must not leak into it
         assert set(ROUND_TAPS.gauge_names()) == {"selected", "on_time", "stale", "sigma", "capped_frac"}
         assert ROUND_TAPS.directions()["selected"] == "equal"
         assert ROUND_TAPS.directions()["on_time"] == "higher"
+        assert set(ROUND_TAPS.gauge_names(group=None)) == {
+            "selected", "on_time", "stale", "sigma", "capped_frac",
+            "jain", "gini", "top_decile_share", "region_cep_skew",
+        }
+        assert set(ROUND_TAPS.gauge_names(group="fairness")) == set(FAIRNESS_SERIES)
+        fair_dirs = ROUND_TAPS.directions("fairness")
+        assert fair_dirs["jain"] == "higher"
+        assert fair_dirs["gini"] == "lower"
+        assert fair_dirs["top_decile_share"] == "lower"
+        assert fair_dirs["region_cep_skew"] == "none"
 
     def test_spec_validation(self):
         with pytest.raises(ValueError):
