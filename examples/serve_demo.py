@@ -1,62 +1,89 @@
-"""Serving demo: batched prefill + sampled decode on any assigned arch's
-smoke variant — exercising the same prefill/decode paths the multi-pod
-dry-run lowers at production scale (incl. the Mamba2 O(1)-state decode and
-MLA latent cache).
+"""Serving demo: the selection engine behind a real socket, end to end.
 
-    PYTHONPATH=src python examples/serve_demo.py --arch deepseek-v3-671b
-    PYTHONPATH=src python examples/serve_demo.py --arch mamba2-130m --gen 64
+Stands up a ``SelectionServer`` (``repro.serve``) on the loopback, then acts
+as two tenant FL coordinators: admit two jobs of different shapes, drive
+volatile rounds through the streaming batcher, checkpoint, **kill the
+server**, restore a new one from disk mid-horizon, and finish — printing
+the selection overlap so you can see the restored stream is the same one.
+
+Every byte crosses a TCP socket using the stdlib-only wire protocol of
+``docs/serving.md`` — this demo is exactly what an external coordinator
+would do, minus the model training between ticks.
+
+    PYTHONPATH=src python examples/serve_demo.py
+    PYTHONPATH=src python examples/serve_demo.py --rounds 40 --staleness 2
 """
 import argparse
-import time
+import tempfile
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config, smoke_variant
-from repro.models import build_model
-from repro.models.transformer import vlm_positions
+from repro.serve import (
+    SelectionServer,
+    ServeClient,
+    SlotEngine,
+    latest_server_checkpoint,
+    load_server,
+)
+
+
+def volatile_round(rng, K, S):
+    """Completion lags for one round: 0 = on time, 1..S = late, -1 = never."""
+    lag = rng.integers(0, S + 2, K).astype(np.int32)
+    return np.where(lag > S, -1, lag)
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="gemma-2b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=48)
-    ap.add_argument("--gen", type=int, default=24)
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rounds", type=int, default=24)
+    ap.add_argument("--staleness", type=int, default=2, help="late-credit ring depth S")
     args = ap.parse_args()
+    S, half = args.staleness, args.rounds // 2
+    rng = np.random.default_rng(0)
+    ckpt_dir = tempfile.mkdtemp(prefix="serve_demo_")
 
-    cfg = smoke_variant(get_config(args.arch))
-    model = build_model(cfg)
-    rng = jax.random.PRNGKey(0)
-    params, _ = model.init(rng)
-    B, S = args.batch, args.prompt_len
+    def fresh_engine():
+        return SlotEngine(K_max=512, k_cap=32, staleness=S, buckets=(4, 8))
 
-    batch = {"tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab, jnp.int32)}
-    if cfg.family == "vlm":
-        batch["patch_embeds"] = jax.random.normal(rng, (B, cfg.n_patches, cfg.d_patch), jnp.float32)
-        batch["positions"] = vlm_positions(cfg, B, S + cfg.n_patches)
-    if cfg.family == "encdec":
-        batch["frames"] = jax.random.normal(rng, (B, cfg.enc_len, cfg.d_model), jnp.float32)
+    print(f"=== first life: 2 tenants, {half} rounds each ===")
+    srv = SelectionServer(fresh_engine(), ckpt_dir=ckpt_dir, ckpt_every=20)
+    srv.start()
+    host, port = srv.address
+    print(f"server on {host}:{port}, checkpoints -> {ckpt_dir}")
 
-    t0 = time.time()
-    logits, caches = jax.jit(model.prefill)(params, batch, max_len=S + args.gen + 8)
-    jax.block_until_ready(logits)
-    print(f"[{cfg.name}] prefill B={B} S={S}: {time.time()-t0:.2f}s")
+    c = ServeClient(host, port)
+    jobs = [c.admit(K=384, k=24, seed=1), c.admit(K=128, k=8, seed=2)]
+    Ks = {jobs[0]: 384, jobs[1]: 128}
+    cohorts = {j: [] for j in jobs}
+    for t in range(half):
+        for j in jobs:
+            out = c.tick(j, lags=volatile_round(rng, Ks[j], S))
+            cohorts[j].append(out["cohort"])
+    print(f"round {half - 1} cohort sizes:",
+          {j: len(cohorts[j][-1]) for j in jobs})
+    print("forced checkpoint:", c.checkpoint())
+    c.close()
+    srv.kill()  # crash, not drain: whatever wasn't checkpointed is gone
+    print("server killed (no drain)")
 
-    decode = jax.jit(model.decode)
-    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
-    toks = [tok]
-    t0 = time.time()
-    for i in range(args.gen):
-        logits, caches = decode(params, tok, caches)
-        tok = jax.random.categorical(jax.random.fold_in(rng, i), logits[:, -1] / 0.8)[:, None].astype(jnp.int32)
-        toks.append(tok)
-    jax.block_until_ready(tok)
-    dt = time.time() - t0
-    gen = np.concatenate([np.asarray(t) for t in toks], 1)
-    print(f"decode: {args.gen} steps, {B*args.gen/dt:.1f} tok/s (incl. first-call compile)")
-    print("sample:", gen[0, :16].tolist())
+    print(f"=== second life: restore and finish the horizon ===")
+    stem = latest_server_checkpoint(ckpt_dir)
+    engine, step = load_server(stem)
+    print(f"restored {stem} at {step} served rounds, jobs {sorted(engine.jobs)}")
+    with SelectionServer(engine, ckpt_dir=ckpt_dir) as srv2:
+        c = ServeClient.connect(srv2.address)
+        for t in range(half, args.rounds):
+            for j in jobs:
+                out = c.tick(j, lags=volatile_round(rng, Ks[j], S))
+                cohorts[j].append(out["cohort"])
+        stats = c.stats()
+        c.close()
+    print(f"finished: {args.rounds} rounds/job, second-life stats {stats['stats']}")
+    for j in jobs:
+        uniq = len({i for coh in cohorts[j] for i in coh})
+        print(f"job {j}: K={Ks[j]}, {uniq} distinct clients selected across the horizon")
+    print("(restart is bit-identical: tests/test_serve.py pins cohort equality "
+          "against an uninterrupted run)")
 
 
 if __name__ == "__main__":

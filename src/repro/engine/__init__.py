@@ -27,6 +27,9 @@ from .multi_job import (
     make_multi_job,
     multi_job_init,
     pack_jobs,
+    pad_slots,
+    slot_admit,
+    slot_retire,
 )
 
 __all__ = [
@@ -50,4 +53,7 @@ __all__ = [
     "make_multi_job",
     "multi_job_init",
     "pack_jobs",
+    "pad_slots",
+    "slot_admit",
+    "slot_retire",
 ]

@@ -32,7 +32,16 @@ import numpy as np
 
 from .sharded import masked_prob_alloc
 
-__all__ = ["MultiJobConfig", "MultiJobState", "pack_jobs", "multi_job_init", "make_multi_job"]
+__all__ = [
+    "MultiJobConfig",
+    "MultiJobState",
+    "pack_jobs",
+    "multi_job_init",
+    "make_multi_job",
+    "slot_admit",
+    "slot_retire",
+    "pad_slots",
+]
 
 _EPS = 1e-20
 
@@ -47,6 +56,8 @@ class MultiJobConfig(NamedTuple):
 
 
 class MultiJobState(NamedTuple):
+    """Evolving per-job selector state, packed along the ``J`` axis."""
+
     logw: jax.Array  # (J, K_max) E3CS log-weights
     t: jax.Array  # (J,) int32 round counters
 
@@ -77,8 +88,72 @@ def pack_jobs(
 
 
 def multi_job_init(cfg: MultiJobConfig) -> MultiJobState:
+    """Fresh state for a packed batch: uniform weights, round counters at 0."""
     J, K_max = cfg.active.shape
     return MultiJobState(logw=jnp.zeros((J, K_max), jnp.float32), t=jnp.zeros((J,), jnp.int32))
+
+
+def slot_admit(
+    cfg: MultiJobConfig, slot: int, K: int, k: int, sigma_frac: float, eta: float
+) -> MultiJobConfig:
+    """Claim one slot of a packed batch for a new tenant job.
+
+    Pure row edits on the ``(J,)`` / ``(J, K_max)`` config arrays: the first
+    ``K`` entries of the slot's ``active`` mask go live, the rest stay dead
+    padding, and ``(k, sigma, eta)`` take the job's values.  Because the
+    vmapped ``job_step`` reads every per-job parameter from these arrays (k
+    and sigma stay traced), admitting a job changes *data*, never shapes —
+    the compiled engine step is reused as-is, no recompilation on join.
+    ``sigma_frac`` is the fairness floor as a fraction of the uniform rate
+    ``k/K`` (the convention ``pack_jobs`` uses).
+    """
+    K_max = cfg.active.shape[1]
+    if not (0 < K <= K_max):
+        raise ValueError(f"job population K={K} must be in (0, {K_max}]")
+    if not (0 < k <= K):
+        raise ValueError(f"cohort size k={k} must be in (0, K={K}]")
+    row = (jnp.arange(K_max) < K).astype(jnp.float32)
+    return cfg._replace(
+        k=cfg.k.at[slot].set(k),
+        sigma=cfg.sigma.at[slot].set(sigma_frac * k / K),
+        eta=cfg.eta.at[slot].set(eta),
+        active=cfg.active.at[slot].set(row),
+    )
+
+
+def slot_retire(cfg: MultiJobConfig, slot: int) -> MultiJobConfig:
+    """Release a slot: its ``active`` row goes fully dead (the allocator,
+    sampler and update all mask on it), ready for the next ``slot_admit``."""
+    return cfg._replace(active=cfg.active.at[slot].set(0.0))
+
+
+def pad_slots(cfg: MultiJobConfig, state: MultiJobState, new_J: int):
+    """Grow a packed batch to ``new_J`` slots (returns ``(cfg, state)``).
+
+    The new slots are dead padding (``active == 0``, ``k = 1`` so the traced
+    cohort math stays well-defined); live rows are copied unchanged, so a
+    job's selection stream is bit-identical before and after the growth.
+    Growing changes the ``J`` axis shape — the caller pays one engine
+    recompilation per *distinct* ``new_J``, which is why the serving batcher
+    grows along a fixed bucket ladder (``repro.serve.engines``) instead of
+    one slot at a time.
+    """
+    J, K_max = cfg.active.shape
+    if new_J < J:
+        raise ValueError(f"cannot shrink a batch in place: {J} -> {new_J} slots")
+    if new_J == J:
+        return cfg, state
+    pad = new_J - J
+
+    def grow(a, fill=0):
+        widths = ((0, pad),) + ((0, 0),) * (a.ndim - 1)
+        return jnp.pad(a, widths, constant_values=fill)
+
+    cfg = MultiJobConfig(
+        k=grow(cfg.k, 1), sigma=grow(cfg.sigma), eta=grow(cfg.eta), active=grow(cfg.active)
+    )
+    state = MultiJobState(logw=grow(state.logw), t=grow(state.t))
+    return cfg, state
 
 
 def make_multi_job(k_max: int, n_iters: int = 48, tile: int = 8192):

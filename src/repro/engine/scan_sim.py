@@ -138,7 +138,16 @@ def build_scan_runner(
     ``taps=True`` enables the in-scan telemetry stage: the runner's output
     tuple gains one trailing ``{"series": {gauge: (T,)}, "counters":
     {counter: scalar}}`` payload in the ``repro.obs.ROUND_TAPS`` schema —
-    identical across placements, bit-identical outputs otherwise.
+    identical across placements, bit-identical outputs otherwise.  With
+    ``carry_key=True`` the counters ride the carry instead, so chunked
+    horizons window identically to one-shot ones.
+
+    ``sketch=SketchSpec(...)`` (requires ``taps=True``, one-shot only —
+    incompatible with ``carry_key``) additionally runs the client-axis
+    sketch stage inside the scan: the taps payload gains a ``"sketches"``
+    key of fixed-size mergeable region/count/lag histograms
+    (``repro.obs.sketches``; shard streams merge via ``merge_sketches``,
+    ``fairness_series`` turns them into Jain/Gini/top-share).
 
     Unlike ``scan_selection_sim`` this builder is not memoised: hold on to
     the returned ``run`` to amortise compilation across repeat calls (the

@@ -50,7 +50,7 @@ from repro.engine.multi_job import make_multi_job, multi_job_init, pack_jobs
 from repro.engine.round_program import staleness_ring_step
 from repro.obs import ROUND_TAPS, Reporter, SketchSpec, SpanTimer
 
-__all__ = ["run_service", "run_service_compiled", "run_service_sharded", "main"]
+__all__ = ["run_service", "run_service_compiled", "run_service_sharded", "run_server", "main"]
 
 
 def run_service(
@@ -378,6 +378,56 @@ def run_service_sharded(
     return report
 
 
+def run_server(args, reporter: Reporter):
+    """``--serve``: stand up the real socket front end (``repro.serve``)
+    instead of a self-driving loop.
+
+    ``--mesh D`` serves K-sharded ``RoundProgram`` jobs (``ShardedEngine``);
+    otherwise the vmapped multi-tenant ``SlotEngine`` handles up to the
+    bucket-ladder top in jobs.  Under ``--smoke`` a built-in loopback client
+    admits ``--jobs`` tenants, drives ``--rounds`` rounds each and shuts the
+    server down — the CI-runnable end-to-end path; without it the server
+    runs until interrupted (clients speak ``repro.serve.protocol`` /
+    ``docs/serving.md``).
+    """
+    from repro.serve import SelectionServer, ServeClient, ShardedEngine, SlotEngine
+
+    S = args.staleness if args.async_mode else 0
+    K_max = args.clients or (512 if args.smoke else 4096)
+    if args.mesh is not None:
+        engine = ShardedEngine(D=args.mesh, staleness=S, alpha=args.alpha)
+    else:
+        engine = SlotEngine(K_max=K_max, staleness=S, alpha=args.alpha)
+    srv = SelectionServer(
+        engine, port=args.port, ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every
+    )
+    srv.start()
+    host, port = srv.address
+    print(f"serving {engine.kind} engine (S={S}) on {host}:{port}", flush=True)
+    try:
+        if args.smoke:
+            rng = np.random.default_rng(args.seed)
+            K = min(K_max, 256)
+            with ServeClient.connect(srv.address) as c:
+                jobs = [c.admit(K=K, k=max(1, K // 16), seed=args.seed + j) for j in range(args.jobs)]
+                for _ in range(args.rounds):
+                    for j in jobs:
+                        if S:
+                            lag = rng.integers(0, S + 2, K)
+                            c.tick(j, lags=np.where(lag > S, -1, lag))
+                        else:
+                            c.tick(j, bits=rng.random(K) < 0.7)
+        else:
+            while True:
+                time.sleep(1.0)
+    except KeyboardInterrupt:
+        print("interrupt: draining", flush=True)
+    finally:
+        srv.close()
+        srv.attach_report(reporter)
+    return {"address": f"{host}:{port}", "engine": engine.kind, "staleness": S}
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--jobs", type=int, default=8)
@@ -395,12 +445,24 @@ def main():
     ap.add_argument("--mesh", type=int, default=None, metavar="D",
                     help="serve one K-sharded job over a D-device mesh (forced CPU devices: "
                          "XLA_FLAGS=--xla_force_host_platform_device_count=D)")
+    ap.add_argument("--serve", action="store_true",
+                    help="stand up the real socket front end (repro.serve) instead of a "
+                         "self-driving loop; combine with --mesh for K-sharded jobs, --async "
+                         "for staleness-ring serving, --smoke for a loopback-driven CI run")
+    ap.add_argument("--port", type=int, default=0, help="--serve listen port (0 = ephemeral)")
+    ap.add_argument("--ckpt-dir", type=str, default=None,
+                    help="--serve: checkpoint directory for elastic restart")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="--serve: checkpoint every N served rounds (0 = only on drain)")
     ap.add_argument("--smoke", action="store_true", help="tiny CPU-friendly run")
     args = ap.parse_args()
     if args.smoke:
         args.jobs, args.rounds = 4, 10
     K_max = args.clients or (512 if args.smoke else 4096)
-    if args.mesh is not None:
+    if args.serve:
+        rep = Reporter("serve_front_cli", config=vars(args))
+        report = run_server(args, rep)
+    elif args.mesh is not None:
         K = args.clients or (65_536 if args.smoke else 1_000_000)
         S = args.staleness if args.async_mode else 0
         rep = Reporter("select_serve_sharded_async" if S else "select_serve_sharded", config=vars(args))

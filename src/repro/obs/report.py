@@ -60,6 +60,7 @@ class Reporter:
 
     # -- stdout CSV (harness convention, unchanged) -----------------------
     def emit(self, name: str, us_per_call: float, derived: str = ""):
+        """One ``name,us,derived`` CSV line on stdout (the harness format)."""
         print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
     # -- structured streams ----------------------------------------------
@@ -124,6 +125,7 @@ class Reporter:
         return summary
 
     def grid_row(self, row: dict) -> dict:
+        """Forward one evaluation-grid row to the run log (no-op without one)."""
         if self.log is not None:
             self.log.grid_row(row)
         return row
@@ -149,6 +151,7 @@ class Reporter:
         return path
 
     def close(self) -> None:
+        """Close the run log without writing the bench JSON (see ``save``)."""
         if self.log is not None:
             self.log.close()
 

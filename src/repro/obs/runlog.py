@@ -140,6 +140,7 @@ class RunLog:
 
     # -- record emission -------------------------------------------------
     def event(self, event: str, **payload) -> dict:
+        """Append one schema-checked record; returns it as written."""
         if event not in EVENT_TYPES:
             raise ValueError(f"unknown event type {event!r} (want one of {EVENT_TYPES})")
         missing = [k for k in _REQUIRED[event] if k not in payload]
@@ -161,6 +162,7 @@ class RunLog:
         return self.event("metrics", stream=stream, windows=windows, better=better or {})
 
     def grid_row(self, row: dict) -> dict:
+        """One evaluation-grid row (selector × scenario sweeps)."""
         return self.event("grid_row", row=row)
 
     def histogram(self, name: str, hist) -> dict:
@@ -173,10 +175,12 @@ class RunLog:
         return self.event("alert", rule=rule, severity=severity, detail=detail, message=message)
 
     def summary(self, **data) -> dict:
+        """The run's closing scalar digest (one per log, by convention)."""
         return self.event("summary", data=data)
 
     # -- lifecycle --------------------------------------------------------
     def close(self) -> str:
+        """Flush and close the log file; returns its path. Idempotent."""
         if not self._fh.closed:
             self._fh.close()
         return self.path

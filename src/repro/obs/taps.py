@@ -51,8 +51,10 @@ class TapSpec:
     ``group`` partitions a registry into independent row schemas: the
     ``"round"`` group is the in-scan gauge row the engine emits every round;
     the ``"fairness"`` group names the client-axis series derived host-side
-    from the sketch stream (``repro.obs.sketches.fairness_series``) — same
-    windowing, run-log and gating machinery, different producer.
+    from the sketch stream (``repro.obs.sketches.fairness_series``); the
+    ``"serve"`` group is the per-dispatch row the serving transport samples
+    (``repro.serve.transport``) — same windowing, run-log and gating
+    machinery, different producers.
     """
 
     name: str
@@ -93,9 +95,11 @@ class TapRegistry:
         return name in self.specs
 
     def gauges(self, group: Optional[str] = None) -> Sequence[TapSpec]:
+        """Gauge specs, optionally restricted to one ``group`` (None = all)."""
         return [s for s in self.specs.values() if s.kind == "gauge" and group in (None, s.group)]
 
     def counters(self) -> Sequence[TapSpec]:
+        """Counter specs — monotone accumulators over their source gauges."""
         return [s for s in self.specs.values() if s.kind == "counter"]
 
     def gauge_names(self, group: Optional[str] = "round") -> Tuple[str, ...]:
@@ -149,6 +153,14 @@ ROUND_TAPS = TapRegistry(
             better="lower", group="fairness"),
     TapSpec("region_cep_skew", "gauge", "max per-region on-time credit rate over the fleet average",
             group="fairness"),
+    # serving-loop gauges, sampled host-side per batched dispatch by the
+    # transport (repro.serve.transport) — one row per server tick
+    TapSpec("queue_depth", "gauge", "tick requests waiting in the admission queue",
+            group="serve"),
+    TapSpec("batch_jobs", "gauge", "tenant jobs coalesced into this dispatch",
+            group="serve"),
+    TapSpec("shed", "gauge", "requests shed this tick (queue at capacity)",
+            better="lower", group="serve"),
 )
 
 

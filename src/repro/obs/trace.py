@@ -87,6 +87,7 @@ class LatencyHistogram:
         self.max = 0.0
 
     def observe(self, seconds: float) -> None:
+        """Record one sample; negative or non-finite values are dropped."""
         s = float(seconds)
         if not np.isfinite(s) or s < 0:
             return
@@ -113,6 +114,7 @@ class LatencyHistogram:
 
     @property
     def mean(self) -> float:
+        """Exact mean of the observed samples (NaN when empty)."""
         return self.sum / self.count if self.count else float("nan")
 
     def summary(self) -> Dict[str, float]:
@@ -150,6 +152,7 @@ class SpanTimer:
         self.hist: Dict[str, LatencyHistogram] = {}
 
     def get(self, name: str) -> LatencyHistogram:
+        """The ``name`` histogram, created on first use."""
         h = self.hist.get(name)
         if h is None:
             h = self.hist[name] = LatencyHistogram(*self._args)
@@ -167,8 +170,10 @@ class SpanTimer:
         h.observe(time.perf_counter() - t0)
 
     def summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-span digests, keyed by span name."""
         return {name: h.summary() for name, h in self.hist.items()}
 
     def quantile(self, name: str, q: float) -> Optional[float]:
+        """Quantile of one span's histogram; None if the span never ran."""
         h = self.hist.get(name)
         return h.quantile(q) if h else None

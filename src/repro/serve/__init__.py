@@ -1,0 +1,41 @@
+"""repro.serve — the selection service: a callable front end for the engine.
+
+The engine packages (``repro.engine``) compile selection *loops*; this
+package makes them a *service* a fleet coordinator can call one round at a
+time, without giving up the compiled steady state:
+
+* :mod:`repro.serve.protocol` — stdlib-only wire format: length-prefixed
+  JSON frames, packed feedback encodings (success bits / lag codes).
+* :mod:`repro.serve.engines` — the serving backends: ``SlotEngine`` (J
+  tenant jobs as padding-mask slots of one vmapped dispatch, bucket-ladder
+  growth, no recompile on join/leave) and ``ShardedEngine`` (one K-sharded
+  ``RoundProgram`` per job, sync or async).
+* :mod:`repro.serve.transport` — ``SelectionServer``: socket front end,
+  streaming batcher, bounded-queue backpressure (shed), request deadlines,
+  periodic checkpoint, graceful drain.
+* :mod:`repro.serve.state` — elastic restart: engine meta + array
+  checkpoints through ``repro.checkpoint``; a restored server continues
+  bit-identically mid-horizon.
+* :mod:`repro.serve.client` — the thin synchronous client.
+
+Wire contract and failure modes: ``docs/serving.md`` (kept executable by
+``tests/test_docs.py``).
+"""
+from .client import ServeClient, ServeError
+from .engines import CapacityError, JobSpec, ShardedEngine, SlotEngine, engine_from_meta
+from .state import latest_server_checkpoint, load_server, save_server
+from .transport import SelectionServer
+
+__all__ = [
+    "ServeClient",
+    "ServeError",
+    "CapacityError",
+    "JobSpec",
+    "SlotEngine",
+    "ShardedEngine",
+    "engine_from_meta",
+    "save_server",
+    "load_server",
+    "latest_server_checkpoint",
+    "SelectionServer",
+]

@@ -1,0 +1,96 @@
+"""Synchronous client for the selection serving front end.
+
+One TCP connection, strict request → response.  The client is deliberately
+thin — ``repro.serve.protocol`` framing plus op helpers — so the whole wire
+contract stays visible in ``docs/serving.md``.  Server-side failures
+(``shed``, ``timeout``, ``draining``, ``unknown_job``, ...) surface as
+:class:`ServeError` with the wire ``code``; transport breakage surfaces as
+the underlying ``ProtocolError`` / ``OSError``.
+
+Feedback for ``tick`` can be posted three ways (see ``protocol``): packed
+success bits (``bits=...``, sync servers), packed lag codes (``lags=...``,
+async servers), or a plain list (``x=...``).
+"""
+from __future__ import annotations
+
+import socket
+from typing import Optional
+
+from . import protocol
+
+__all__ = ["ServeClient", "ServeError"]
+
+
+class ServeError(RuntimeError):
+    """A request the server answered with ``ok: false``."""
+
+    def __init__(self, code: str, message: str = ""):
+        super().__init__(f"{code}: {message}" if message else code)
+        self.code = code
+
+
+class ServeClient:
+    """``ServeClient(host, port)`` or ``ServeClient.connect(server.address)``."""
+
+    def __init__(self, host: str, port: int, timeout: Optional[float] = 120.0):
+        self.sock = socket.create_connection((host, port), timeout=timeout)
+        self.sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+
+    @classmethod
+    def connect(cls, address, timeout: Optional[float] = 120.0) -> "ServeClient":
+        host, port = address
+        return cls(host, port, timeout=timeout)
+
+    def call(self, **req) -> dict:
+        """One raw request → response round trip; raises ``ServeError`` on
+        ``ok: false``."""
+        protocol.send_message(self.sock, req)
+        resp = protocol.recv_message(self.sock)
+        if not resp.get("ok"):
+            raise ServeError(resp.get("error", "unknown"), resp.get("message", ""))
+        return resp
+
+    # -- op helpers --------------------------------------------------------
+
+    def hello(self) -> dict:
+        return self.call(op="hello")
+
+    def admit(self, **spec) -> int:
+        """Admit a job (``JobSpec`` fields: K, k, rounds, sigma_frac, eta,
+        quota, seed); returns the job uid all later ops use."""
+        return self.call(op="admit", spec=spec)["job"]
+
+    def tick(self, job: int, x=None, bits=None, lags=None) -> dict:
+        """Post one round of feedback, get the next cohort:
+        ``{"round", "cohort", "on_time", "stale"}``."""
+        req = {"op": "tick", "job": job}
+        if bits is not None:
+            req["xb"] = protocol.encode_bits(bits)
+        elif lags is not None:
+            req["xl"] = protocol.encode_lags(lags)
+        elif x is not None:
+            req["x"] = [int(v) for v in x]
+        return self.call(**req)
+
+    def retire(self, job: int) -> None:
+        self.call(op="retire", job=job)
+
+    def stats(self) -> dict:
+        return self.call(op="stats")
+
+    def checkpoint(self) -> str:
+        """Force a server checkpoint; returns the stem path."""
+        return self.call(op="checkpoint")["path"]
+
+    def shutdown(self) -> dict:
+        """Ask the server to drain and stop (graceful)."""
+        return self.call(op="shutdown")
+
+    def close(self) -> None:
+        self.sock.close()
+
+    def __enter__(self) -> "ServeClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

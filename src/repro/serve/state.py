@@ -1,0 +1,72 @@
+"""Elastic-restart persistence for the serving front end.
+
+A server checkpoint is two files with one stem (``ckpt_<step>``):
+
+* ``ckpt_<step>.json`` — the **meta sidecar**: engine kind, static config,
+  and the live job table (uid → slot/round/spec).  Human-readable, and the
+  structural recipe: ``load_server`` rebuilds an identically-shaped engine
+  from it *before* touching the array file (``repro.checkpoint.restore``
+  needs a structurally matching ``like`` tree).
+* ``ckpt_<step>.ckpt`` — the evolving arrays (selector weights, round
+  counters, PRNG keys, staleness/late-credit rings) through the repo's
+  codec-tagged msgpack+zstd checkpoint format.
+
+Restoring reproduces the engine **bit-identically**: every array the step
+function reads is in the payload and every job's PRNG stream derives from
+its own seed and round counter, so a restored server's subsequent cohorts
+match an uninterrupted run exactly (pinned by ``tests/test_serve.py``).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional, Tuple
+
+from repro import checkpoint as ckpt
+
+from .engines import engine_from_meta
+
+__all__ = ["save_server", "load_server", "latest_server_checkpoint"]
+
+_PREFIX = "ckpt_"
+
+
+def save_server(directory: str, engine, step: int) -> str:
+    """Write ``ckpt_<step>.{json,ckpt}`` atomically-ish (meta last, so a
+    stem without its sidecar is never considered restorable).  Returns the
+    stem path."""
+    os.makedirs(directory, exist_ok=True)
+    stem = os.path.join(directory, f"{_PREFIX}{step:08d}")
+    ckpt.save(stem + ".ckpt", engine.arrays(), step=step)
+    tmp = stem + ".json.tmp"
+    with open(tmp, "w") as f:
+        json.dump({"step": step, "engine": engine.meta()}, f, indent=1, sort_keys=True)
+    os.replace(tmp, stem + ".json")
+    return stem
+
+
+def latest_server_checkpoint(directory: str) -> Optional[str]:
+    """Newest stem with BOTH files present, or None."""
+    if not os.path.isdir(directory):
+        return None
+    stems = sorted(
+        os.path.join(directory, name[: -len(".json")])
+        for name in os.listdir(directory)
+        if name.startswith(_PREFIX) and name.endswith(".json")
+    )
+    for stem in reversed(stems):
+        if os.path.exists(stem + ".ckpt"):
+            return stem
+    return None
+
+
+def load_server(stem: str) -> Tuple[object, int]:
+    """Rebuild ``(engine, step)`` from a checkpoint stem: meta sidecar →
+    engine shell (``engine_from_meta``) → array restore with the shell's own
+    fresh arrays as the ``like`` tree."""
+    with open(stem + ".json") as f:
+        meta = json.load(f)
+    engine = engine_from_meta(meta["engine"])
+    arrays = ckpt.restore(stem + ".ckpt", like=engine.arrays())
+    engine.load_arrays(arrays)
+    return engine, int(meta["step"])

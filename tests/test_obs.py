@@ -684,8 +684,11 @@ class TestTapRegistry:
         assert set(ROUND_TAPS.gauge_names(group=None)) == {
             "selected", "on_time", "stale", "sigma", "capped_frac",
             "jain", "gini", "top_decile_share", "region_cep_skew",
+            "queue_depth", "batch_jobs", "shed",
         }
         assert set(ROUND_TAPS.gauge_names(group="fairness")) == set(FAIRNESS_SERIES)
+        assert set(ROUND_TAPS.gauge_names(group="serve")) == {"queue_depth", "batch_jobs", "shed"}
+        assert ROUND_TAPS.directions("serve")["shed"] == "lower"
         fair_dirs = ROUND_TAPS.directions("fairness")
         assert fair_dirs["jain"] == "higher"
         assert fair_dirs["gini"] == "lower"

@@ -1,0 +1,375 @@
+"""Serving front end tests: protocol, batcher, elastic restart, transport.
+
+What is pinned here, and why it matters:
+
+* **wire framing** — frames round-trip; truncation/oversize fail loudly.
+* **batching invariance** — a job ticked alone produces bit-identical
+  cohorts to the same job ticked coalesced with co-tenants (the per-job
+  PRNG contract the whole batcher rests on).
+* **elastic restart** — a server checkpointed mid-horizon and restored
+  into a fresh process continues bit-identically to an uninterrupted run,
+  for both backends, sync and async (S=2).  This is the acceptance bar of
+  ROADMAP item 2: the loopback test drives 2 jobs >= 50 rounds through the
+  compiled sharded-async engine across a kill/restore.
+* **failure modes** — full slot bucket sheds with ``capacity``; full
+  admission queue sheds with ``shed``; expired requests fail with
+  ``timeout``; draining servers answer what they accepted.
+"""
+import socket
+import threading
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.serve import (
+    CapacityError,
+    JobSpec,
+    SelectionServer,
+    ServeClient,
+    ServeError,
+    ShardedEngine,
+    SlotEngine,
+    latest_server_checkpoint,
+    load_server,
+    save_server,
+)
+from repro.serve import protocol
+
+needs8 = pytest.mark.skipif(
+    len(jax.devices()) < 8, reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8"
+)
+
+
+def _lags(rng, K, S=2):
+    """A volatile round: most on time, some late (1..S), some never."""
+    l = rng.integers(0, S + 2, K).astype(np.int32)
+    return np.where(l > S, protocol.DEAD_LAG, l)
+
+
+# ---------------------------------------------------------------------------
+# protocol
+# ---------------------------------------------------------------------------
+
+
+def test_protocol_frame_roundtrip():
+    a, b = socket.socketpair()
+    try:
+        msg = {"op": "tick", "job": 3, "xb": protocol.encode_bits(np.ones(17))}
+        protocol.send_message(a, msg)
+        assert protocol.recv_message(b) == msg
+        a.close()
+        with pytest.raises(protocol.ConnectionClosed):
+            protocol.recv_message(b)
+    finally:
+        b.close()
+
+
+def test_protocol_mid_frame_eof_is_error():
+    a, b = socket.socketpair()
+    try:
+        a.sendall(b"\x00\x00\x00\x10{\"tru")  # announce 16 bytes, send 6
+        a.close()
+        with pytest.raises(protocol.ProtocolError):
+            protocol.recv_message(b)
+    finally:
+        b.close()
+
+
+def test_protocol_feedback_encodings():
+    bits = np.asarray([1, 0, 1, 1, 0, 0, 1, 0, 1])
+    out = protocol.decode_bits(protocol.encode_bits(bits), 9)
+    np.testing.assert_array_equal(out, bits.astype(np.float32))
+    lags = np.asarray([0, 1, 2, protocol.DEAD_LAG, 0])
+    out = protocol.decode_lags(protocol.encode_lags(lags), 5)
+    np.testing.assert_array_equal(out, lags)
+    # sync bits normalise to {0, DEAD_LAG} lag codes
+    req = {"xb": protocol.encode_bits(bits)}
+    lag = protocol.feedback_lags(req, 9, staleness=0)
+    np.testing.assert_array_equal(lag == 0, bits.astype(bool))
+    assert set(np.unique(lag)) <= {0, protocol.DEAD_LAG}
+
+
+# ---------------------------------------------------------------------------
+# SlotEngine: batching invariance, bucket ladder, restart
+# ---------------------------------------------------------------------------
+
+
+def test_slot_engine_alone_vs_batched_bit_identical():
+    """Co-tenancy must not perturb a job: same spec, same feedback, same
+    cohorts whether the job ticks alone or batched with others."""
+    rng = np.random.default_rng(0)
+    spec = JobSpec(K=48, k=6, seed=13)
+    feed = [_lags(rng, 48) for _ in range(8)]
+
+    alone = SlotEngine(K_max=64, k_cap=8, staleness=2, buckets=(4,))
+    ua = alone.admit(spec)
+    solo = [alone.tick([(ua, f)])[ua]["cohort"] for f in feed]
+
+    packed = SlotEngine(K_max=64, k_cap=8, staleness=2, buckets=(4,))
+    u0 = packed.admit(JobSpec(K=64, k=8, seed=1))
+    ub = packed.admit(spec)
+    u2 = packed.admit(JobSpec(K=32, k=4, seed=2))
+    both = []
+    for f in feed:
+        r = packed.tick([(u0, _lags(rng, 64)), (ub, f), (u2, _lags(rng, 32))])
+        both.append(r[ub]["cohort"])
+    assert solo == both
+
+
+def test_slot_engine_bucket_ladder_and_capacity():
+    eng = SlotEngine(K_max=16, k_cap=4, buckets=(2, 4))
+    uids = [eng.admit(JobSpec(K=16, k=2, seed=i)) for i in range(2)]
+    assert eng.n_slots == 2
+    uids.append(eng.admit(JobSpec(K=16, k=2, seed=9)))  # grows 2 -> 4
+    assert eng.n_slots == 4
+    for i in range(3, 4):
+        uids.append(eng.admit(JobSpec(K=16, k=2, seed=i)))
+    with pytest.raises(CapacityError):
+        eng.admit(JobSpec(K=16, k=2, seed=99))  # ladder exhausted
+    # retire frees a slot for the next admit, ladder unchanged
+    eng.retire(uids[1])
+    eng.admit(JobSpec(K=16, k=2, seed=100))
+    assert eng.n_slots == 4
+
+
+def test_slot_engine_growth_preserves_streams():
+    """Bucket growth is invisible to live jobs: their selection streams
+    continue as if the batch had never been resized."""
+    rng = np.random.default_rng(1)
+    spec = JobSpec(K=24, k=3, seed=21)
+    feed = [_lags(rng, 24, S=0) for _ in range(6)]
+
+    ref = SlotEngine(K_max=32, k_cap=4, buckets=(2, 4))
+    ur = ref.admit(spec)
+    want = [ref.tick([(ur, f)])[ur]["cohort"] for f in feed]
+
+    grow = SlotEngine(K_max=32, k_cap=4, buckets=(2, 4))
+    ug = grow.admit(spec)
+    got = [grow.tick([(ug, f)])[ug]["cohort"] for f in feed[:3]]
+    grow.admit(JobSpec(K=32, k=4, seed=1))
+    grow.admit(JobSpec(K=32, k=4, seed=2))  # triggers 2 -> 4 growth
+    got += [grow.tick([(ug, f)])[ug]["cohort"] for f in feed[3:]]
+    assert want == got
+
+
+@pytest.mark.parametrize("staleness", [0, 2])
+def test_slot_engine_restart_bit_identical(tmp_path, staleness):
+    """Checkpoint mid-horizon, restore, continue: cohorts match an
+    uninterrupted run exactly (sync and async S=2)."""
+    rng = np.random.default_rng(2)
+    specs = [JobSpec(K=40, k=5, seed=3), JobSpec(K=24, k=4, seed=4)]
+    feed = [[_lags(rng, s.K, S=staleness) for _ in range(12)] for s in specs]
+
+    def fresh():
+        eng = SlotEngine(K_max=64, k_cap=8, staleness=staleness, buckets=(4,))
+        return eng, [eng.admit(s) for s in specs]
+
+    ref, uref = fresh()
+    want = [ref.tick([(u, fr[t]) for u, fr in zip(uref, feed)]) for t in range(12)]
+
+    eng, uids = fresh()
+    for t in range(6):
+        eng.tick([(u, fr[t]) for u, fr in zip(uids, feed)])
+    stem = save_server(str(tmp_path), eng, step=6)
+    assert latest_server_checkpoint(str(tmp_path)) == stem
+    eng2, step = load_server(stem)
+    assert step == 6
+    for t in range(6, 12):
+        got = eng2.tick([(u, fr[t]) for u, fr in zip(uids, feed)])
+        for u in uids:
+            assert got[u]["cohort"] == want[t][u]["cohort"]
+            assert got[u]["round"] == want[t][u]["round"]
+
+
+# ---------------------------------------------------------------------------
+# transport: batcher, shed, timeout, drain
+# ---------------------------------------------------------------------------
+
+
+def _sync_server(**kw):
+    return SelectionServer(SlotEngine(K_max=32, k_cap=4, buckets=(4,)), **kw)
+
+
+def test_transport_roundtrip_and_errors():
+    with _sync_server() as srv:
+        with ServeClient.connect(srv.address) as c:
+            assert c.hello()["engine"] == "slots"
+            job = c.admit(K=32, k=4, seed=1)
+            out = c.tick(job, bits=np.ones(32))
+            assert out["round"] == 0 and len(out["cohort"]) == 4
+            with pytest.raises(ServeError) as e:
+                c.tick(999, bits=np.ones(32))
+            assert e.value.code == "unknown_job"
+            with pytest.raises(ServeError) as e:
+                c.call(op="tick", job=job)  # no feedback field
+            assert e.value.code == "bad_request"
+            with pytest.raises(ServeError) as e:
+                c.call(op="nonsense")
+            assert e.value.code == "bad_request"
+            c.retire(job)
+            with pytest.raises(ServeError) as e:
+                c.tick(job, bits=np.ones(32))
+            assert e.value.code == "unknown_job"
+
+
+def test_transport_concurrent_clients_batch():
+    """Two clients hammering concurrently: every response is consistent and
+    per-job rounds stay strictly sequential no matter how dispatches
+    coalesce."""
+    with _sync_server() as srv:
+        rounds = {0: [], 1: []}
+
+        def drive(i):
+            with ServeClient.connect(srv.address) as c:
+                job = c.admit(K=32, k=4, seed=i)
+                for _ in range(20):
+                    out = c.tick(job, bits=np.ones(32))
+                    rounds[i].append(out["round"])
+                    assert len(out["cohort"]) == 4
+
+        threads = [threading.Thread(target=drive, args=(i,)) for i in range(2)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert rounds[0] == list(range(20)) and rounds[1] == list(range(20))
+        assert srv.stats["ticks"] == 40
+
+
+def test_transport_shed_on_full_queue():
+    """A stalled engine + a bounded queue => overflow requests shed
+    immediately instead of queueing into unbounded latency."""
+    srv = _sync_server(max_queue=2)
+    gate = threading.Event()
+    real_tick = srv.engine.tick
+
+    def slow_tick(items):
+        gate.wait(10.0)
+        return real_tick(items)
+
+    srv.engine.tick = slow_tick
+    with srv:
+        with ServeClient.connect(srv.address) as admitc:
+            job = admitc.admit(K=32, k=4, seed=1)
+            results = []
+
+            def one():
+                with ServeClient.connect(srv.address) as c:
+                    try:
+                        c.tick(job, bits=np.ones(32))
+                        results.append("ok")
+                    except ServeError as e:
+                        results.append(e.code)
+
+            # first request occupies the engine thread; the next floods the
+            # 2-deep queue
+            threads = [threading.Thread(target=one) for _ in range(6)]
+            for t in threads:
+                t.start()
+            import time
+
+            time.sleep(0.5)
+            gate.set()
+            for t in threads:
+                t.join()
+        assert "shed" in results, results
+        assert srv.stats["shed"] >= 1
+
+
+def test_transport_timeout_expired_requests():
+    """Requests older than request_timeout when dequeued fail with
+    ``timeout`` and never reach the engine."""
+    srv = _sync_server(request_timeout=0.0)
+    with srv:
+        with ServeClient.connect(srv.address) as c:
+            job = c.call(op="admit", spec={"K": 32, "k": 4})["job"]
+            with pytest.raises(ServeError) as e:
+                c.tick(job, bits=np.ones(32))
+            assert e.value.code == "timeout"
+        assert srv.stats["timeouts"] == 1
+        assert srv.stats["ticks"] == 0
+
+
+def test_transport_drain_and_final_checkpoint(tmp_path):
+    """Graceful close answers accepted work and writes a final checkpoint;
+    the checkpoint restores to the drained state."""
+    srv = _sync_server(ckpt_dir=str(tmp_path))
+    with srv:
+        with ServeClient.connect(srv.address) as c:
+            job = c.admit(K=32, k=4, seed=5)
+            for _ in range(3):
+                c.tick(job, bits=np.ones(32))
+    stem = latest_server_checkpoint(str(tmp_path))
+    assert stem is not None
+    eng, step = load_server(stem)
+    assert step == 3 and int(np.asarray(eng.state.t)[eng.jobs[job]["slot"]]) == 3
+
+
+def test_transport_draining_rejects_new_requests():
+    with _sync_server() as srv:
+        with ServeClient.connect(srv.address) as c:
+            c.admit(K=32, k=4)
+            assert c.shutdown()["ok"]
+            with pytest.raises((ServeError, protocol.ProtocolError, OSError)):
+                c.call(op="hello")
+
+
+# ---------------------------------------------------------------------------
+# acceptance: loopback client, 2 jobs, sharded-async engine, kill + restore
+# ---------------------------------------------------------------------------
+
+
+@needs8
+def test_acceptance_sharded_async_kill_restore(tmp_path):
+    """ROADMAP item 2's acceptance bar, end to end over the wire:
+
+    admit 2 jobs into a D=8 sharded-async (S=2) server, drive >= 50 rounds
+    through the compiled engine, checkpoint + kill mid-horizon, restore a
+    fresh server from disk, finish the horizon — and every post-restore
+    selection is bit-identical to an uninterrupted reference run.
+    """
+    ROUNDS, SPLIT = 52, 26
+    rng = np.random.default_rng(7)
+    specs = [
+        dict(K=64, k=8, rounds=ROUNDS, seed=17),
+        dict(K=48, k=4, rounds=ROUNDS, seed=23),
+    ]
+    feed = [[_lags(rng, s["K"]) for _ in range(ROUNDS)] for s in specs]
+
+    # uninterrupted reference, same backend, straight through the engine
+    ref = ShardedEngine(D=8, staleness=2)
+    ruid = [ref.admit(JobSpec(**s)) for s in specs]
+    want = [ref.tick([(u, f[t]) for u, f in zip(ruid, feed)]) for t in range(ROUNDS)]
+
+    ckpt_dir = str(tmp_path / "ckpt")
+    srv = SelectionServer(ShardedEngine(D=8, staleness=2), ckpt_dir=ckpt_dir)
+    got = {0: [], 1: []}
+    with srv:
+        c = ServeClient.connect(srv.address)
+        jobs = [c.admit(**s) for s in specs]
+        for t in range(SPLIT):
+            for i, j in enumerate(jobs):
+                out = c.tick(j, lags=feed[i][t])
+                got[i].append((out["round"], out["cohort"]))
+        c.checkpoint()
+        c.close()
+        srv.kill()  # crash: no drain, no extra checkpoint
+
+    stem = latest_server_checkpoint(ckpt_dir)
+    assert stem is not None
+    engine, step = load_server(stem)
+    assert step == 2 * SPLIT
+    with SelectionServer(engine, ckpt_dir=ckpt_dir) as srv2:
+        c = ServeClient.connect(srv2.address)
+        for t in range(SPLIT, ROUNDS):
+            for i, j in enumerate(jobs):
+                out = c.tick(j, lags=feed[i][t])
+                got[i].append((out["round"], out["cohort"]))
+        c.close()
+
+    for i, u in enumerate(ruid):
+        assert [r for r, _ in got[i]] == list(range(ROUNDS))
+        for t in range(ROUNDS):
+            assert got[i][t][1] == want[t][u]["cohort"], f"job {i} diverged at round {t}"
