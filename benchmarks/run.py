@@ -10,7 +10,7 @@ import traceback
 
 
 def main() -> None:
-    from . import async_bench, engine_scale, fig3_selection, fig4_cep, fig7_cardinality, inclusion, kernels, regret, roofline, scenarios_bench, serve_front, table_training
+    from . import async_bench, engine_scale, fig3_selection, fig4_cep, fig7_cardinality, inclusion, kernels, regret, roofline, scenarios_bench, serve_chaos, serve_front, table_training
 
     quick = os.environ.get("REPRO_BENCH_QUICK", "1") == "1"
     benches = {
@@ -26,6 +26,7 @@ def main() -> None:
         "scenarios": lambda: scenarios_bench.run(smoke=quick),
         "async": lambda: async_bench.run(smoke=quick),
         "serve": lambda: serve_front.run(smoke=quick),
+        "serve_chaos": lambda: serve_chaos.run(smoke=quick),
     }
     only = os.environ.get("REPRO_BENCH_ONLY")
     names = only.split(",") if only else list(benches)

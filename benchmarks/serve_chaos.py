@@ -1,0 +1,150 @@
+"""Chaos benchmark: serving throughput and recovery latency under faults.
+
+Runs the real loopback serving path — retrying clients against a
+``SelectionServer`` — with a seeded :class:`repro.serve.faults.FaultPlan`
+injecting engine crashes, checkpoint corruption, dropped connections and
+slow dispatches, then measures what the fault-tolerance layer costs:
+every tenant still completes its full horizon (supervised recovery +
+round-desync replay guarantee it), so the gated number is end-to-end
+throughput *including* the crashes, restores and replays.
+
+Rows (name,us_per_call,derived):
+  serve/chaos/J=...      — us per completed tick under the chaos schedule;
+                           derived carries ok ticks/sec, supervised
+                           restarts, recovery seconds, and the fired fault
+                           counts (crash/corrupt/drop/slow)
+
+Bench JSON (gated by scripts/check_bench.py against
+results/bench/baseline/BENCH_serve_chaos.json):
+  chaos_ok_ticks_per_s   — the gated scalar (*_per_s convention):
+                           completed ticks over wall clock, faults included
+  restarts, recovery_s_total, replayed, rewinds, fired_* — recovery
+                           telemetry (reported, never gated: wall-clock
+                           recovery latency is machine-dependent)
+  metrics.serve          — the windowed ``serve`` tap-group stream, now
+                           carrying the ``restarts`` / ``recovery_s``
+                           gauges next to queue_depth / batch_jobs / shed
+  alerts                 — the ``engine_restart`` events the supervisor
+                           raised during the run
+
+CLI:  python benchmarks/serve_chaos.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import shutil
+import sys
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+try:
+    from .common import emit, reporter
+except ImportError:  # running as a script
+    from common import emit, reporter
+
+from repro.serve import FaultPlan, SelectionServer, ServeClient, ServeError, SlotEngine
+
+
+def _drive(address, spec: dict, rounds: int, seed: int, counts, lock):
+    """One retrying tenant: round-tagged ticks, rewinding on the
+    ``round_desync`` a supervised recovery hands back."""
+    with ServeClient.connect(address, retries=8, seed=seed) as c:
+        job = c.admit(**spec)
+        bits = np.ones(spec["K"])
+        t = 0
+        while t < rounds:
+            try:
+                out = c.tick(job, bits=bits, round=t)
+            except ServeError as e:
+                if e.code == "round_desync":
+                    with lock:
+                        counts["rewinds"] += 1
+                    t = int(e.response["expected"])
+                    continue
+                raise
+            with lock:
+                counts["ok"] += 1
+            t = out["round"] + 1
+
+
+def bench_chaos(J: int, K: int, rounds: int, seed: int, rep) -> float:
+    # the seeded schedule: 1 crash, 1 corrupted checkpoint write, 2 dropped
+    # connections, 1 slow dispatch — drawn once, bit-reproducible.
+    # first_step clears the J admit responses so a drop never cuts a
+    # non-idempotent admit reply.
+    plan = FaultPlan.sample(
+        seed, n_steps=rounds, crashes=1, corruptions=1, drops=2, slow=1,
+        slow_s=0.005, first_step=J + 2,
+    )
+    ckpt_dir = tempfile.mkdtemp(prefix="serve_chaos_")
+    srv = SelectionServer(
+        SlotEngine(K_max=K, k_cap=max(8, K // 8), buckets=(J,)),
+        ckpt_dir=ckpt_dir, ckpt_every=max(2, rounds // 6), ckpt_keep=4,
+        faults=plan, restart_backoff=0.01,
+    )
+    counts = {"ok": 0, "rewinds": 0}
+    lock = threading.Lock()
+    try:
+        with srv:
+            t0 = time.perf_counter()
+            threads = [
+                threading.Thread(
+                    target=_drive,
+                    args=(srv.address, dict(K=K, k=max(4, K // 16), seed=seed + i),
+                          rounds, seed + i, counts, lock),
+                )
+                for i in range(J)
+            ]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            wall = time.perf_counter() - t0
+            srv.attach_report(rep, window=4)
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+    fired = plan.fired()
+    ok = counts["ok"]
+    assert ok >= J * rounds, (ok, J, rounds)  # every tenant finished its horizon
+    ok_per_s = ok / wall
+    recovery_s = float(sum(srv.recoveries))
+    emit(
+        f"serve/chaos/J={J}",
+        wall / ok * 1e6,
+        f"K={K};ok_per_s={ok_per_s:.0f};restarts={srv.stats['restarts']};"
+        f"recovery_s={recovery_s:.3f};fired=" +
+        "/".join(f"{k}:{v}" for k, v in sorted(fired.items())),
+    )
+    rep.update(
+        chaos_ok_ticks_per_s=ok_per_s,
+        restarts=srv.stats["restarts"],
+        recovery_s_total=recovery_s,
+        replayed=srv.stats["replayed"],
+        rewinds=counts["rewinds"],
+        **{f"fired_{k}": v for k, v in fired.items()},
+    )
+    return ok_per_s
+
+
+def run(smoke: bool = True) -> None:
+    J = 4 if smoke else 8
+    K = 256 if smoke else 2048
+    rounds = 24 if smoke else 120
+    rep = reporter("serve_chaos", config={"smoke": smoke, "J": J, "K": K, "rounds": rounds})
+    bench_chaos(J, K, rounds, seed=0, rep=rep)
+    rep.save()
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="CI-sized run")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

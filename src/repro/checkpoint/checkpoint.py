@@ -72,6 +72,8 @@ def save(path: str, tree: Any, step: int = 0) -> str:
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
         f.write(msgpack.packb(payload, default=_pack_default))
+        f.flush()
+        os.fsync(f.fileno())  # a crash mid-write must never replace a good checkpoint
     os.replace(tmp, path)
     return path
 

@@ -389,8 +389,16 @@ def run_server(args, reporter: Reporter):
     server down — the CI-runnable end-to-end path; without it the server
     runs until interrupted (clients speak ``repro.serve.protocol`` /
     ``docs/serving.md``).
+
+    ``--chaos SEED`` arms a seeded ``FaultPlan`` (engine crashes,
+    checkpoint corruption, dropped connections, slow dispatches) against
+    the server; the built-in smoke client drives round-tagged ticks with
+    retries and rewinds on ``round_desync``, so the horizon completes
+    through the injected faults — the CI chaos smoke.
     """
-    from repro.serve import SelectionServer, ServeClient, ShardedEngine, SlotEngine
+    import tempfile
+
+    from repro.serve import FaultPlan, SelectionServer, ServeClient, ServeError, ShardedEngine, SlotEngine
 
     S = args.staleness if args.async_mode else 0
     K_max = args.clients or (512 if args.smoke else 4096)
@@ -398,25 +406,54 @@ def run_server(args, reporter: Reporter):
         engine = ShardedEngine(D=args.mesh, staleness=S, alpha=args.alpha)
     else:
         engine = SlotEngine(K_max=K_max, staleness=S, alpha=args.alpha)
+    plan = None
+    tmp_ckpt = None
+    ckpt_dir, ckpt_every = args.ckpt_dir, args.ckpt_every
+    if args.chaos is not None:
+        plan = FaultPlan.sample(
+            args.chaos, n_steps=args.jobs * args.rounds,
+            crashes=1, corruptions=1, drops=2, slow=1, slow_s=0.005,
+            first_step=args.jobs + 2,
+        )
+        # recovery needs restore points: default a checkpoint cadence + dir
+        if ckpt_dir is None:
+            ckpt_dir = tmp_ckpt = tempfile.mkdtemp(prefix="serve_chaos_")
+        ckpt_every = ckpt_every or max(2, args.rounds // 4)
     srv = SelectionServer(
-        engine, port=args.port, ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every
+        engine, port=args.port, ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
+        ckpt_keep=4 if plan else 0, faults=plan,
+        restart_backoff=0.01 if plan else 0.05,
     )
     srv.start()
     host, port = srv.address
-    print(f"serving {engine.kind} engine (S={S}) on {host}:{port}", flush=True)
+    print(f"serving {engine.kind} engine (S={S}) on {host}:{port}"
+          + (f" under chaos seed {args.chaos}" if plan else ""), flush=True)
     try:
         if args.smoke:
             rng = np.random.default_rng(args.seed)
             K = min(K_max, 256)
-            with ServeClient.connect(srv.address) as c:
+            with ServeClient.connect(srv.address, retries=8, seed=args.seed) as c:
                 jobs = [c.admit(K=K, k=max(1, K // 16), seed=args.seed + j) for j in range(args.jobs)]
-                for _ in range(args.rounds):
+                cursors = {j: 0 for j in jobs}
+                while any(t < args.rounds for t in cursors.values()):
                     for j in jobs:
+                        t = cursors[j]
+                        if t >= args.rounds:
+                            continue
                         if S:
                             lag = rng.integers(0, S + 2, K)
-                            c.tick(j, lags=np.where(lag > S, -1, lag))
+                            feed = dict(lags=np.where(lag > S, -1, lag))
                         else:
-                            c.tick(j, bits=rng.random(K) < 0.7)
+                            feed = dict(bits=rng.random(K) < 0.7)
+                        try:
+                            out = c.tick(j, round=t, **feed)
+                        except ServeError as e:
+                            if e.code == "round_desync":
+                                # recovery rolled the job back: replay from there
+                                cursors[j] = int(e.response["expected"])
+                                continue
+                            raise
+                        cursors[j] = out["round"] + 1
         else:
             while True:
                 time.sleep(1.0)
@@ -425,7 +462,20 @@ def run_server(args, reporter: Reporter):
     finally:
         srv.close()
         srv.attach_report(reporter)
-    return {"address": f"{host}:{port}", "engine": engine.kind, "staleness": S}
+        if tmp_ckpt is not None:
+            import shutil
+
+            shutil.rmtree(tmp_ckpt, ignore_errors=True)
+    report = {"address": f"{host}:{port}", "engine": engine.kind, "staleness": S}
+    if plan is not None:
+        fired = plan.fired()
+        assert srv.stats["ticks"] >= args.jobs * args.rounds
+        report.update(
+            chaos_seed=args.chaos, fired=fired, restarts=srv.stats["restarts"],
+            recovery_s_total=float(sum(srv.recoveries)), replayed=srv.stats["replayed"],
+        )
+        print(f"chaos survived: fired={fired} restarts={srv.stats['restarts']}", flush=True)
+    return report
 
 
 def main():
@@ -454,6 +504,10 @@ def main():
                     help="--serve: checkpoint directory for elastic restart")
     ap.add_argument("--ckpt-every", type=int, default=0,
                     help="--serve: checkpoint every N served rounds (0 = only on drain)")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="--serve: arm a seeded FaultPlan (engine crashes, checkpoint "
+                         "corruption, dropped connections, slow dispatches) and prove the "
+                         "horizon completes through it")
     ap.add_argument("--smoke", action="store_true", help="tiny CPU-friendly run")
     args = ap.parse_args()
     if args.smoke:

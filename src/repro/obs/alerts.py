@@ -6,7 +6,7 @@ both into a short list of "something needs a look" events appended to the
 JSONL run log (schema v2 ``alert`` records), so a CI artifact or a serving
 dashboard surfaces regressions without anyone eyeballing raw series.
 
-Three rule families, all deterministic host-side numpy over series the
+Four rule families, all deterministic host-side numpy over series the
 runners already emit (no new device work):
 
 * **outage** — the windowed mean of per-round on-time credit collapses
@@ -16,6 +16,9 @@ runners already emit (no new device work):
   Jain below ``jain_min``, or the most-selected decile of clients holding
   more than ``top_share_max`` of all selection mass (E3CS's exploration
   floor failing to spread load).
+* **engine_restart** — the serving supervisor's ``restarts`` gauge (the
+  ``serve`` tap group) is nonzero: the engine crashed and was restored
+  from a checkpoint at least once during the run.
 * **drift** — the engine's invariants move: the cohort size leaves the
   configured k (``selected`` must equal k every round), or the fraction of
   probability-capped clients sustains above ``cap_frac_max`` (the allocator
@@ -137,6 +140,20 @@ def detect_alerts(
                 f"cohort size left k={expected_selected} in {off.size} rounds "
                 f"(first at round {int(off[0])})",
             ))
+    # --- engine_restart: the serving supervisor had to recover ----------
+    restarts = series.get("restarts")
+    if restarts is not None and restarts.size:
+        n = float(restarts.sum())
+        if n > 0:
+            recovery = series.get("recovery_s")
+            alerts.append(Alert(
+                "engine_restart", "warn",
+                {"restarts": n,
+                 "recovery_s": float(recovery.sum()) if recovery is not None else 0.0,
+                 "first_dispatch": int(np.flatnonzero(restarts)[0])},
+                f"{n:.0f} supervised engine restart(s) during the run",
+            ))
+
     capped = series.get("capped_frac")
     if capped is not None and capped.size:
         W = rules.window or max(1, capped.shape[0] // 10)

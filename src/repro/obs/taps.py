@@ -161,6 +161,10 @@ ROUND_TAPS = TapRegistry(
             group="serve"),
     TapSpec("shed", "gauge", "requests shed this tick (queue at capacity)",
             better="lower", group="serve"),
+    TapSpec("restarts", "gauge", "supervised engine restarts landed since the last dispatch",
+            better="lower", group="serve"),
+    TapSpec("recovery_s", "gauge", "seconds spent in crash recovery since the last dispatch",
+            better="lower", group="serve"),
 )
 
 

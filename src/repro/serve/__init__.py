@@ -16,14 +16,19 @@ time, without giving up the compiled steady state:
 * :mod:`repro.serve.state` — elastic restart: engine meta + array
   checkpoints through ``repro.checkpoint``; a restored server continues
   bit-identically mid-horizon.
-* :mod:`repro.serve.client` — the thin synchronous client.
+* :mod:`repro.serve.client` — the thin synchronous client (reconnecting,
+  with seeded-backoff retries for idempotent requests).
+* :mod:`repro.serve.faults` — seeded chaos schedules (``FaultPlan``):
+  engine crashes, checkpoint corruption, dropped connections, slow
+  dispatches — all behind no-op defaults.
 
 Wire contract and failure modes: ``docs/serving.md`` (kept executable by
 ``tests/test_docs.py``).
 """
 from .client import ServeClient, ServeError
-from .engines import CapacityError, JobSpec, ShardedEngine, SlotEngine, engine_from_meta
-from .state import latest_server_checkpoint, load_server, save_server
+from .engines import CapacityError, JobSpec, NumericsError, ShardedEngine, SlotEngine, engine_from_meta
+from .faults import EngineCrash, FaultPlan
+from .state import latest_server_checkpoint, load_server, save_server, validate_stem
 from .transport import SelectionServer
 
 __all__ = [
@@ -31,11 +36,15 @@ __all__ = [
     "ServeError",
     "CapacityError",
     "JobSpec",
+    "NumericsError",
     "SlotEngine",
     "ShardedEngine",
     "engine_from_meta",
+    "EngineCrash",
+    "FaultPlan",
     "save_server",
     "load_server",
     "latest_server_checkpoint",
+    "validate_stem",
     "SelectionServer",
 ]

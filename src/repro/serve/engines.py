@@ -64,7 +64,14 @@ from repro.engine.round_program import staleness_ring_step
 
 from . import protocol
 
-__all__ = ["JobSpec", "CapacityError", "SlotEngine", "ShardedEngine", "engine_from_meta"]
+__all__ = [
+    "JobSpec",
+    "CapacityError",
+    "NumericsError",
+    "SlotEngine",
+    "ShardedEngine",
+    "engine_from_meta",
+]
 
 assert protocol.DEAD_LAG == DEAD_LAG, "wire and engine dead-lag sentinels drifted"
 
@@ -102,6 +109,13 @@ class JobSpec:
 
 class CapacityError(RuntimeError):
     """No free slot and the bucket ladder is exhausted — shed the admit."""
+
+
+class NumericsError(RuntimeError):
+    """A selector update produced NaN/inf log-weights.  The update was
+    **refused** — engine state is unchanged — so numerical blowup can never
+    be silently checkpointed; the transport surfaces the refusal as an
+    ``error: "numerics"`` response plus an alert."""
 
 
 def _key_array(seed: int) -> jax.Array:
@@ -158,6 +172,7 @@ class SlotEngine:
         self.base_keys = jnp.stack([_key_array(0)] * J)
         self.jobs: Dict[int, dict] = {}  # uid -> {"slot": int, "spec": JobSpec}
         self._next_uid = 0
+        self.faults = None  # chaos hook (repro.serve.faults.FaultPlan) or None
 
     # -- capacity ---------------------------------------------------------
 
@@ -213,6 +228,11 @@ class SlotEngine:
         job = self.jobs.pop(uid)
         self.cfg = slot_retire(self.cfg, job["slot"])
 
+    def job_round(self, uid: int) -> int:
+        """The round the job's NEXT tick will serve (the idempotency cursor
+        the transport's retry cache compares request rounds against)."""
+        return int(np.asarray(self.state.t)[self.jobs[uid]["slot"]])
+
     # -- the batched serving step ----------------------------------------
 
     def _build_step(self, J: int):
@@ -220,25 +240,35 @@ class SlotEngine:
         keys derive from each job's own round counter, non-participating
         slots are gated back to their previous state (weights, counter and
         ring all unchanged — their ring must not shift on other tenants'
-        ticks)."""
+        ticks).  A non-finite updated log-weight anywhere gates the WHOLE
+        batch back to its previous state (the NaN/inf guard — the gating
+        must live inside the step because the inputs are donated) and is
+        reported through the returned ``finite`` flag."""
         job_step, S, alpha = self._job_step, self.staleness, self.alpha
 
         def step(cfg, logw, t, pending, base_keys, lag, participate):
             keys = jax.vmap(jax.random.fold_in)(base_keys, t)
             x = (lag == 0).astype(jnp.float32) * cfg.active
             new_logw, new_t, out = jax.vmap(job_step)(cfg, logw, t, keys, x)
+            # dead slots legitimately step to NaN (empty active mask) and are
+            # gated out below — only participating slots can refuse the batch.
+            # Only the PERSISTENT state (logw/t/pending) is gated on the
+            # reduction: outputs are discarded on refusal anyway, and keeping
+            # them off the reduction's critical path keeps the guard cheap.
+            finite = jnp.all(jnp.isfinite(new_logw) | ~participate[:, None])
             pj = participate.astype(jnp.float32)
+            keep = pj * finite.astype(jnp.float32)
             mask = out["mask"] * pj[:, None]
             arriving, new_pending = staleness_ring_step(pending, mask, lag, S, alpha)
             arriving = arriving * pj[:, None]
-            logw = jnp.where(pj[:, None] > 0, new_logw, logw)
-            t = jnp.where(participate, new_t, t)
+            logw = jnp.where(keep[:, None] > 0, new_logw, logw)
+            t = jnp.where(participate & finite, new_t, t)
             if S:
-                new_pending = jnp.where(pj[:, None, None] > 0, new_pending, pending)
+                new_pending = jnp.where(keep[:, None, None] > 0, new_pending, pending)
             idx = jnp.where(participate[:, None], out["idx"], -1)
             on_time = jnp.sum(mask * x, axis=1)
             stale = jnp.sum(arriving, axis=1)
-            return logw, t, new_pending, idx, on_time, stale
+            return logw, t, new_pending, idx, on_time, stale, finite
 
         return jax.jit(step, donate_argnums=(1, 2, 3))
 
@@ -246,6 +276,8 @@ class SlotEngine:
         """One batched dispatch: ``items`` maps job uid -> this round's lag
         codes ``(K_job,)`` (each uid at most once).  Returns per-uid results
         ``{"round", "cohort", "on_time", "stale"}``."""
+        if self.faults is not None:
+            self.faults.on_engine_step()
         J = self.n_slots
         if len({u for u, _ in items}) != len(items):
             raise ValueError("duplicate job uid in one batch (coalesce across dispatches)")
@@ -263,13 +295,20 @@ class SlotEngine:
         step = self._steps.get(J)
         if step is None:
             step = self._steps[J] = self._build_step(J)
-        logw, t, pending, idx, on_time, stale = step(
+        logw, t, pending, idx, on_time, stale, finite = step(
             self.cfg, self.state.logw, self.state.t, self.pending,
             self.base_keys, jnp.asarray(lag), jnp.asarray(participate),
         )
+        # reassign before any raise: the step donated the old buffers, and
+        # on a refused (non-finite) update the state outputs ARE the old state
         self.state = MultiJobState(logw=logw, t=t)
         self.pending = pending
-        idx, on_time, stale = np.asarray(idx), np.asarray(on_time), np.asarray(stale)
+        # one host transfer for everything the response needs + the guard flag
+        idx, on_time, stale, finite = jax.device_get((idx, on_time, stale, finite))
+        if not bool(finite):
+            raise NumericsError(
+                "selector update produced non-finite log-weights; update refused"
+            )
         results = {}
         for uid, _ in items:
             slot = self.jobs[uid]["slot"]
@@ -369,6 +408,7 @@ class ShardedEngine:
         self._runners: dict = {}  # geometry key -> (run, state0, program)
         self.jobs: Dict[int, dict] = {}
         self._next_uid = 0
+        self.faults = None  # chaos hook (repro.serve.faults.FaultPlan) or None
 
     def _runner(self, spec: JobSpec):
         from repro.configs.base import FLConfig
@@ -408,9 +448,16 @@ class ShardedEngine:
     def retire(self, uid: int) -> None:
         del self.jobs[uid]
 
+    def job_round(self, uid: int) -> int:
+        """The round the job's NEXT tick will serve (the idempotency cursor
+        the transport's retry cache compares request rounds against)."""
+        return int(self.jobs[uid]["t"])
+
     def tick(self, items: List[Tuple[int, np.ndarray]]) -> Dict[int, dict]:
         """Advance each job one round (dispatched per job — the K axis is
         already device-parallel; there is no J axis to batch here)."""
+        if self.faults is not None:
+            self.faults.on_engine_step()
         results = {}
         for uid, row in items:
             job = self.jobs[uid]
@@ -424,12 +471,21 @@ class ShardedEngine:
                 state, key, rings, masks, lags, ps, sigmas, arrived = run(
                     job["state"], job["key"], job["rings"], xs
                 )
-                job["rings"] = rings
                 stale = float(np.asarray(arrived[0][: spec.K]).sum())
             else:
                 xs = jnp.asarray(row == 0, jnp.float32)[None, :]
                 state, key, masks, xbits, ps, sigmas = run(job["state"], job["key"], xs)
+                rings = None
                 stale = 0.0
+            # NaN/inf guard: the runner does not donate, so the old state is
+            # intact — refuse the update before assigning anything
+            if not bool(jnp.all(jnp.isfinite(state.e3cs.logw))):
+                raise NumericsError(
+                    f"job {uid}: selector update produced non-finite log-weights; "
+                    "update refused"
+                )
+            if rings is not None:
+                job["rings"] = rings
             job["state"], job["key"] = state, key
             mask = np.asarray(masks[0][: spec.K])
             cohort = np.nonzero(mask > 0)[0]

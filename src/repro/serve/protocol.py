@@ -94,7 +94,7 @@ def recv_message(sock: socket.socket, max_bytes: int = MAX_MESSAGE_BYTES) -> dic
     body = _recv_exact(sock, length, at_boundary=False)
     try:
         obj = json.loads(body)
-    except json.JSONDecodeError as e:
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:  # non-UTF-8 bytes too
         raise ProtocolError(f"invalid JSON frame: {e}") from e
     if not isinstance(obj, dict):
         raise ProtocolError(f"frame is not a JSON object: {type(obj).__name__}")

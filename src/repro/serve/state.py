@@ -3,13 +3,31 @@
 A server checkpoint is two files with one stem (``ckpt_<step>``):
 
 * ``ckpt_<step>.json`` — the **meta sidecar**: engine kind, static config,
-  and the live job table (uid → slot/round/spec).  Human-readable, and the
-  structural recipe: ``load_server`` rebuilds an identically-shaped engine
-  from it *before* touching the array file (``repro.checkpoint.restore``
-  needs a structurally matching ``like`` tree).
+  the live job table (uid → slot/round/spec), and the sha256 + byte size of
+  the array payload.  Human-readable, and the structural recipe:
+  ``load_server`` rebuilds an identically-shaped engine from it *before*
+  touching the array file (``repro.checkpoint.restore`` needs a
+  structurally matching ``like`` tree).
 * ``ckpt_<step>.ckpt`` — the evolving arrays (selector weights, round
   counters, PRNG keys, staleness/late-credit rings) through the repo's
   codec-tagged msgpack+zstd checkpoint format.
+
+Crash safety is layered:
+
+* **write order** — the array payload lands first (itself fsync'd +
+  atomically renamed), the sidecar last (fsync'd + atomically renamed), so
+  a stem without its sidecar is never considered restorable and a torn
+  write never produces a sidecar pointing at missing bytes.
+* **integrity** — the sidecar records ``ckpt_sha256``; ``validate_stem``
+  recomputes it, so silent payload corruption (truncation, bit rot, a
+  fault-injected flip) is detected rather than restored.
+* **walk-back** — ``latest_server_checkpoint`` scans stems newest-first and
+  returns the newest stem that *validates*, skipping corrupt or truncated
+  ones; the supervisor in ``repro.serve.transport`` restarts from whatever
+  it returns.
+* **retention** — ``save_server(keep=N)`` prunes to the newest N stems, so
+  a long-running server keeps a bounded window of restore points instead of
+  an unbounded directory.
 
 Restoring reproduces the engine **bit-identically**: every array the step
 function reads is in the payload and every job's PRNG stream derives from
@@ -18,6 +36,7 @@ match an uninterrupted run exactly (pinned by ``tests/test_serve.py``).
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 from typing import Optional, Tuple
@@ -26,36 +45,111 @@ from repro import checkpoint as ckpt
 
 from .engines import engine_from_meta
 
-__all__ = ["save_server", "load_server", "latest_server_checkpoint"]
+__all__ = [
+    "save_server",
+    "load_server",
+    "latest_server_checkpoint",
+    "validate_stem",
+]
 
 _PREFIX = "ckpt_"
 
 
-def save_server(directory: str, engine, step: int) -> str:
-    """Write ``ckpt_<step>.{json,ckpt}`` atomically-ish (meta last, so a
-    stem without its sidecar is never considered restorable).  Returns the
-    stem path."""
+def _sha256_file(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def _fsync_dir(directory: str) -> None:
+    """Durably record renames in the directory entry (best-effort: not all
+    platforms allow opening a directory)."""
+    try:
+        fd = os.open(directory, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+def save_server(directory: str, engine, step: int, *, keep: int = 0, faults=None) -> str:
+    """Write ``ckpt_<step>.{json,ckpt}`` crash-safely (payload first and
+    fsync'd, sha256-carrying sidecar last) and prune to the newest ``keep``
+    stems (0 = keep all).  ``faults`` is the chaos hook
+    (:class:`repro.serve.faults.FaultPlan`): scheduled writes are corrupted
+    *after* landing, so the restore walk-back has something to skip.
+    Returns the stem path."""
     os.makedirs(directory, exist_ok=True)
     stem = os.path.join(directory, f"{_PREFIX}{step:08d}")
     ckpt.save(stem + ".ckpt", engine.arrays(), step=step)
+    meta = {
+        "step": step,
+        "engine": engine.meta(),
+        "ckpt_sha256": _sha256_file(stem + ".ckpt"),
+        "ckpt_bytes": os.path.getsize(stem + ".ckpt"),
+    }
     tmp = stem + ".json.tmp"
     with open(tmp, "w") as f:
-        json.dump({"step": step, "engine": engine.meta()}, f, indent=1, sort_keys=True)
+        json.dump(meta, f, indent=1, sort_keys=True)
+        f.flush()
+        os.fsync(f.fileno())
     os.replace(tmp, stem + ".json")
+    _fsync_dir(directory)
+    if faults is not None:
+        faults.on_checkpoint(stem)
+    if keep:
+        for old in _stems(directory)[:-keep]:
+            if old == stem:
+                continue
+            for suffix in (".json", ".ckpt"):
+                try:
+                    os.remove(old + suffix)
+                except FileNotFoundError:
+                    pass
     return stem
 
 
-def latest_server_checkpoint(directory: str) -> Optional[str]:
-    """Newest stem with BOTH files present, or None."""
-    if not os.path.isdir(directory):
-        return None
-    stems = sorted(
+def _stems(directory: str) -> list:
+    return sorted(
         os.path.join(directory, name[: -len(".json")])
         for name in os.listdir(directory)
         if name.startswith(_PREFIX) and name.endswith(".json")
     )
-    for stem in reversed(stems):
-        if os.path.exists(stem + ".ckpt"):
+
+
+def validate_stem(stem: str) -> bool:
+    """True iff the stem is restorable: sidecar parses, payload exists, and
+    the payload's sha256 matches the sidecar's record (legacy sidecars
+    without a digest validate on presence alone)."""
+    try:
+        with open(stem + ".json") as f:
+            meta = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return False
+    if "engine" not in meta or not os.path.exists(stem + ".ckpt"):
+        return False
+    want = meta.get("ckpt_sha256")
+    if want is None:
+        return True
+    size = meta.get("ckpt_bytes")
+    if size is not None and os.path.getsize(stem + ".ckpt") != size:
+        return False
+    return _sha256_file(stem + ".ckpt") == want
+
+
+def latest_server_checkpoint(directory: str) -> Optional[str]:
+    """Newest stem that validates (see :func:`validate_stem`), walking back
+    past corrupt or truncated stems; None when nothing restorable exists."""
+    if not os.path.isdir(directory):
+        return None
+    for stem in reversed(_stems(directory)):
+        if validate_stem(stem):
             return stem
     return None
 

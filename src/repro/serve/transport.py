@@ -14,6 +14,22 @@ engine (``repro.serve.engines``).  The moving parts:
   control op (admit/retire/checkpoint), or an empty queue closes the batch.
   Per-job ordering is preserved; co-tenancy never changes any job's
   results (engine PRNG streams are per-job, pinned by ``tests/test_serve.py``).
+* **the supervisor** — the engine thread runs under a restart loop.  A
+  crashed engine step (a fault-injected :class:`~repro.serve.faults.EngineCrash`
+  or any unexpected exception) fails the in-flight requests with
+  ``error: "retry"``, then the supervisor restores the engine from the
+  newest *valid* checkpoint (``latest_server_checkpoint`` walks back past
+  corrupt stems), with exponential backoff on repeated restarts and a
+  ``max_restarts`` budget — past it the server answers ``engine_down``.
+  Each restart sets the ``degraded`` stat flag (cleared by the next clean
+  dispatch), appends an ``engine_restart`` alert, and lands in the
+  ``restarts`` / ``recovery_s`` gauges of the ``serve`` tap group.
+* **idempotent ticks** — a ``tick`` may carry the client's ``round``.  The
+  server keeps a small per-job last-response cache: a replayed round
+  returns the cached cohort instead of double-applying feedback (the
+  property that makes client retries safe), and a request whose round
+  disagrees with the engine's cursor fails with ``round_desync`` carrying
+  the ``expected`` round so the client can rewind and replay.
 * **backpressure** — the queue is bounded (``max_queue``); when it is full
   new requests are **shed** immediately with ``error: "shed"`` rather than
   queued into unbounded latency.  Shed counts are reported per tick through
@@ -24,20 +40,28 @@ engine (``repro.serve.engines``).  The moving parts:
   the engine never spends device time on an answer nobody is waiting for.
 * **elastic restart** — with ``ckpt_dir`` set, the engine thread snapshots
   the full engine state (``repro.serve.state.save_server``) every
-  ``ckpt_every`` served rounds and on graceful shutdown.  A new server
-  started from ``load_server`` continues bit-identically.
+  ``ckpt_every`` served rounds and on graceful shutdown, pruning to the
+  newest ``ckpt_keep`` stems.  A new server started from ``load_server``
+  continues bit-identically.
 * **graceful drain** — ``close()`` (or a ``shutdown`` request) stops
   admissions, answers everything already queued, checkpoints, then exits.
-  ``kill()`` is the crash path for restart tests: drops everything on the
-  floor, no final checkpoint.
+  A join that times out is surfaced (``hung_engine`` stat + log line), not
+  silently leaked.  ``kill()`` is the crash path for restart tests: drops
+  everything on the floor, no final checkpoint.
+* **chaos** — ``faults=FaultPlan(...)`` injects the seeded fault schedule
+  (engine crashes, checkpoint corruption, dropped responses, slow
+  dispatches) of ``repro.serve.faults``; None (the default) leaves every
+  hook a no-op.
 
-Per-dispatch telemetry (queue depth, batch width, sheds — the ``serve``
-group of ``ROUND_TAPS``) and a dispatch-latency ``LatencyHistogram``
-accumulate on the server; ``attach_report`` hands them to a ``Reporter``
-so server runs land in bench JSON / run logs like any engine run.
+Per-dispatch telemetry (queue depth, batch width, sheds, restarts and
+recovery latency — the ``serve`` group of ``ROUND_TAPS``) and a
+dispatch-latency ``LatencyHistogram`` accumulate on the server;
+``attach_report`` hands them to a ``Reporter`` so server runs land in bench
+JSON / run logs like any engine run.
 """
 from __future__ import annotations
 
+import logging
 import queue
 import socket
 import threading
@@ -47,14 +71,17 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.obs import ROUND_TAPS, LatencyHistogram
+from repro.obs.alerts import Alert, log_alerts
 
 from . import protocol
-from .engines import CapacityError, JobSpec
-from .state import save_server
+from .engines import CapacityError, JobSpec, NumericsError
+from .state import latest_server_checkpoint, load_server, save_server
 
 __all__ = ["SelectionServer", "SERVE_WINDOW"]
 
 SERVE_WINDOW = 16  # ticks per telemetry window when attaching to a Reporter
+
+log = logging.getLogger("repro.serve")
 
 
 class _Item:
@@ -73,8 +100,8 @@ class _Item:
         self.event.set()
 
 
-def _err(code: str, message: str) -> dict:
-    return {"ok": False, "error": code, "message": message}
+def _err(code: str, message: str, **extra) -> dict:
+    return {"ok": False, "error": code, "message": message, **extra}
 
 
 class SelectionServer:
@@ -96,6 +123,11 @@ class SelectionServer:
         request_timeout: float = 30.0,
         ckpt_dir: Optional[str] = None,
         ckpt_every: int = 0,
+        ckpt_keep: int = 0,
+        faults=None,
+        max_restarts: int = 8,
+        restart_backoff: float = 0.05,
+        stop_timeout: float = 60.0,
     ):
         self.engine = engine
         self._host, self._port = host, int(port)
@@ -104,9 +136,17 @@ class SelectionServer:
         self.request_timeout = float(request_timeout)
         self.ckpt_dir = ckpt_dir
         self.ckpt_every = int(ckpt_every)
+        self.ckpt_keep = int(ckpt_keep)
+        self.faults = faults
+        if faults is not None:
+            engine.faults = faults
+        self.max_restarts = int(max_restarts)
+        self.restart_backoff = float(restart_backoff)
+        self.stop_timeout = float(stop_timeout)
         self._queue: "queue.Queue[_Item]" = queue.Queue(maxsize=self.max_queue)
         self._draining = threading.Event()
         self._stopped = threading.Event()
+        self._engine_dead = threading.Event()  # restart budget exhausted
         self._lock = threading.Lock()  # connection set + stats
         self._conns: set = set()
         self._threads: List[threading.Thread] = []
@@ -114,12 +154,19 @@ class SelectionServer:
         self.stats: Dict[str, int] = {
             "admitted": 0, "retired": 0, "ticks": 0, "dispatches": 0,
             "shed": 0, "timeouts": 0, "errors": 0, "checkpoints": 0,
+            "restarts": 0, "degraded": 0, "hung_engine": 0,
+            "numerics": 0, "replayed": 0,
         }
         self._shed_window = 0  # sheds since the last dispatch row
+        self._restart_window = 0  # restarts since the last dispatch row
+        self._recovery_window = 0.0  # recovery seconds since the last dispatch row
         self._rounds_since_ckpt = 0
         self.rounds_served = 0
         self.serve_rows: List[Dict[str, float]] = []
         self.latency = LatencyHistogram(lo=1e-5, hi=60.0)
+        self.recoveries: List[float] = []  # crash-to-restored latencies (s)
+        self.alerts: List[Alert] = []  # engine_restart / numerics events
+        self._tick_cache: Dict[int, Tuple[int, dict]] = {}  # uid -> (round, response)
         self.last_checkpoint: Optional[str] = None
         self._final_checkpoint = True  # kill() / close(checkpoint=False) clear it
 
@@ -145,14 +192,24 @@ class SelectionServer:
 
     def close(self, checkpoint: bool = True) -> None:
         """Graceful drain: stop admitting, answer the queue, optionally
-        write a final checkpoint, then tear the sockets down."""
+        write a final checkpoint, then tear the sockets down.  A thread that
+        outlives ``stop_timeout`` is surfaced — ``hung_engine`` stat + log
+        line — instead of being silently leaked."""
         if self._stopped.is_set():
             return
         self._final_checkpoint = bool(checkpoint)
         self._draining.set()
         self._post_stop()
         for t in self._threads:
-            t.join(timeout=60.0)
+            t.join(timeout=self.stop_timeout)
+        hung = [t.name for t in self._threads if t.is_alive()]
+        if hung:
+            with self._lock:
+                self.stats["hung_engine"] = 1
+            log.error(
+                "close(): %s did not stop within %.1fs — thread leaked, "
+                "final checkpoint may be missing", ", ".join(hung), self.stop_timeout,
+            )
         self._teardown()
 
     def kill(self) -> None:
@@ -211,7 +268,10 @@ class SelectionServer:
 
     def _handle(self, conn: socket.socket) -> None:
         """One connection's request → response loop; parse errors poison the
-        stream (respond once, then hang up)."""
+        stream (respond once, then hang up).  The chaos hook may cut the
+        connection instead of sending a response — the request already
+        executed, exactly like a network failure between server and client
+        (the idempotent tick cache is what makes the client's retry safe)."""
         try:
             while not self._stopped.is_set():
                 try:
@@ -221,7 +281,10 @@ class SelectionServer:
                 except protocol.ProtocolError as e:
                     protocol.send_message(conn, _err("bad_request", str(e)))
                     break
-                protocol.send_message(conn, self._submit(req))
+                resp = self._submit(req)
+                if self.faults is not None and self.faults.on_response():
+                    break  # fault-injected connection drop: response lost
+                protocol.send_message(conn, resp)
                 if req.get("op") == "shutdown":
                     break
         except OSError:
@@ -234,6 +297,8 @@ class SelectionServer:
     def _submit(self, req: dict) -> dict:
         """Admission control: queue the request for the engine thread and
         wait for its response (shed instead of queueing when full)."""
+        if self._engine_dead.is_set():
+            return _err("engine_down", "engine restart budget exhausted; server needs operator attention")
         if self._draining.is_set():
             return _err("draining", "server is draining; no new requests")
         item = _Item(req, time.monotonic() + self.request_timeout)
@@ -253,6 +318,89 @@ class SelectionServer:
     # -- engine side -------------------------------------------------------
 
     def _engine_loop(self) -> None:
+        """The supervisor: run the batcher; on a crashed engine step restore
+        from the newest valid checkpoint and keep serving.  In-flight
+        requests were already failed with ``retry`` by ``_dispatch``; past
+        the restart budget the queue is failed with ``engine_down`` and the
+        server stays up only to answer that."""
+        while True:
+            try:
+                self._engine_run()
+                return
+            except Exception as e:
+                if self._stopped.is_set():
+                    return
+                if not self._recover(e):
+                    self._engine_dead.set()
+                    self._fail_pending("engine_down", "engine restart budget exhausted")
+                    return
+                if self._draining.is_set():
+                    # the stop sentinel may already be consumed — finish the
+                    # drain the crashed loop was (or would be) running
+                    try:
+                        self._drain_queue()
+                        if self._final_checkpoint and self.ckpt_dir:
+                            self._checkpoint()
+                        return
+                    except Exception as e2:  # crashed again mid-drain
+                        if not self._recover(e2):
+                            self._engine_dead.set()
+                            self._fail_pending("engine_down", "engine restart budget exhausted")
+                            return
+
+    def _recover(self, exc: BaseException) -> bool:
+        """One supervised restart: backoff, restore the engine from the
+        newest *valid* checkpoint (walk-back skips corrupt stems), roll the
+        served-round cursor back to the restore point and invalidate the
+        tick cache.  Without a restorable checkpoint the in-memory engine
+        carries on (the crash happened before any state mutated).  Returns
+        False when the restart budget is exhausted."""
+        t0 = time.monotonic()
+        with self._lock:
+            self.stats["restarts"] += 1
+            self.stats["degraded"] = 1
+            n = self.stats["restarts"]
+        if n > self.max_restarts:
+            log.error("engine crashed (%s) and the restart budget (%d) is exhausted", exc, self.max_restarts)
+            return False
+        time.sleep(min(1.0, self.restart_backoff * (2 ** (n - 1))))
+        stem = latest_server_checkpoint(self.ckpt_dir) if self.ckpt_dir else None
+        restored_step = None
+        if stem is not None:
+            engine, step = load_server(stem)
+            if self.faults is not None:
+                engine.faults = self.faults
+            self.engine = engine
+            self.rounds_served = restored_step = step
+            self._rounds_since_ckpt = 0
+        self._tick_cache.clear()
+        dt = time.monotonic() - t0
+        self.recoveries.append(dt)
+        with self._lock:
+            self._restart_window += 1
+            self._recovery_window += dt
+        self.alerts.append(Alert(
+            "engine_restart", "critical",
+            {"restart": n, "recovery_s": dt, "restored_step": restored_step,
+             "checkpoint": stem, "error": repr(exc)},
+            f"engine crashed ({exc}); restart {n}/{self.max_restarts} "
+            + (f"restored step {restored_step} from {stem}" if stem else "continuing in-memory"),
+        ))
+        log.warning("engine restart %d/%d after %r: %s in %.3fs", n, self.max_restarts, exc,
+                    f"restored step {restored_step}" if stem else "no valid checkpoint", dt)
+        return True
+
+    def _fail_pending(self, code: str, message: str) -> None:
+        """Answer everything queued with an error (the engine is gone)."""
+        while True:
+            try:
+                item = self._queue.get_nowait()
+            except queue.Empty:
+                return
+            if item.req.get("op") != "_stop":
+                item.respond(_err(code, message))
+
+    def _engine_run(self) -> None:
         while True:
             try:
                 item = self._queue.get()
@@ -277,7 +425,12 @@ class SelectionServer:
                         self._dispatch(batch)
                         batch, uids = [], set()
                 else:
-                    self._dispatch(batch)  # control ops serialize with ticks
+                    try:
+                        self._dispatch(batch)  # control ops serialize with ticks
+                    except Exception:
+                        # the crash must not strand the waiting control item
+                        item.respond(_err("retry", "engine crashed before this request; retry"))
+                        raise
                     batch, uids = [], set()
                     item.respond(self._control(item.req))
                     if op == "shutdown":  # remote shutdown == graceful drain
@@ -313,13 +466,27 @@ class SelectionServer:
                 batch.append(item)
                 uids.add(item.req.get("job"))
             else:
-                self._dispatch(batch)
+                try:
+                    self._dispatch(batch)
+                except Exception:
+                    item.respond(_err("retry", "engine crashed before this request; retry"))
+                    raise
                 batch, uids = [], set()
                 item.respond(self._control(item.req))
         self._dispatch(batch)
 
     def _dispatch(self, batch: List[_Item]) -> None:
-        """One batched engine tick for the coalesced requests."""
+        """One batched engine tick for the coalesced requests.
+
+        Requests carrying a ``round`` go through the idempotency check
+        first: a replay of the engine's last-served round for that job is
+        answered from the per-job response cache (feedback is NOT
+        re-applied); any other disagreement with the engine's cursor fails
+        with ``round_desync`` + the ``expected`` round.  An engine crash
+        fails the in-flight requests with ``retry`` and re-raises to the
+        supervisor; a refused non-finite update fails them with
+        ``numerics`` and raises an alert, engine state untouched.
+        """
         if not batch:
             return
         now = time.monotonic()
@@ -336,6 +503,28 @@ class SelectionServer:
             if job is None:
                 item.respond(_err("unknown_job", f"no job {uid!r}"))
                 continue
+            r = item.req.get("round")
+            if r is not None:
+                # cursor = last served round + 1, read from the host-side
+                # response cache — engine.job_round pulls a device scalar,
+                # too slow for the per-tick hot path.  Cold cache (first
+                # tick after admit, restore or a supervised recovery) is
+                # exactly when the engine must be asked.
+                cached = self._tick_cache.get(uid)
+                cur = cached[0] + 1 if cached is not None else self.engine.job_round(uid)
+                if int(r) != cur:
+                    if cached is not None and cached[0] == int(r):
+                        with self._lock:
+                            self.stats["replayed"] += 1
+                        item.respond(cached[1])
+                        continue
+                    item.respond(_err(
+                        "round_desync",
+                        f"job {uid} is at round {cur}, request carries round {r} "
+                        "(replay from the expected round)",
+                        expected=cur,
+                    ))
+                    continue
             spec: JobSpec = job["spec"]
             try:
                 lag = protocol.feedback_lags(item.req, spec.K, self.engine.staleness)
@@ -352,29 +541,55 @@ class SelectionServer:
         t0 = time.perf_counter()
         try:
             results = self.engine.tick(items)
-        except Exception as e:  # engine rejected the batch: fail its requests
+        except (ValueError, TypeError, KeyError) as e:  # rejected batch: fail its requests
             with self._lock:
                 self.stats["errors"] += len(live)
             for item in live:
                 item.respond(_err("bad_request", str(e)))
             return
+        except NumericsError as e:  # update refused, state intact: alert + fail
+            with self._lock:
+                self.stats["numerics"] += 1
+                self.stats["errors"] += len(live)
+            self.alerts.append(Alert(
+                "numerics", "critical",
+                {"dispatch": self.stats["dispatches"], "jobs": [u for u, _ in items]},
+                str(e),
+            ))
+            log.error("non-finite selector update refused: %s", e)
+            for item in live:
+                item.respond(_err("numerics", str(e)))
+            return
+        except Exception as e:  # engine crashed: fail in-flight, wake the supervisor
+            for item in live:
+                item.respond(_err("retry", f"engine crashed mid-dispatch ({e}); retry"))
+            raise
         self.latency.observe(time.perf_counter() - t0)
         with self._lock:
             self.stats["dispatches"] += 1
             self.stats["ticks"] += len(items)
+            self.stats["degraded"] = 0  # a clean dispatch ends the degraded window
             shed = self._shed_window
+            restarts = self._restart_window
+            recovery = self._recovery_window
             self._shed_window = 0
+            self._restart_window = 0
+            self._recovery_window = 0.0
         self.serve_rows.append(
             {
                 "queue_depth": float(self._queue.qsize()),
                 "batch_jobs": float(len(items)),
                 "shed": float(shed),
+                "restarts": float(restarts),
+                "recovery_s": float(recovery),
             }
         )
         self.rounds_served += len(items)
         self._rounds_since_ckpt += len(items)
         for item in live:
-            item.respond({"ok": True, **results[item.req["job"]]})
+            resp = {"ok": True, **results[item.req["job"]]}
+            self._tick_cache[item.req["job"]] = (resp["round"], resp)
+            item.respond(resp)
         if (
             self.ckpt_dir
             and self.ckpt_every
@@ -406,6 +621,7 @@ class SelectionServer:
                 if uid not in self.engine.jobs:
                     return _err("unknown_job", f"no job {uid!r}")
                 self.engine.retire(uid)
+                self._tick_cache.pop(uid, None)
                 with self._lock:
                     self.stats["retired"] += 1
                 return {"ok": True}
@@ -432,7 +648,10 @@ class SelectionServer:
             return _err("bad_request", str(e))
 
     def _checkpoint(self) -> str:
-        stem = save_server(self.ckpt_dir, self.engine, step=self.rounds_served)
+        stem = save_server(
+            self.ckpt_dir, self.engine, step=self.rounds_served,
+            keep=self.ckpt_keep, faults=self.faults,
+        )
         self._rounds_since_ckpt = 0
         self.last_checkpoint = stem
         with self._lock:
@@ -459,3 +678,10 @@ class SelectionServer:
             )
         reporter.histogram("dispatch", self.latency)
         reporter.update(rounds_served=self.rounds_served, **{f"n_{k}": v for k, v in self.stats.items()})
+        if self.alerts:  # supervisor events (engine_restart / numerics)
+            if reporter.log is not None:
+                log_alerts(reporter.log, self.alerts)
+            reporter.data.setdefault("alerts", []).extend(
+                {"rule": a.rule, "severity": a.severity, "message": a.message, **a.detail}
+                for a in self.alerts
+            )

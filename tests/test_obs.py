@@ -684,11 +684,15 @@ class TestTapRegistry:
         assert set(ROUND_TAPS.gauge_names(group=None)) == {
             "selected", "on_time", "stale", "sigma", "capped_frac",
             "jain", "gini", "top_decile_share", "region_cep_skew",
-            "queue_depth", "batch_jobs", "shed",
+            "queue_depth", "batch_jobs", "shed", "restarts", "recovery_s",
         }
         assert set(ROUND_TAPS.gauge_names(group="fairness")) == set(FAIRNESS_SERIES)
-        assert set(ROUND_TAPS.gauge_names(group="serve")) == {"queue_depth", "batch_jobs", "shed"}
+        assert set(ROUND_TAPS.gauge_names(group="serve")) == {
+            "queue_depth", "batch_jobs", "shed", "restarts", "recovery_s",
+        }
         assert ROUND_TAPS.directions("serve")["shed"] == "lower"
+        assert ROUND_TAPS.directions("serve")["restarts"] == "lower"
+        assert ROUND_TAPS.directions("serve")["recovery_s"] == "lower"
         fair_dirs = ROUND_TAPS.directions("fairness")
         assert fair_dirs["jain"] == "higher"
         assert fair_dirs["gini"] == "lower"

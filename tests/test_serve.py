@@ -2,7 +2,9 @@
 
 What is pinned here, and why it matters:
 
-* **wire framing** — frames round-trip; truncation/oversize fail loudly.
+* **wire framing** — frames round-trip; truncation/oversize fail loudly,
+  and fuzzed garbage (random bytes, truncated frames, oversized prefixes,
+  mid-frame disconnects) never leaves a dead handler behind.
 * **batching invariance** — a job ticked alone produces bit-identical
   cohorts to the same job ticked coalesced with co-tenants (the per-job
   PRNG contract the whole batcher rests on).
@@ -13,10 +15,21 @@ What is pinned here, and why it matters:
   compiled sharded-async engine across a kill/restore.
 * **failure modes** — full slot bucket sheds with ``capacity``; full
   admission queue sheds with ``shed``; expired requests fail with
-  ``timeout``; draining servers answer what they accepted.
+  ``timeout``; draining servers answer what they accepted; a hung engine
+  thread at close is surfaced, not silently leaked.
+* **fault tolerance** — crash-safe checkpoints (sha256 walk-back past
+  corrupt stems, retention), idempotent round-tagged ticks (replay answers
+  from cache, desync carries the expected round), client retries with
+  seeded backoff, the non-finite-update guard, and the supervised restart
+  loop — capped by the seeded chaos run: engine crash + corrupted
+  checkpoint + dropped connections on a sharded-async horizon, with every
+  cohort bit-identical to a fault-free run.
 """
+import json
 import socket
+import struct
 import threading
+import time
 
 import numpy as np
 import pytest
@@ -25,6 +38,7 @@ import jax
 
 from repro.serve import (
     CapacityError,
+    FaultPlan,
     JobSpec,
     SelectionServer,
     ServeClient,
@@ -34,6 +48,7 @@ from repro.serve import (
     latest_server_checkpoint,
     load_server,
     save_server,
+    validate_stem,
 )
 from repro.serve import protocol
 
@@ -317,6 +332,283 @@ def test_transport_draining_rejects_new_requests():
 
 
 # ---------------------------------------------------------------------------
+# protocol fuzz: garbage on the wire never leaves a dead handler behind
+# ---------------------------------------------------------------------------
+
+
+def test_fuzz_random_bytes_never_kill_the_server():
+    """Seeded random byte blasts: each connection dies alone (error response
+    or clean close); the server keeps answering well-formed clients."""
+    rng = np.random.default_rng(11)
+    with _sync_server() as srv:
+        for _ in range(12):
+            s = socket.create_connection(srv.address, timeout=5.0)
+            try:
+                n = int(rng.integers(1, 256))
+                s.sendall(rng.integers(0, 256, n, dtype=np.uint8).tobytes())
+            finally:
+                s.close()
+        with ServeClient.connect(srv.address) as c:
+            assert c.hello()["ok"]
+
+
+def test_fuzz_oversized_length_prefix():
+    """A frame announcing more than MAX_MESSAGE_BYTES: error response, then
+    hang up — the stream cannot be resynced."""
+    with _sync_server() as srv:
+        s = socket.create_connection(srv.address, timeout=5.0)
+        try:
+            s.sendall(struct.pack("!I", protocol.MAX_MESSAGE_BYTES + 1))
+            resp = protocol.recv_message(s)
+            assert resp["ok"] is False and resp["error"] == "bad_request"
+            with pytest.raises((protocol.ProtocolError, OSError)):
+                protocol.recv_message(s)
+        finally:
+            s.close()
+        with ServeClient.connect(srv.address) as c:
+            assert c.hello()["ok"]
+
+
+def test_fuzz_truncated_frame_and_midframe_disconnect():
+    """A valid header with a partial payload, then disconnect: the handler
+    exits; concurrent well-formed connections are unaffected."""
+    with _sync_server() as srv:
+        body = json.dumps({"op": "hello"}).encode()
+        for cut in (0, len(body) // 2):
+            s = socket.create_connection(srv.address, timeout=5.0)
+            s.sendall(struct.pack("!I", len(body)) + body[:cut])
+            s.close()
+        body = json.dumps({"op": "hello"}).encode()  # not-JSON payloads too
+        s = socket.create_connection(srv.address, timeout=5.0)
+        try:
+            junk = b"\xff" * len(body)
+            s.sendall(struct.pack("!I", len(junk)) + junk)
+            resp = protocol.recv_message(s)
+            assert resp["ok"] is False and resp["error"] == "bad_request"
+        finally:
+            s.close()
+        with ServeClient.connect(srv.address) as c:
+            assert c.hello()["ok"]
+
+
+# ---------------------------------------------------------------------------
+# crash-safe checkpoints: sha walk-back, retention
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_walkback_and_retention(tmp_path):
+    """Corrupt stems (truncation or a bit flip) fail validation and the
+    restore walk-back skips them; retention prunes to the newest N stems."""
+    rng = np.random.default_rng(5)
+    eng = SlotEngine(K_max=32, k_cap=4, buckets=(4,))
+    uid = eng.admit(JobSpec(K=32, k=4, seed=3))
+    stems = []
+    for step in (1, 2, 3):
+        eng.tick([(uid, _lags(rng, 32, S=0))])
+        stems.append(save_server(str(tmp_path), eng, step=step))
+    assert all(validate_stem(s) for s in stems)
+    assert latest_server_checkpoint(str(tmp_path)) == stems[2]
+
+    # truncate the newest payload: sha mismatch, walk back one stem
+    with open(stems[2] + ".ckpt", "r+b") as f:
+        f.seek(0, 2)
+        f.truncate(f.tell() // 2)
+    assert not validate_stem(stems[2])
+    assert latest_server_checkpoint(str(tmp_path)) == stems[1]
+
+    # flip one byte in the next stem via the chaos hook: walk back again
+    plan = FaultPlan(corrupt_checkpoints=(0,), corrupt_mode="bitflip")
+    plan.on_checkpoint(stems[1])
+    assert plan.fired()["corrupt"] == 1
+    assert not validate_stem(stems[1])
+    assert latest_server_checkpoint(str(tmp_path)) == stems[0]
+    restored, step = load_server(stems[0])
+    assert step == 1 and restored.job_round(uid) == 1
+
+    # retention: keep=2 prunes everything but the newest 2 stems
+    eng.tick([(uid, _lags(rng, 32, S=0))])
+    s4 = save_server(str(tmp_path), eng, step=4, keep=2)
+    import os
+
+    left = sorted(f for f in os.listdir(str(tmp_path)) if f.endswith(".json"))
+    assert len(left) == 2 and left[-1] == os.path.basename(s4) + ".json"
+
+
+# ---------------------------------------------------------------------------
+# idempotent ticks, client retries, numerics guard, hung engine
+# ---------------------------------------------------------------------------
+
+
+def test_idempotent_tick_replay_and_desync():
+    """A replayed round answers from the cache (feedback NOT re-applied); a
+    round that disagrees with the engine's cursor fails with the expected
+    round attached."""
+    with _sync_server() as srv:
+        with ServeClient.connect(srv.address) as c:
+            job = c.admit(K=32, k=4, seed=2)
+            xb = protocol.encode_bits(np.ones(32))
+            out0 = c.call(op="tick", job=job, round=0, xb=xb)
+            # replay round 0 with DIFFERENT feedback: the cached response
+            # comes back and the engine state is untouched
+            again = c.call(op="tick", job=job, round=0,
+                           xb=protocol.encode_bits(np.zeros(32)))
+            assert again == out0
+            assert srv.stats["replayed"] == 1
+            with pytest.raises(ServeError) as e:
+                c.call(op="tick", job=job, round=5, xb=xb)
+            assert e.value.code == "round_desync"
+            assert e.value.response["expected"] == 1
+            assert c.call(op="tick", job=job, round=1, xb=xb)["round"] == 1
+
+
+def test_client_retries_through_dropped_responses():
+    """Fault-injected connection drops lose responses after execution; the
+    retrying client reconnects, resends the same round, and the idempotency
+    cache answers — the feedback stream lands exactly once."""
+    plan = FaultPlan(drop_responses=(3, 5))
+    srv = _sync_server(faults=plan)
+    with srv:
+        with ServeClient.connect(srv.address, retries=4, seed=0) as c:
+            job = c.admit(K=32, k=4, seed=1)  # response 0; ticks follow
+            got = [c.tick(job, bits=np.ones(32))["cohort"] for _ in range(8)]
+    ref = SlotEngine(K_max=32, k_cap=4, buckets=(4,))
+    u = ref.admit(JobSpec(K=32, k=4, seed=1))
+    want = [ref.tick([(u, np.zeros(32, np.int32))])[u]["cohort"] for _ in range(8)]
+    assert got == want
+    assert plan.fired()["drop"] == 2
+    assert srv.stats["replayed"] == 2 and srv.stats["ticks"] == 8
+
+
+def test_numerics_guard_refuses_update():
+    """A non-finite selector update is refused inside the compiled step
+    (donation makes host-side rollback impossible): the request fails with
+    ``numerics``, the round cursor does not advance, an alert is raised."""
+    with _sync_server() as srv:
+        with ServeClient.connect(srv.address) as c:
+            job = c.admit(K=32, k=4, seed=1)
+            c.tick(job, bits=np.ones(32))
+            slot = srv.engine.jobs[job]["slot"]
+            srv.engine.state = srv.engine.state._replace(
+                logw=srv.engine.state.logw.at[slot, 0].set(np.nan)
+            )
+            with pytest.raises(ServeError) as e:
+                c.tick(job, bits=np.ones(32))
+            assert e.value.code == "numerics"
+            stats = c.stats()["stats"]
+            assert stats["numerics"] == 1
+        assert srv.engine.job_round(job) == 1  # cursor did not advance
+    assert any(a.rule == "numerics" for a in srv.alerts)
+
+
+def test_close_surfaces_hung_engine():
+    """A join that outlives stop_timeout is reported (``hung_engine`` stat),
+    not silently leaked."""
+    srv = _sync_server(stop_timeout=0.3)
+    gate = threading.Event()
+    real_tick = srv.engine.tick
+
+    def stuck(items):
+        gate.wait(30.0)
+        return real_tick(items)
+
+    srv.engine.tick = stuck
+    srv.start()
+    c = ServeClient.connect(srv.address)
+    job = c.admit(K=32, k=4, seed=1)
+
+    def one():
+        try:
+            c.tick(job, bits=np.ones(32))
+        except (ServeError, protocol.ProtocolError, OSError):
+            pass
+
+    t = threading.Thread(target=one)
+    t.start()
+    time.sleep(0.3)  # let the engine thread block inside the tick
+    srv.close(checkpoint=False)
+    assert srv.stats["hung_engine"] == 1
+    gate.set()
+    t.join(timeout=10.0)
+    c.close()
+
+
+# ---------------------------------------------------------------------------
+# supervised recovery
+# ---------------------------------------------------------------------------
+
+
+def _drive_with_replay(c, job, feed, *, rounds):
+    """Round-cursor driver that survives retries, cache replay, and
+    recovery rollback: on ``round_desync`` it rewinds to the server's
+    expected round and replays the (deterministic) feedback from there."""
+    got = {}
+    t = 0
+    while t < rounds:
+        try:
+            out = c.tick(job, lags=feed[t], round=t)
+        except ServeError as e:
+            if e.code == "round_desync":
+                t = int(e.response["expected"])
+                continue
+            raise
+        got[out["round"]] = out["cohort"]
+        t = out["round"] + 1
+    return [got[i] for i in range(rounds)]
+
+
+def test_supervisor_restart_from_checkpoint(tmp_path):
+    """A fault-injected engine crash: the supervisor restores the newest
+    valid checkpoint, clients rewind on ``round_desync`` and replay — the
+    full cohort stream is bit-identical to a fault-free run."""
+    ROUNDS = 12
+    plan = FaultPlan(crash_steps=(7,))
+    rng = np.random.default_rng(3)
+    feed = [_lags(rng, 32, S=0) for _ in range(ROUNDS)]
+
+    ref = SlotEngine(K_max=32, k_cap=4, buckets=(4,))
+    u = ref.admit(JobSpec(K=32, k=4, seed=9))
+    want = [ref.tick([(u, f)])[u]["cohort"] for f in feed]
+
+    srv = SelectionServer(
+        SlotEngine(K_max=32, k_cap=4, buckets=(4,)),
+        ckpt_dir=str(tmp_path), ckpt_every=3, faults=plan, restart_backoff=0.01,
+    )
+    with srv:
+        with ServeClient.connect(srv.address, retries=6, seed=1) as c:
+            job = c.admit(K=32, k=4, seed=9)
+            got = _drive_with_replay(c, job, feed, rounds=ROUNDS)
+            stats = c.stats()["stats"]
+    assert got == want
+    assert plan.fired()["crash"] == 1
+    assert stats["restarts"] == 1
+    assert stats["degraded"] == 0  # cleared by the first clean dispatch
+    assert len(srv.recoveries) == 1
+    assert any(a.rule == "engine_restart" for a in srv.alerts)
+    assert srv.serve_series()["restarts"].sum() == 1
+
+
+def test_restart_budget_exhaustion_answers_engine_down(tmp_path):
+    """Past max_restarts the server stops restarting and answers
+    ``engine_down`` instead of looping forever."""
+    plan = FaultPlan(crash_steps=(0, 1, 2, 3))
+    srv = SelectionServer(
+        SlotEngine(K_max=32, k_cap=4, buckets=(4,)),
+        ckpt_dir=str(tmp_path), faults=plan, max_restarts=2, restart_backoff=0.0,
+    )
+    with srv:
+        with ServeClient.connect(srv.address, retries=8, seed=2) as c:
+            job = c.admit(K=32, k=4, seed=1)
+            with pytest.raises(ServeError) as e:
+                _drive_with_replay(c, job, [_lags(np.random.default_rng(0), 32, S=0)], rounds=1)
+            assert e.value.code in ("retry", "engine_down")
+            with pytest.raises(ServeError) as e:
+                c.call(op="tick", job=job, round=0,
+                       xb=protocol.encode_bits(np.ones(32)))
+            assert e.value.code == "engine_down"
+    assert srv.stats["restarts"] == 3  # 2 allowed + the one that broke the budget
+
+
+# ---------------------------------------------------------------------------
 # acceptance: loopback client, 2 jobs, sharded-async engine, kill + restore
 # ---------------------------------------------------------------------------
 
@@ -373,3 +665,80 @@ def test_acceptance_sharded_async_kill_restore(tmp_path):
         assert [r for r, _ in got[i]] == list(range(ROUNDS))
         for t in range(ROUNDS):
             assert got[i][t][1] == want[t][u]["cohort"], f"job {i} diverged at round {t}"
+
+
+@needs8
+def test_acceptance_chaos_bit_identical(tmp_path):
+    """ISSUE 9's acceptance bar: a seeded chaos schedule — ≥1 engine crash,
+    ≥1 corrupted checkpoint stem, ≥2 dropped connections, a slow dispatch —
+    against a 2-tenant sharded-async (D=8, S=2) horizon.  The horizon
+    completes, recovery restores from the newest *valid* stem (the corrupt
+    one is walked past), retrying clients rewind and replay on
+    ``round_desync`` — and every selection is cohort-for-cohort
+    bit-identical to a fault-free run.
+    """
+    ROUNDS = 30
+    rng = np.random.default_rng(29)
+    specs = [dict(K=64, k=8, rounds=ROUNDS, seed=31),
+             dict(K=48, k=4, rounds=ROUNDS, seed=37)]
+    feed = [[_lags(rng, s["K"]) for _ in range(ROUNDS)] for s in specs]
+
+    # fault-free reference, straight through the engine
+    ref = ShardedEngine(D=8, staleness=2)
+    ruid = [ref.admit(JobSpec(**s)) for s in specs]
+    want = [ref.tick([(u, f[t]) for u, f in zip(ruid, feed)]) for t in range(ROUNDS)]
+
+    # sequential driver => 1 tick per dispatch: checkpoints land at rounds
+    # 6/12/18/24 (write indices 0..3); corrupting index 3 kills the NEWEST
+    # stem before the crash at dispatch 25, so recovery MUST walk back to
+    # step 18 (not just reload the latest file)
+    plan = FaultPlan(
+        crash_steps=(25,), corrupt_checkpoints=(3,), drop_responses=(12, 31),
+        slow_steps={5: 0.02},
+    )
+    ckpt_dir = str(tmp_path / "ckpt")
+    srv = SelectionServer(
+        ShardedEngine(D=8, staleness=2),
+        ckpt_dir=ckpt_dir, ckpt_every=6, faults=plan, restart_backoff=0.01,
+    )
+    with srv:
+        with ServeClient.connect(srv.address, retries=6, seed=5) as c:
+            jobs = [c.admit(**s) for s in specs]
+            cursors = {i: 0 for i in range(len(jobs))}
+            got = {i: {} for i in range(len(jobs))}
+            while any(t < ROUNDS for t in cursors.values()):
+                for i, j in enumerate(jobs):
+                    t = cursors[i]
+                    if t >= ROUNDS:
+                        continue
+                    try:
+                        out = c.tick(j, lags=feed[i][t], round=t)
+                    except ServeError as e:
+                        if e.code == "round_desync":
+                            cursors[i] = int(e.response["expected"])
+                            continue
+                        raise
+                    got[i][out["round"]] = out["cohort"]
+                    cursors[i] = out["round"] + 1
+            stats = c.stats()["stats"]
+
+    # the schedule really ran
+    fired = plan.fired()
+    assert fired["crash"] == 1 and fired["corrupt"] == 1
+    assert fired["drop"] == 2 and fired["slow"] == 1
+    assert stats["restarts"] == 1 and stats["replayed"] >= 1
+    # recovery walked back PAST the corrupt step-24 stem (the newest at
+    # crash time) to step 18 — recorded in the restart alert; the corrupt
+    # file itself is later overwritten by a valid post-replay checkpoint
+    restart = [a for a in srv.alerts if a.rule == "engine_restart"]
+    assert len(restart) == 1
+    assert restart[0].detail["restored_step"] == 18
+    assert restart[0].detail["checkpoint"].endswith("ckpt_00000018")
+    assert srv.serve_series()["restarts"].sum() == 1
+    assert srv.serve_series()["recovery_s"].sum() > 0
+
+    # and the horizon is cohort-for-cohort bit-identical to the clean run
+    for i, u in enumerate(ruid):
+        assert sorted(got[i]) == list(range(ROUNDS))
+        for t in range(ROUNDS):
+            assert got[i][t] == want[t][u]["cohort"], f"job {i} diverged at round {t}"
