@@ -262,6 +262,20 @@ def bench_sharded_async(D: int, K: int, T: int, S: int, block: int, out: dict, r
             expected_selected=k,
         )
 
+    # the fused round path (one dispatch for allocate-epilogue/perturb/top-k
+    # and one for the observe/update/credit tail), timed with the identical
+    # taps=True instrumentation so the ratio is apples-to-apples with best_a
+    pf = RoundProgram(fl=fl, vol=lag, rho=rho, staleness=S, alpha=0.5, mesh=mesh,
+                      block=block, fused=True)
+    run_f, st_f = pf.build_runner(outputs="lean", taps=True)
+    best_f, _ = _time_sharded_run(run_f, st_f, key, xs)
+    fused_speedup = best_a / best_f
+    emit(
+        f"engine/sharded_async_fused/K={K}",
+        best_f / T * 1e6,
+        f"D={D};S={S};rounds_per_s={T / best_f:.2f};speedup_vs_staged={fused_speedup:.3f}x",
+    )
+
     ps = RoundProgram(fl=fl, vol=base, rho=rho, mesh=mesh, block=block)
     run_s, st_s = ps.build_runner(outputs="lean")
     best_s, _ = _time_sharded_run(run_s, st_s, key, xs)
@@ -274,6 +288,8 @@ def bench_sharded_async(D: int, K: int, T: int, S: int, block: int, out: dict, r
         "client_decisions_per_s": round(K * rps, 0),
         "sync_rounds_per_s": round(T / best_s, 2),
         "async_overhead_x": round(overhead, 2),
+        "fused_rounds_per_s": round(T / best_f, 2),
+        "fused_speedup_x": round(fused_speedup, 3),
         "on_time_total": float(np.asarray(on_time).sum()),
         "stale_credit_total": float(np.asarray(stale).sum()),
         "ring_mb_per_device": round(4.0 * S * K / D / 1e6, 2),

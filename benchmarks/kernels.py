@@ -1,8 +1,21 @@
-"""Kernel microbenchmarks: Pallas (interpret-mode on CPU) vs jnp oracle.
+"""Kernel benchmarks: staged vs fused round engine, tuned vs default tiles.
 
-Interpret-mode wall time is NOT TPU performance — the derived column records
-the correctness deltas and the arithmetic intensity each kernel targets; the
-roofline benchmark covers the deployment-scale analysis.
+Two surfaces:
+
+* **engine curves** — the whole compiled E3CS horizon (allocate -> perturb ->
+  top-k -> update) timed staged vs ``fused=True`` at fleet sizes.  The
+  ``*_rounds_per_s`` leaves gate in CI (``scripts/check_bench.py``);
+  ``fused_speedup_x`` is informational only (a ratio of two noisy
+  measurements — excluded from the gate by name).  On CPU both paths
+  dispatch to the jnp references (``repro.kernels.dispatch``), so the CPU
+  speedup reflects fusing the reference composition under one jit, not VMEM
+  residency — the TPU run is where the Pallas fusion shows.  Honest numbers
+  either way.
+* **tuned vs default** — the ops-level dispatch timed with the autotune
+  cache consulted (``tile=None``) against the hardcoded default tile.  The
+  cache state rides along in the JSON: cold lookups mean the "tuned" column
+  actually ran the defaults, and ``check_bench`` surfaces that as a note
+  instead of gating on it.
 """
 from __future__ import annotations
 
@@ -10,49 +23,85 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ops, ref
+from repro.kernels import autotune, ops
+from repro.obs.paths import autotune_path
 
 from .common import QUICK, emit, save_json, time_fn
 
 
-def run():
+def _engine_runner(K: int, T: int, fused: bool):
+    from repro.configs.base import FLConfig
+    from repro.core.volatility import BernoulliVolatility, paper_success_rates
+    from repro.engine.scan_sim import build_scan_runner
+
+    rho = paper_success_rates(K)
+    vol = BernoulliVolatility(jnp.asarray(rho))
+    fl = FLConfig(
+        K=K, k=max(16, K // 1000), rounds=T, scheme="e3cs", quota_frac=0.5, allocator="bisect"
+    )
+    return build_scan_runner(fl, vol, rho, outputs="lean", fused=fused)
+
+
+def bench_engine_curves(K_list, T: int, iters: int, out: dict):
+    """Staged vs fused rounds/s over the whole compiled horizon."""
+    key = jax.random.PRNGKey(0)
+    for K in K_list:
+        xs = jnp.zeros((T, 0), jnp.float32)
+        row = {"K": K, "T": T}
+        for name, fused in (("staged", False), ("fused", True)):
+            run_fn, s0 = _engine_runner(K, T, fused)
+            us = time_fn(lambda r=run_fn, s=s0: r(s, key, xs), iters=iters, warmup=1)
+            row[f"{name}_rounds_per_s"] = round(T * 1e6 / us, 2)
+            row[f"{name}_us_per_round"] = round(us / T, 1)
+        row["fused_speedup_x"] = round(row["fused_rounds_per_s"] / row["staged_rounds_per_s"], 3)
+        out[f"engine_K{K}"] = row
+        emit(
+            f"kernel/round_fused/K={K}",
+            row["fused_us_per_round"],
+            f"staged_rps={row['staged_rounds_per_s']};fused_rps={row['fused_rounds_per_s']}"
+            f";speedup={row['fused_speedup_x']}x",
+        )
+
+
+def bench_tuned_vs_default(K: int, out: dict):
+    """The dispatch path with ``tile=None`` (autotune cache) vs the
+    hardcoded default tile, on whatever route this backend picks."""
     rng = np.random.default_rng(0)
-    out = {}
+    kk = max(16, K // 100)
+    p = jnp.asarray(rng.gamma(1.0, 1.0, K), jnp.float32)
+    p = p / p.sum() * kk
+    key = jax.random.PRNGKey(1)
+    default_tile = autotune.DEFAULTS["gumbel_topk"]["tile"]
+    us_def = time_fn(lambda: ops.gumbel_topk_sample(key, p, kk, tile=default_tile), iters=3, warmup=1)
+    us_tuned = time_fn(lambda: ops.gumbel_topk_sample(key, p, kk), iters=3, warmup=1)
+    tuned = autotune.best_config("gumbel_topk", K)
+    out["tuned_vs_default"] = {
+        "kernel": "gumbel_topk", "K": K, "k": kk,
+        "default_tile": default_tile, "tuned_tile": tuned["tile"],
+        "us_default": round(us_def, 1), "us_tuned": round(us_tuned, 1),
+        "tuned_speedup_x": round(us_def / us_tuned, 3),
+    }
+    emit(
+        f"kernel/tuned_vs_default/K={K}",
+        us_tuned,
+        f"tile={tuned['tile']}v{default_tile};default_us={us_def:.0f};delta={us_def / us_tuned:.3f}x",
+    )
 
-    B, S, H, KV, hd = 1, 256, 4, 2, 64
-    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
-    k = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
-    v = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
-    o_ref = ref.flash_attention_ref(q, k, v)
-    o = ops.flash_attention(q, k, v, block_q=64, block_k=64)
-    err = float(jnp.abs(o - o_ref).max())
-    us_k = time_fn(lambda: ops.flash_attention(q, k, v, block_q=64, block_k=64), iters=3, warmup=1)
-    us_r = time_fn(lambda: ref.flash_attention_ref(q, k, v), iters=3, warmup=1)
-    out["flash_attention"] = {"max_err": err, "us_interpret": us_k, "us_ref": us_r}
-    emit("kernel/flash_attention", us_k, f"err={err:.1e};ref_us={us_r:.0f}")
 
-    b, S2, H2, P, G, N = 1, 256, 4, 32, 2, 64
-    x = jnp.asarray(rng.normal(size=(b, S2, H2, P)), jnp.float32)
-    dt = jnp.asarray(rng.uniform(0.01, 0.3, (b, S2, H2)), jnp.float32)
-    A = jnp.asarray(-rng.uniform(0.5, 2, (H2,)), jnp.float32)
-    Bm = jnp.asarray(rng.normal(size=(b, S2, G, N)), jnp.float32)
-    Cm = jnp.asarray(rng.normal(size=(b, S2, G, N)), jnp.float32)
-    y, st = ops.ssd_scan(x, dt, A, Bm, Cm, chunk=64)
-    y_ref, st_ref = ref.ssd_scan_ref(x, dt, A, Bm, Cm)
-    err = float(jnp.abs(y - y_ref).max())
-    us_k = time_fn(lambda: ops.ssd_scan(x, dt, A, Bm, Cm, chunk=64), iters=3, warmup=1)
-    us_r = time_fn(lambda: ref.ssd_scan_ref(x, dt, A, Bm, Cm), iters=3, warmup=1)
-    out["ssd_scan"] = {"max_err": err, "us_interpret": us_k, "us_ref": us_r}
-    emit("kernel/ssd_scan", us_k, f"err={err:.1e};ref_us={us_r:.0f}")
+def run(smoke: bool | None = None):
+    smoke = QUICK if smoke is None else smoke
+    autotune.reset_cold()
+    out = {"backend": jax.default_backend(), "smoke": bool(smoke)}
 
-    K = 4096 if QUICK else 1 << 20
-    p = jnp.asarray(rng.gamma(1, 1, K), jnp.float32)
-    p = p / p.sum() * 20
-    idx = ops.gumbel_topk_sample(jax.random.PRNGKey(0), p, 20, tile=1024)
-    us_k = time_fn(lambda: ops.gumbel_topk_sample(jax.random.PRNGKey(0), p, 20, tile=1024), iters=3, warmup=1)
-    out["gumbel_topk"] = {"K": K, "us_interpret": us_k, "n_unique": len(set(np.asarray(idx).tolist()))}
-    emit("kernel/gumbel_topk", us_k, f"K={K};unique={out['gumbel_topk']['n_unique']}")
+    T = 60 if smoke else 100
+    K_list = [10_000] if smoke else [100_000, 1_000_000, 10_000_000]
+    bench_engine_curves(K_list, T, iters=2 if smoke else 3, out=out)
+    bench_tuned_vs_default(10_000 if smoke else 100_000, out)
 
+    cold = autotune.cold_keys()
+    out["autotune"] = {"path": autotune_path(), "cold": bool(cold), "cold_keys": cold}
+    if cold:
+        emit("kernel/autotune", 0.0, f"COLD_CACHE:{len(cold)}_key(s)_ran_defaults")
     save_json("kernels", out)
     return out
 

@@ -1,25 +1,37 @@
 """Benchmark harness entrypoint — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV.  Honors:
+Prints ``name,us_per_call,derived`` CSV.  Usage::
+
+    python -m benchmarks.run [names ...] [--smoke]
+
+Positional ``names`` select a subset (default: everything); ``--smoke``
+forces the reduced CI protocol regardless of env.  Also honors:
   REPRO_BENCH_QUICK=0   full paper-scale protocol (hours on this CPU box)
-  REPRO_BENCH_ONLY=a,b  subset of benches to run
+  REPRO_BENCH_ONLY=a,b  subset of benches (when no positional names given)
 """
+import argparse
 import os
 import sys
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
     from . import async_bench, engine_scale, fig3_selection, fig4_cep, fig7_cardinality, inclusion, kernels, regret, roofline, scenarios_bench, serve_chaos, serve_front, table_training
 
-    quick = os.environ.get("REPRO_BENCH_QUICK", "1") == "1"
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("names", nargs="*", help="benches to run (default: all)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="force the reduced CI protocol (overrides REPRO_BENCH_QUICK)")
+    args = ap.parse_args(argv)
+
+    quick = args.smoke or os.environ.get("REPRO_BENCH_QUICK", "1") == "1"
     benches = {
         "fig3": fig3_selection.run,
         "fig4": fig4_cep.run,
         "fig7": fig7_cardinality.run,
         "regret": regret.run,
         "inclusion": inclusion.run,
-        "kernels": kernels.run,
+        "kernels": lambda: kernels.run(smoke=quick),
         "roofline": roofline.run,
         "tables": table_training.run,
         "engine": lambda: engine_scale.run(smoke=quick),
@@ -29,7 +41,10 @@ def main() -> None:
         "serve_chaos": lambda: serve_chaos.run(smoke=quick),
     }
     only = os.environ.get("REPRO_BENCH_ONLY")
-    names = only.split(",") if only else list(benches)
+    names = args.names or (only.split(",") if only else list(benches))
+    unknown = [n for n in names if n not in benches]
+    if unknown:
+        ap.error(f"unknown bench(es) {unknown}; available: {', '.join(benches)}")
     failed = []
     print("name,us_per_call,derived")
     for n in names:

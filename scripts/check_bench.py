@@ -179,6 +179,23 @@ def compare_metrics(new: dict, base: dict, tol: float, streams=None):
     return checked, regressions, notes
 
 
+def cold_autotune_note(path: str):
+    """Informational only: a ``{"autotune": {"cold": true, ...}}`` block in a
+    results file means its timings ran on untuned default tiles (the autotune
+    cache had no entry for those sizes).  Reported, never gated — a cold
+    cache is a provenance fact about the numbers, not a regression."""
+    try:
+        with open(path) as f:
+            at = (json.load(f) or {}).get("autotune") or {}
+    except (OSError, ValueError):
+        return None
+    if not at.get("cold"):
+        return None
+    keys = at.get("cold_keys") or []
+    detail = f": {', '.join(keys[:4])}{', ...' if len(keys) > 4 else ''}" if keys else ""
+    return f"autotune cache cold — timings used untuned default tiles ({len(keys)} key(s){detail})"
+
+
 def compare_file(name: str, new_path: str, base_path: str, tol: float,
                  metrics_only: bool = False, streams=None):
     with open(new_path) as f:
@@ -226,6 +243,9 @@ def main() -> int:
 
     any_regression = False
     for f in names:
+        cold = cold_autotune_note(os.path.join(args.results, f))
+        if cold:
+            print(f"check_bench: {f}: note       {cold}")
         base_path = os.path.join(baseline, f)
         if not os.path.exists(base_path):
             print(f"check_bench: {f}: no baseline yet, skipping")

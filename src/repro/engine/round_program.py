@@ -73,6 +73,7 @@ from repro.configs.base import FLConfig
 from repro.core.selection import (
     E3CSState,
     e3cs_init,
+    e3cs_probs,
     e3cs_update,
     fedcs_select,
     make_quota_schedule,
@@ -83,10 +84,18 @@ from repro.core.selection import (
     ucb_select,
     ucb_update,
 )
-from repro.core.selection.sampling import perturbed_scores
+from repro.core.selection.sampling import merge_topk_candidates, perturbed_scores
 from repro.core.volatility import DEAD_LAG
-from repro.engine.sharded import _axis_size, _pad0, _shard_topk_merge, _shmap, masked_prob_alloc
+from repro.engine.sharded import (
+    _axis_size,
+    _pad0,
+    _shard_topk_merge,
+    _shmap,
+    masked_prob_alloc,
+    masked_prob_alloc_scalars,
+)
 from repro.fl.round import ServerState, init_server_state, make_select_fn
+from repro.kernels.round_fused import fused_alloc_select, fused_perturb_select, fused_round_tail
 from repro.kernels.unpack_bits import unpack_bits, unpack_crumbs
 from repro.obs.sketches import SKETCH_FIELDS, SketchSpec, lag_bins, region_ids, sketch_carry0, sketch_step
 from repro.obs.taps import ROUND_TAPS
@@ -160,12 +169,39 @@ class _LocalCtx:
         self.K_loc = fl.K
         self.active = None
         self.e3cs_kwargs = {}
-        base = make_select_fn(fl, program.quota_fn, program.rho)
-        K = fl.K
+        K, k = fl.K, fl.k
 
-        def select(state, rng):
-            idx, p, capped, sigma = base(state, rng)
-            return idx, p, capped, sigma, selection_mask(idx, K)
+        if program.fused:
+            # fused allocate-epilogue + perturb + top-k: the Gumbel field is
+            # drawn with the staged sampler's exact call so the staged and
+            # fused engines consume identical noise (bit-identity contract)
+            allocator = getattr(fl, "allocator", "sort")
+            quota_fn = program.quota_fn
+
+            def select(state, rng):
+                sigma = quota_fn(state.t)
+                g = jax.random.gumbel(rng, (K,), jnp.float32)
+                if allocator == "bisect":
+                    with stage("round.allocate"):
+                        w = jnp.exp(state.e3cs.logw - jnp.max(state.e3cs.logw))
+                        scalars = masked_prob_alloc_scalars(w, k, sigma)
+                    with stage("round.sample"):
+                        p, capped, _, idx = fused_alloc_select(
+                            w, g, k, sigma=sigma, scalars=scalars
+                        )
+                else:
+                    with stage("round.allocate"):
+                        p, capped = e3cs_probs(state.e3cs, k, sigma)
+                    with stage("round.sample"):
+                        _, idx = fused_perturb_select(p, g, k)
+                return idx, p, capped, sigma, selection_mask(idx, K)
+
+        else:
+            base = make_select_fn(fl, program.quota_fn, program.rho)
+
+            def select(state, rng):
+                idx, p, capped, sigma = base(state, rng)
+                return idx, p, capped, sigma, selection_mask(idx, K)
 
         self.select = select
         self.observe = _make_observe(program, K_loc=K, fold=lambda key: key)
@@ -206,14 +242,34 @@ class _ShardCtx:
                     jnp.max(jnp.where(active_loc > 0, logw, -jnp.inf)), axis_name
                 )
                 w = jnp.exp(logw - gmax) * active_loc
-                with stage("round.allocate"):
-                    p, capped = masked_prob_alloc(
-                        w, k, sigma, active=active_loc, n_iters=program.n_iters,
-                        tile=program.tile, axis_name=axis_name, block=program.block,
-                    )
-                k_sel = jax.random.fold_in(k1, d) if D > 1 else k1
-                scores = jnp.where(active_loc > 0, perturbed_scores(k_sel, p), -jnp.inf)
-                idx = _shard_topk_merge(scores, k, axis_name)
+                if program.fused:
+                    # one VMEM pass: allocation epilogue + perturb + local
+                    # top-k; only the bisection scalars and the (D, k)
+                    # candidate merge cross shards
+                    k_sel = jax.random.fold_in(k1, d) if D > 1 else k1
+                    g = jax.random.gumbel(k_sel, (Ks,), jnp.float32)
+                    with stage("round.allocate"):
+                        scalars = masked_prob_alloc_scalars(
+                            w, k, sigma, active=active_loc, n_iters=program.n_iters,
+                            tile=program.tile, axis_name=axis_name, block=program.block,
+                        )
+                    with stage("round.sample"):
+                        p, capped, vals, loc = fused_alloc_select(
+                            w, g, k, sigma=sigma, scalars=scalars, active=active_loc
+                        )
+                        gi = loc + jnp.asarray(d * Ks, jnp.int32)
+                        cv = jax.lax.all_gather(vals, axis_name, tiled=True)
+                        ci = jax.lax.all_gather(gi, axis_name, tiled=True)
+                        idx = merge_topk_candidates(cv, ci, k)
+                else:
+                    with stage("round.allocate"):
+                        p, capped = masked_prob_alloc(
+                            w, k, sigma, active=active_loc, n_iters=program.n_iters,
+                            tile=program.tile, axis_name=axis_name, block=program.block,
+                        )
+                    k_sel = jax.random.fold_in(k1, d) if D > 1 else k1
+                    scores = jnp.where(active_loc > 0, perturbed_scores(k_sel, p), -jnp.inf)
+                    idx = _shard_topk_merge(scores, k, axis_name)
             elif scheme == "random":
                 idx = random_select(k1, K, k)
             elif scheme == "fedcs":
@@ -315,6 +371,16 @@ def _make_step(program: "RoundProgram", ctx, lean: bool, taps: bool = False,
     S = 0 if sync else int(program.staleness)
     alpha = program.alpha
     late_fb = (not sync) and program.feedback == "late_credit" and scheme == "e3cs" and S > 0
+    fused = program.fused
+    if fused:
+        # static per-slot credit schedule + in-kernel observe decode kind
+        decay = tuple(alpha ** (s + 1) for s in range(S))
+        if program.override == "packed":
+            kind = "bits"
+        elif program.override == "packed_lags":
+            kind = "crumbs"
+        else:
+            kind = "x" if sync else "lag"
     if sketch is not None:
         L = lag_bins(program.staleness)
         if region is None:
@@ -350,23 +416,66 @@ def _make_step(program: "RoundProgram", ctx, lean: bool, taps: bool = False,
         # allocate + select
         with stage("round.select"):
             idx, p, capped, sigma, mask = ctx.select(state, k1)
-        # observe
-        with stage("round.observe"):
-            obs, vs = ctx.observe(x_over, k2, state.vol_state)
-        if sync:
-            x = obs
+        if fused:
+            # observe-decode + Eq. 16/17 elementwise + credit rings in ONE
+            # fused pass (repro.kernels.round_fused); only the recenter —
+            # which needs a cross-tile / cross-shard max — stays out here
+            with stage("round.observe"):
+                if kind in ("bits", "crumbs"):
+                    obs, vs = x_over, state.vol_state  # raw bytes decode in-kernel
+                else:
+                    obs, vs = ctx.observe(x_over, k2, state.vol_state)
+            with stage("round.update"):
+                residual = jnp.asarray(k, p.dtype) - K_glob * sigma
+                tail = fused_round_tail(
+                    obs, mask, p, capped, state.e3cs.logw, state.loss_cache,
+                    rings[0] if (not sync and S > 0) else None,
+                    rings[1] if late_fb else None,
+                    kind=kind, residual=residual, eta=eta, K_glob=K_glob,
+                    decay=decay, active=ctx.active,
+                )
+                x = tail["x"]
+                logw = tail["logw_pre"] - ctx.pmax(tail["m"])
+                if ctx.active is not None:
+                    logw = logw * ctx.active
+                e3cs = E3CSState(logw=logw, t=state.e3cs.t + 1)
+                loss_cache = tail["loss_cache"]
+                ucb = state.ucb
+            if not sync:
+                lag = tail["lag"]
+                with stage("round.credit"):
+                    if S == 0:
+                        arriving, new_rings = jnp.zeros_like(mask), (rings[0],)
+                    else:
+                        arriving, new_rings = tail["arriving"], (tail["credit"],)
+                    if late_fb:
+                        logw = e3cs.logw + tail["arr_fb"]
+                        m = jnp.max(logw) if ctx.active is None else jnp.max(
+                            jnp.where(ctx.active > 0, logw, -jnp.inf)
+                        )
+                        logw = logw - ctx.pmax(m)
+                        if ctx.active is not None:
+                            logw = logw * ctx.active
+                        e3cs = e3cs._replace(logw=logw)
+                        new_rings = new_rings + (tail["fb"],)
         else:
-            lag = obs
-            x = (lag == 0).astype(jnp.float32)  # deadline-based selector feedback
-        # update (selector state; Eq. 16/17 lives in e3cs_update)
-        with stage("round.update"):
-            e3cs = state.e3cs
-            if scheme == "e3cs":
-                e3cs = e3cs_update(state.e3cs, p, capped, mask, x, k, sigma, eta, **ctx.e3cs_kwargs)
-            loss_cache = jnp.where(mask > 0, 1.0 - x, state.loss_cache)  # pow-d loss proxy
-            ucb = state.ucb
-            if scheme == "ucb":
-                ucb = ucb_update(state.ucb, idx, ctx.gather(x))
+            # observe
+            with stage("round.observe"):
+                obs, vs = ctx.observe(x_over, k2, state.vol_state)
+            if sync:
+                x = obs
+            else:
+                lag = obs
+                x = (lag == 0).astype(jnp.float32)  # deadline-based selector feedback
+            # update (selector state; Eq. 16/17 lives in e3cs_update)
+            with stage("round.update"):
+                e3cs = state.e3cs
+                if scheme == "e3cs":
+                    e3cs = e3cs_update(state.e3cs, p, capped, mask, x, k, sigma, eta, **ctx.e3cs_kwargs)
+                loss_cache = jnp.where(mask > 0, 1.0 - x, state.loss_cache)  # pow-d loss proxy
+                ucb = state.ucb
+                if scheme == "ucb":
+                    ucb = ucb_update(state.ucb, idx, ctx.gather(x))
         if sync:
             state = state._replace(
                 e3cs=e3cs, ucb=ucb, vol_state=vs, t=state.t + 1,
@@ -385,33 +494,35 @@ def _make_step(program: "RoundProgram", ctx, lean: bool, taps: bool = False,
                 return (state, key, new_tapc), out + (row,)
             return (state, key), out
         # credit: pop this round's arrivals, push the new late completions
-        with stage("round.credit"):
-            if S == 0:
-                arriving, pending = jnp.zeros_like(mask), rings[0]
-            else:
-                sched = lag_credit_schedule(mask, lag, S, alpha)
-                arriving, pending = ring_pop_push(rings[0], sched)
-            new_rings = (pending,)
-            if late_fb:
-                # buffer the selection-round importance weight next to the credit
-                # ring: the arriving slot is a ready-to-apply log-weight step
-                # (same residual/clamp as e3cs_update, decayed reward alpha**lag;
-                # the schedule rows are shared with the credit ring above)
-                xhat_rows = sched / jnp.maximum(p, 1e-12)
-                residual = jnp.asarray(k, p.dtype) - K_glob * sigma
-                rows = jnp.minimum(residual * eta * xhat_rows / K_glob, 1.0)
-                frozen = capped if ctx.active is None else capped | (ctx.active == 0)
-                rows = jnp.where(frozen, 0.0, rows)
-                arriving_fb, fb = ring_pop_push(rings[1], rows)
-                logw = e3cs.logw + arriving_fb
-                m = jnp.max(logw) if ctx.active is None else jnp.max(
-                    jnp.where(ctx.active > 0, logw, -jnp.inf)
-                )
-                logw = logw - ctx.pmax(m)
-                if ctx.active is not None:
-                    logw = logw * ctx.active
-                e3cs = e3cs._replace(logw=logw)
-                new_rings = (pending, fb)
+        # (the fused path already did this inside the tail kernel)
+        if not fused:
+            with stage("round.credit"):
+                if S == 0:
+                    arriving, pending = jnp.zeros_like(mask), rings[0]
+                else:
+                    sched = lag_credit_schedule(mask, lag, S, alpha)
+                    arriving, pending = ring_pop_push(rings[0], sched)
+                new_rings = (pending,)
+                if late_fb:
+                    # buffer the selection-round importance weight next to the credit
+                    # ring: the arriving slot is a ready-to-apply log-weight step
+                    # (same residual/clamp as e3cs_update, decayed reward alpha**lag;
+                    # the schedule rows are shared with the credit ring above)
+                    xhat_rows = sched / jnp.maximum(p, 1e-12)
+                    residual = jnp.asarray(k, p.dtype) - K_glob * sigma
+                    rows = jnp.minimum(residual * eta * xhat_rows / K_glob, 1.0)
+                    frozen = capped if ctx.active is None else capped | (ctx.active == 0)
+                    rows = jnp.where(frozen, 0.0, rows)
+                    arriving_fb, fb = ring_pop_push(rings[1], rows)
+                    logw = e3cs.logw + arriving_fb
+                    m = jnp.max(logw) if ctx.active is None else jnp.max(
+                        jnp.where(ctx.active > 0, logw, -jnp.inf)
+                    )
+                    logw = logw - ctx.pmax(m)
+                    if ctx.active is not None:
+                        logw = logw * ctx.active
+                    e3cs = e3cs._replace(logw=logw)
+                    new_rings = (pending, fb)
         on_time = ctx.psum(jnp.vdot(mask, x))
         stale = ctx.psum(jnp.sum(arriving))
         state = state._replace(
@@ -509,10 +620,21 @@ class RoundProgram:
     n_iters: int = 48
     tile: int = 8192
     block: int = 1
+    fused: bool = False
     base_vol: object = None
     quota_fn: object = None  # override; default derives the schedule from fl
 
     def __post_init__(self):
+        if self.fused:
+            if self.fl.scheme != "e3cs":
+                raise ValueError(
+                    "fused=True fuses the E3CS allocate/perturb/update stages; "
+                    f"scheme {self.fl.scheme!r} has nothing to fuse"
+                )
+            if self.fl.sampler != "plackett_luce":
+                raise ValueError(
+                    "fused=True implements the plackett_luce (Gumbel top-k) sampler only"
+                )
         if self.override not in OBSERVE_MODES:
             raise ValueError(f"unknown override mode {self.override!r} (want one of {OBSERVE_MODES})")
         if self.feedback not in FEEDBACK_MODES:

@@ -111,6 +111,7 @@ def build_scan_runner(
     block: int = 1,
     taps: bool = False,
     sketch=None,
+    fused: bool = False,
 ):
     """Compile a whole-horizon runner for an arbitrary volatility model.
 
@@ -149,13 +150,18 @@ def build_scan_runner(
     (``repro.obs.sketches``; shard streams merge via ``merge_sketches``,
     ``fairness_series`` turns them into Jain/Gini/top-share).
 
+    ``fused=True`` (E3CS + plackett_luce only) swaps the staged
+    allocate-epilogue/perturb/top-k and observe/update/credit stages for the
+    one-pass fused kernels in ``repro.kernels.round_fused`` — bit-identical
+    to the staged pipeline (pinned against the same goldens), default off.
+
     Unlike ``scan_selection_sim`` this builder is not memoised: hold on to
     the returned ``run`` to amortise compilation across repeat calls (the
     scenario harness and benchmarks do).
     """
     program = RoundProgram(
         fl=fl, vol=vol, rho=rho, override=override, staleness=staleness, alpha=alpha,
-        feedback=feedback, mesh=mesh, block=block,
+        feedback=feedback, mesh=mesh, block=block, fused=fused,
     )
     return program.build_runner(
         outputs=outputs, carry_key=carry_key, scan_length=scan_length, taps=taps, sketch=sketch
@@ -164,7 +170,7 @@ def build_scan_runner(
 
 @functools.lru_cache(maxsize=64)
 def _compiled_runner(scheme, K, k, T, quota, frac, eta, sampler, volatility, stickiness, seed, override, allocator,
-                     taps=False):
+                     taps=False, fused=False):
     """Cache the jitted whole-horizon runner per static configuration, so
     repeat calls (sweeps, benchmarks) pay compilation once."""
     fl = FLConfig(
@@ -173,7 +179,7 @@ def _compiled_runner(scheme, K, k, T, quota, frac, eta, sampler, volatility, sti
     )
     rho = jnp.asarray(paper_success_rates(K))
     vol = make_volatility(volatility, rho, stickiness=stickiness, seed=seed)
-    return build_scan_runner(fl, vol, rho, override=override, taps=taps)
+    return build_scan_runner(fl, vol, rho, override=override, taps=taps, fused=fused)
 
 
 def scan_selection_sim(
@@ -194,6 +200,7 @@ def scan_selection_sim(
     rho=None,
     allocator: str = "sort",
     taps: bool = False,
+    fused: bool = False,
 ) -> Dict[str, np.ndarray]:
     """Drop-in replacement for the legacy ``selection_sim`` loop.
 
@@ -219,10 +226,11 @@ def scan_selection_sim(
             rho = paper_success_rates(K)
         if vol is None:
             vol = make_volatility(volatility, rho, stickiness=stickiness, seed=seed)
-        run, state = build_scan_runner(fl, vol, rho, override=override, taps=taps)
+        run, state = build_scan_runner(fl, vol, rho, override=override, taps=taps, fused=fused)
     else:
         run, state = _compiled_runner(
-            scheme, K, k, T, quota, frac, eta, sampler, volatility, stickiness, seed, override, allocator, taps
+            scheme, K, k, T, quota, frac, eta, sampler, volatility, stickiness, seed, override, allocator, taps,
+            fused,
         )
     key = jax.random.PRNGKey(seed)
     if override == "dense":
@@ -278,6 +286,7 @@ def async_selection_sim(
     feedback: str = "deadline",
     packed_lag_override: Optional[np.ndarray] = None,
     taps: bool = False,
+    fused: bool = False,
 ) -> Dict[str, np.ndarray]:
     """Whole-horizon *async* numerical experiment: completion-lag outcomes,
     bounded staleness buffer of ``staleness`` rounds, late credit
@@ -310,7 +319,7 @@ def async_selection_sim(
         rho = paper_success_rates(K)
     run, state = build_scan_runner(
         fl, lag_model, rho, override=override, outputs=outputs, staleness=int(staleness), alpha=alpha,
-        feedback=feedback, taps=taps,
+        feedback=feedback, taps=taps, fused=fused,
     )
     key = jax.random.PRNGKey(seed)
     if override == "packed_lags":

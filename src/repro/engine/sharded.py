@@ -64,6 +64,7 @@ from repro.kernels.bisect_tiles import bisect_block_sums
 __all__ = [
     "prob_alloc_sharded",
     "masked_prob_alloc",
+    "masked_prob_alloc_scalars",
     "prob_alloc_shmap",
     "distributed_topk",
     "plackett_luce_shmap",
@@ -158,16 +159,44 @@ def masked_prob_alloc(
       ``(p, capped)``: allocation with ``sum(p) = k``, ``sigma <= p_i <= 1``
       on active arms and ``p_i = 0`` off them; ``capped`` is the overflow set.
     """
+    w, active, k, sigma = _alloc_prelude(w, k, sigma, active)
+    residual, cap, denom, use_cap = _alloc_scalars(
+        w, k, sigma, active, n_iters=n_iters, tile=tile, axis_name=axis_name, block=block
+    )
+    # the unified elementwise epilogue: with cap=+inf / denom=max(w_sum,eps)
+    # in the plain branch, min(w, cap) == w bitwise, so one expression
+    # reproduces both branches of the historical lax.cond exactly.
+    p = sigma + residual * jnp.minimum(w, cap) / denom
+    capped = (p >= 1.0 - 1e-6) & use_cap
+    p = jnp.clip(p, sigma, 1.0) * active
+    return p, capped & (active > 0)
+
+
+def _alloc_prelude(w, k, sigma, active):
+    """Shared input normalisation: cast to the weight dtype and fold the
+    activity mask into the weights (exactly once)."""
     w = jnp.asarray(w)
     dt = w.dtype
-    eps = _tiny(dt)
     if active is None:
         active = jnp.ones(w.shape, dt)
     else:
         active = jnp.asarray(active, dt)
-    w = w * active
-    k = jnp.asarray(k, dt)
-    sigma = jnp.asarray(sigma, dt)
+    return w * active, active, jnp.asarray(k, dt), jnp.asarray(sigma, dt)
+
+
+def _alloc_scalars(w, k, sigma, active, *, n_iters, tile, axis_name, block):
+    """The scalar half of ``masked_prob_alloc``: bracket the cap by
+    bisection and return ``(residual, cap, denom, use_cap)`` such that
+
+        p_raw  = sigma + residual * min(w, cap) / denom
+        capped = (p_raw >= 1 - 1e-6) & use_cap
+        p      = clip(p_raw, sigma, 1) * active
+
+    reproduces the full allocation bitwise.  ``w`` must already be masked
+    (``_alloc_prelude``).  This is the piece the fused round kernel hoists
+    out: everything downstream of these four scalars is elementwise."""
+    dt = w.dtype
+    eps = _tiny(dt)
     K_act = _reduce_sum(active, tile, axis_name)
     residual = k - K_act * sigma  # >= 0 by the feasibility constraint
     one_ms = 1.0 - sigma
@@ -213,17 +242,33 @@ def masked_prob_alloc(
         lo, hi = jax.lax.fori_loop(0, n_pass, body, (jnp.zeros((), dt), hi0))
         alpha = 0.5 * (lo + hi)
         cap = one_ms * alpha
-        w_c = jnp.minimum(w, cap)
-        p = sigma + residual * w_c / jnp.maximum(_reduce_sum(w_c, tile, axis_name), eps)
-        return p, p >= 1.0 - 1e-6
+        denom = jnp.maximum(_reduce_sum(jnp.minimum(w, cap), tile, axis_name), eps)
+        return residual, cap, denom, jnp.ones((), bool)
 
     def plain_branch(_):
-        p = sigma + residual * w / jnp.maximum(w_sum, eps)
-        return p, jnp.zeros(w.shape, bool)
+        return residual, jnp.asarray(jnp.inf, dt), jnp.maximum(w_sum, eps), jnp.zeros((), bool)
 
-    p, capped = jax.lax.cond(overflow, capped_branch, plain_branch, None)
-    p = jnp.clip(p, sigma, 1.0) * active
-    return p, capped & (active > 0)
+    return jax.lax.cond(overflow, capped_branch, plain_branch, None)
+
+
+def masked_prob_alloc_scalars(
+    w: jax.Array,
+    k: jax.Array,
+    sigma: jax.Array,
+    active: jax.Array | None = None,
+    n_iters: int = 48,
+    tile: int = 8192,
+    axis_name: Optional[str] = None,
+    block: int = 1,
+):
+    """``masked_prob_alloc`` minus its elementwise epilogue: run the same
+    bisection (identical scalars, identical cross-shard reductions) and
+    return ``(residual, cap, denom, use_cap)``.  The fused round kernel
+    (``repro.kernels.round_fused``) consumes these to rebuild ``p`` /
+    ``capped`` inside one VMEM-resident pass, bit-identical to the staged
+    allocator."""
+    w, active, k, sigma = _alloc_prelude(w, k, sigma, active)
+    return _alloc_scalars(w, k, sigma, active, n_iters=n_iters, tile=tile, axis_name=axis_name, block=block)
 
 
 @partial(jax.jit, static_argnames=("k", "n_iters", "tile", "block"))
@@ -356,6 +401,7 @@ def build_sharded_scan_runner(
     carry_key: bool = False,
     scan_length: Optional[int] = None,
     taps: bool = False,
+    fused: bool = False,
 ):
     """Compile the whole T-round horizon with the K axis sharded over a mesh.
 
@@ -410,7 +456,7 @@ def build_sharded_scan_runner(
     program = RoundProgram(
         fl=fl, vol=vol, rho=rho, override=override, staleness=staleness, alpha=alpha,
         feedback=feedback, mesh=mesh, axis_name=axis_name, n_iters=n_iters, tile=tile,
-        block=block,
+        block=block, fused=fused,
     )
     return program.build_runner(outputs=outputs, carry_key=carry_key, scan_length=scan_length, taps=taps)
 
@@ -434,6 +480,7 @@ def sharded_selection_sim(
     vol=None,
     rho=None,
     taps: bool = False,
+    fused: bool = False,
 ):
     """Sharded counterpart of ``engine.scan_sim.scan_selection_sim``: same
     keyword surface plus a ``mesh``, same output dict (K-wide arrays sliced
@@ -452,7 +499,7 @@ def sharded_selection_sim(
     if vol is None:
         vol = make_volatility(volatility, jnp.asarray(rho), stickiness=stickiness, seed=seed)
     run, state = build_sharded_scan_runner(
-        fl, vol, rho, mesh, override=override, outputs=outputs, block=block, taps=taps
+        fl, vol, rho, mesh, override=override, outputs=outputs, block=block, taps=taps, fused=fused
     )
     key = jax.random.PRNGKey(seed)
     if override == "dense":

@@ -1,3 +1,5 @@
-from . import ops, ref
-from .ops import flash_attention, ssd_scan, gumbel_topk_sample
+from . import autotune, dispatch, ops, ref
+from .dispatch import interpret_mode, kernel_route
+from .ops import e3cs_update_tiled, fused_gumbel_topk_sample, gumbel_topk_sample
+from .round_fused import fused_alloc_select, fused_perturb_select, fused_round_tail
 from .unpack_bits import unpack_bits, unpack_bits_kernel_call, unpack_bits_ref

@@ -1,0 +1,297 @@
+"""Tile autotuning: sweep kernel launch configs once, cache winners on disk.
+
+The Pallas entry points in this package historically hardcoded
+``tile=8192``.  That is a fine default for the CI box but leaves real
+bandwidth on the table at K=1e7 (too many grid steps) and can exceed VMEM
+for wide dtypes on small cores.  This module sweeps a small candidate grid
+per ``(kernel, K-bucket, dtype, backend)`` with
+``benchmarks.common.time_fn(blocking=True)`` and persists the winners to a
+JSON cache under ``results/autotune/`` (``REPRO_AUTOTUNE_DIR`` overrides —
+see ``repro.obs.paths``).  ``ops.py`` dispatch consults the cache whenever
+a caller leaves ``tile=None``; callers that pass an explicit tile (the
+engine's ``RoundProgram``, whose reduction grouping is part of its golden
+contract) are never affected.
+
+Cache format (one flat JSON object, sorted keys)::
+
+    {
+      "bisect_tiles|K1048576|float32|cpu": {"tile": 16384, "block": 4},
+      "gumbel_topk|K1048576|float32|cpu":  {"tile": 8192},
+      ...
+    }
+
+K is bucketed to the next power of two (min 1024) so one sweep covers a
+band of problem sizes.  A corrupt or unreadable cache degrades to the
+hardcoded defaults with a warning — it never crashes a run.  Cold lookups
+(no cache entry) are recorded and surfaced by ``benchmarks/kernels.py`` so
+``scripts/check_bench.py`` can annotate timings taken with untuned
+defaults.  The sweep itself is deterministic given fixed timings: candidate
+order is fixed and ties break toward the earlier candidate.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+import warnings
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.obs.paths import autotune_path
+
+__all__ = [
+    "DEFAULTS", "CANDIDATES", "cache_key", "load_cache", "save_cache",
+    "best_config", "sweep", "autotune", "cold_keys", "reset_cold",
+]
+
+DEFAULTS: Dict[str, Dict[str, int]] = {
+    "gumbel_topk": {"tile": 8192},
+    "e3cs_tiles": {"tile": 8192},
+    "bisect_tiles": {"tile": 8192, "block": 4},
+    "round_fused": {"tile": 8192},
+}
+
+# Candidate grids.  "tile" is the 1-D grid block; "block" is the bisection
+# probe count exponent (2**block - 1 probe points per sweep); "unroll" is
+# reserved for kernels that expose it (none currently do — kept so cache
+# entries stay forward-compatible).
+CANDIDATES: Dict[str, Dict[str, List[int]]] = {
+    "gumbel_topk": {"tile": [2048, 4096, 8192, 16384, 32768]},
+    "e3cs_tiles": {"tile": [2048, 4096, 8192, 16384, 32768]},
+    "bisect_tiles": {"tile": [2048, 4096, 8192, 16384, 32768], "block": [2, 4, 6]},
+    "round_fused": {"tile": [2048, 4096, 8192, 16384, 32768]},
+}
+
+_cache_memo: Tuple[Optional[str], Optional[float], Optional[dict]] = (None, None, None)
+_cold: set = set()
+
+
+def _bucket(K: int) -> int:
+    """Power-of-two bucket (min 1024) so one sweep covers a size band."""
+    return 1 << max(10, int(K - 1).bit_length())
+
+
+def cache_key(kernel: str, K: int, dtype: str = "float32", backend: Optional[str] = None) -> str:
+    backend = backend or jax.default_backend()
+    return f"{kernel}|K{_bucket(K)}|{dtype}|{backend}"
+
+
+def load_cache(path: Optional[str] = None) -> Dict[str, Dict[str, int]]:
+    """Read the JSON cache; corrupt/missing degrades to ``{}`` (warn once
+    per offending file content, never raise)."""
+    path = path or autotune_path()
+    if not os.path.exists(path):
+        return {}
+    try:
+        with open(path) as f:
+            cache = json.load(f)
+        if not isinstance(cache, dict) or not all(isinstance(v, dict) for v in cache.values()):
+            raise ValueError("autotune cache is not a {key: config} object")
+    except (ValueError, OSError) as e:
+        warnings.warn(f"ignoring corrupt autotune cache {path}: {e}", stacklevel=2)
+        return {}
+    return cache
+
+
+def save_cache(cache: Dict[str, Dict[str, int]], path: Optional[str] = None) -> str:
+    path = path or autotune_path()
+    with open(path, "w") as f:
+        json.dump({k: cache[k] for k in sorted(cache)}, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def _cached(path: str) -> dict:
+    """mtime-memoised cache read, so per-call lookups stay cheap while
+    external writes (another process refreshing the cache) are picked up."""
+    global _cache_memo
+    try:
+        mtime = os.stat(path).st_mtime
+    except OSError:
+        mtime = None
+    memo_path, memo_mtime, memo_val = _cache_memo
+    if memo_path == path and memo_mtime == mtime and memo_val is not None:
+        return memo_val
+    val = load_cache(path)
+    _cache_memo = (path, mtime, val)
+    return val
+
+
+def best_config(kernel: str, K: int, dtype: str = "float32", backend: Optional[str] = None) -> Dict[str, int]:
+    """Tuned launch config for ``kernel`` at size ``K`` — cache hit merged
+    over the hardcoded defaults; a miss returns the defaults and is
+    recorded as a cold lookup (see ``cold_keys``)."""
+    base = dict(DEFAULTS.get(kernel) or {"tile": 8192})
+    key = cache_key(kernel, K, dtype, backend)
+    hit = _cached(autotune_path()).get(key)
+    if hit is None:
+        _cold.add(key)
+        return base
+    base.update({k: int(v) for k, v in hit.items() if isinstance(v, (int, float))})
+    return base
+
+
+def cold_keys() -> List[str]:
+    """Cache keys that were looked up but had no tuned entry, since the
+    last ``reset_cold()`` — a cold cache means timings reflect defaults."""
+    return sorted(_cold)
+
+
+def reset_cold() -> None:
+    _cold.clear()
+
+
+# ---------------------------------------------------------------------------
+# Sweep harness
+# ---------------------------------------------------------------------------
+
+def _time_fn_fallback(fn, *args, iters: int = 3, warmup: int = 1, blocking: bool = True):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / max(iters, 1) * 1e6
+
+
+def _timer():
+    try:
+        from benchmarks.common import time_fn
+        return time_fn
+    except ImportError:
+        return _time_fn_fallback
+
+
+def _bench_builder(kernel: str, K: int, seed: int = 0):
+    """A closure ``build(config) -> fn`` timing the dispatch path actually
+    used in production (the ops-level wrappers) under ``config``."""
+    rng = np.random.default_rng(seed)
+    if kernel == "gumbel_topk":
+        from repro.kernels import ops
+        p = jnp.asarray(np.abs(rng.normal(size=K)) + 1e-3, jnp.float32)
+        key = jax.random.PRNGKey(seed)
+        kk = max(8, min(K // 16, 1024))
+
+        def build(cfg):
+            return lambda: ops.gumbel_topk_sample(key, p, kk, tile=cfg["tile"])
+        return build
+    if kernel == "e3cs_tiles":
+        from repro.kernels import ops
+        logw = jnp.asarray(rng.normal(size=K), jnp.float32)
+        p = jnp.asarray(rng.uniform(0.05, 1.0, size=K), jnp.float32)
+        mask = jnp.asarray(rng.binomial(1, 0.2, size=K), jnp.float32)
+        x = jnp.asarray(rng.binomial(1, 0.6, size=K), jnp.float32)
+        frozen = jnp.zeros((K,), jnp.float32)
+
+        def build(cfg):
+            return lambda: ops.e3cs_update_tiled(logw, p, mask, x, frozen, 0.1, tile=cfg["tile"])
+        return build
+    if kernel == "bisect_tiles":
+        from repro.kernels.bisect_tiles import bisect_block_sums
+        w = jnp.asarray(rng.uniform(0.0, 1.0, size=K), jnp.float32)
+
+        def build(cfg):
+            n_caps = (1 << cfg.get("block", 4)) - 1
+            caps = jnp.linspace(0.01, 1.0, n_caps, dtype=jnp.float32)
+            return lambda: bisect_block_sums(w, caps, tile=cfg["tile"])
+        return build
+    if kernel == "round_fused":
+        from repro.engine.sharded import masked_prob_alloc_scalars
+        from repro.kernels.round_fused import fused_alloc_select
+        w = jnp.asarray(rng.uniform(0.0, 1.0, size=K), jnp.float32)
+        kk = max(8, min(K // 16, 1024))
+        sigma = jnp.float32(0.2 * kk / K)
+        scalars = jax.jit(lambda w_, s_: masked_prob_alloc_scalars(w_, kk, s_))(w, sigma)
+        g = jax.random.gumbel(jax.random.PRNGKey(seed), (K,), jnp.float32)
+
+        def build(cfg):
+            return lambda: fused_alloc_select(w, g, kk, sigma=sigma, scalars=scalars, tile=cfg["tile"])
+        return build
+    raise ValueError(f"unknown kernel {kernel!r}")
+
+
+def _configs(kernel: str, candidates: Optional[Dict[str, List[int]]] = None) -> List[Dict[str, int]]:
+    grid = candidates or CANDIDATES[kernel]
+    axes = sorted(grid)
+    configs: List[Dict[str, int]] = [{}]
+    for ax in axes:
+        configs = [dict(c, **{ax: v}) for c in configs for v in grid[ax]]
+    return configs
+
+
+def sweep(
+    kernel: str,
+    K: int,
+    *,
+    dtype: str = "float32",
+    backend: Optional[str] = None,
+    candidates: Optional[Dict[str, List[int]]] = None,
+    timer=None,
+    iters: int = 3,
+    warmup: int = 1,
+    seed: int = 0,
+) -> Tuple[Dict[str, int], Dict[str, float]]:
+    """Time every candidate config for ``kernel`` at size ``K``; return
+    ``(best_config, {json_config: us_per_call})``.  ``timer`` is injectable
+    for deterministic tests; the default is ``benchmarks.common.time_fn``
+    with ``blocking=True``."""
+    timer = timer or _timer()
+    build = _bench_builder(kernel, K, seed=seed)
+    table: Dict[str, float] = {}
+    best_cfg: Optional[Dict[str, int]] = None
+    best_us = float("inf")
+    for cfg in _configs(kernel, candidates):
+        fn = build(cfg)
+        us = float(timer(fn, iters=iters, warmup=warmup, blocking=True))
+        table[json.dumps(cfg, sort_keys=True)] = us
+        if us < best_us:  # strict: ties keep the earlier candidate
+            best_us, best_cfg = us, dict(cfg)
+    assert best_cfg is not None
+    return best_cfg, table
+
+
+def autotune(
+    kernels: Optional[Iterable[str]] = None,
+    K_list: Iterable[int] = (10_000,),
+    *,
+    path: Optional[str] = None,
+    save: bool = True,
+    timer=None,
+    iters: int = 3,
+    warmup: int = 1,
+) -> Dict[str, Any]:
+    """Run the sweep for every (kernel, K) pair and merge winners into the
+    on-disk cache.  Returns ``{"cache": ..., "tables": ...}``."""
+    kernels = list(kernels) if kernels is not None else sorted(CANDIDATES)
+    path = path or autotune_path()
+    cache = load_cache(path)
+    tables: Dict[str, Dict[str, float]] = {}
+    for kern in kernels:
+        for K in K_list:
+            best, table = sweep(kern, int(K), timer=timer, iters=iters, warmup=warmup)
+            key = cache_key(kern, int(K))
+            cache[key] = best
+            tables[key] = table
+    if save:
+        save_cache(cache, path)
+        global _cache_memo
+        _cache_memo = (None, None, None)
+    return {"cache": cache, "tables": tables, "path": path}
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description="regenerate the autotune cache")
+    ap.add_argument("--K", type=int, nargs="+", default=[10_000, 100_000, 1_000_000])
+    ap.add_argument("--kernels", nargs="+", default=None)
+    ap.add_argument("--iters", type=int, default=5)
+    args = ap.parse_args()
+    out = autotune(args.kernels, args.K, iters=args.iters)
+    print(f"wrote {out['path']}")
+    for key, tab in out["tables"].items():
+        win = json.dumps(out["cache"][key], sort_keys=True)
+        print(f"  {key}: {win}")

@@ -95,16 +95,30 @@ def bisect_block_sums_kernel_call(w: jax.Array, caps: jax.Array, tile: int = 819
     )(w, caps)
 
 
-def bisect_block_sums(w: jax.Array, caps: jax.Array, tile: int = 8192) -> jax.Array:
-    """Backend-dispatching block reduction: Pallas kernel on TPU, jnp
-    reference elsewhere.
+def bisect_block_sums(w: jax.Array, caps: jax.Array, tile: int = None) -> jax.Array:
+    """Dispatching block reduction: Pallas kernel on TPU, jnp reference
+    elsewhere; routed per call by ``REPRO_INTERPRET``
+    (``repro.kernels.dispatch``).
 
     The reference path covers three cases the kernel cannot: CPU (the
     interpreter would be the bottleneck), float64 inputs (the kernel
-    accumulates in float32 and would silently truncate x64-mode
-    allocations), and parallel-grid backends like GPU (the kernel's
-    cross-program output accumulation needs a sequential grid).
+    accumulates in float32 and would silently truncate x64-mode allocations
+    — enforced here even under a forced kernel route), and parallel-grid
+    backends like GPU (the kernel's cross-program output accumulation needs
+    a sequential grid — interpret mode, which the route forces off-TPU, is
+    sequential).  ``tile=None`` consults the autotune cache
+    (``repro.kernels.autotune``); the engine's allocator always passes its
+    own tile, so its reduction grouping never shifts under tuning.
     """
-    if jax.default_backend() != "tpu" or w.dtype != jnp.float32:
+    from .dispatch import kernel_route  # deferred: dispatch is dependency-free
+
+    if tile is None:
+        from .autotune import best_config
+
+        tile = int(best_config("bisect_tiles", w.shape[0])["tile"])
+    if w.dtype != jnp.float32:
         return bisect_block_sums_ref(w, caps, tile=tile)
-    return bisect_block_sums_kernel_call(w, caps, tile=tile).astype(w.dtype)
+    use_kernel, interpret = kernel_route(cpu_kernel_default=False)
+    if not use_kernel:
+        return bisect_block_sums_ref(w, caps, tile=tile)
+    return bisect_block_sums_kernel_call(w, caps, tile=tile, interpret=interpret).astype(w.dtype)

@@ -1,9 +1,20 @@
-"""Jit'd wrappers for the Pallas kernels.
+"""Dispatching wrappers for the Pallas kernels.
 
-On CPU (this container) the kernels execute with ``interpret=True`` — the
-kernel body runs in Python via the Pallas interpreter, which is how
-correctness is validated against ``ref.py``.  On a real TPU backend
-``interpret`` flips off automatically.
+Routing (kernel vs jnp reference, compiled vs interpret) is resolved **per
+call** by ``repro.kernels.dispatch.kernel_route`` from the one documented
+``REPRO_INTERPRET`` environment variable — unset/``auto`` picks the
+per-backend default (compiled kernels on TPU, the Pallas interpreter on
+CPU), ``1`` forces the kernel path (interpret off-TPU, the bit-identity
+validation mode), ``0`` forces the jnp references.  The wrappers here are
+deliberately *not* jitted: the env read happens on every call and the
+resolved route is passed to the inner jit as a static argument, so flipping
+the variable mid-process takes effect on the next call (pinned in
+``tests/test_kernels.py``).
+
+Launch tiles default to the autotune cache (``repro.kernels.autotune``):
+``tile=None`` looks up the tuned config for the ``(kernel, K-bucket,
+dtype, backend)`` at hand and falls back to the hardcoded defaults on a
+cold cache.  Passing an explicit ``tile`` bypasses the cache entirely.
 """
 from __future__ import annotations
 
@@ -12,61 +23,70 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from .autotune import best_config
+from .dispatch import kernel_route
 from .e3cs_tiles import e3cs_update_kernel_call, fused_gumbel_topk_kernel_call
-from .flash_attention import flash_attention_kernel_call
 from .gumbel_topk import gumbel_topk_kernel_call
-from .ssd_scan import ssd_scan_kernel_call
+from .ref import e3cs_update_tiled_ref, gumbel_topk_ref
 
-__all__ = ["flash_attention", "ssd_scan", "gumbel_topk_sample", "fused_gumbel_topk_sample", "e3cs_update_tiled"]
+__all__ = ["gumbel_topk_sample", "fused_gumbel_topk_sample", "e3cs_update_tiled"]
 
-
-def _interpret() -> bool:
-    return jax.default_backend() == "cpu"
+_EPS = 1e-20
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
-def flash_attention(q, k, v, causal: bool = True, window: int = 0, block_q: int = 128, block_k: int = 128):
-    """q: (B,S,H,hd); k/v: (B,T,KV,hd). Returns (B,S,H,hd)."""
-    B, S, H, hd = q.shape
-    T, KV = k.shape[1], k.shape[2]
-    group = H // KV
-    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
-    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, T, hd)
-    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, T, hd)
-    o = flash_attention_kernel_call(
-        qf, kf, vf, group, causal=causal, window=window, block_q=block_q, block_k=block_k, interpret=_interpret()
-    )
-    return o.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
-
-
-@functools.partial(jax.jit, static_argnames=("chunk",))
-def ssd_scan(x, dt, A, B, C, chunk: int = 128):
-    """Chunked SSD scan; see repro.models.ssm for argument shapes."""
-    return ssd_scan_kernel_call(x, dt, A, B, C, chunk=chunk, interpret=_interpret())
-
-
-@functools.partial(jax.jit, static_argnames=("k", "tile"))
-def gumbel_topk_sample(rng, p, k: int, tile: int = 8192):
-    """Plackett-Luce k-subset sample over probabilities ``p`` (K,)."""
+@functools.partial(jax.jit, static_argnames=("k", "tile", "use_kernel", "interpret"))
+def _gumbel_topk_impl(rng, p, k: int, tile: int, use_kernel: bool, interpret: bool):
     g = jax.random.gumbel(rng, p.shape, jnp.float32)
-    scores = jnp.log(jnp.maximum(p.astype(jnp.float32), 1e-20)) + g
-    _, idx = gumbel_topk_kernel_call(scores, k, tile=tile, interpret=_interpret())
+    scores = jnp.log(jnp.maximum(p.astype(jnp.float32), _EPS)) + g
+    if not use_kernel:
+        return gumbel_topk_ref(scores, k)
+    _, idx = gumbel_topk_kernel_call(scores, k, tile=tile, interpret=interpret)
     return idx
 
 
-@functools.partial(jax.jit, static_argnames=("k", "tile"))
-def fused_gumbel_topk_sample(rng, p, k: int, tile: int = 8192):
+def gumbel_topk_sample(rng, p, k: int, tile: int = None):
+    """Plackett-Luce k-subset sample over probabilities ``p`` (K,)."""
+    use_kernel, interpret = kernel_route()
+    if tile is None:
+        tile = best_config("gumbel_topk", p.shape[0])["tile"]
+    return _gumbel_topk_impl(rng, p, k, int(tile), use_kernel, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tile", "use_kernel", "interpret"))
+def _fused_gumbel_topk_impl(rng, p, k: int, tile: int, use_kernel: bool, interpret: bool):
+    u = jax.random.uniform(rng, p.shape, jnp.float32)
+    p = p.astype(jnp.float32)
+    if not use_kernel:
+        # jnp twin of the kernel's in-register perturbation + mask
+        g = -jnp.log(-jnp.log(jnp.clip(u, _EPS, 1.0 - 1e-7)))
+        s = jnp.where(p > 0.0, jnp.log(jnp.maximum(p, _EPS)) + g, -jnp.inf)
+        return gumbel_topk_ref(s, k)
+    _, idx = fused_gumbel_topk_kernel_call(p, u, k, tile=tile, interpret=interpret)
+    return idx
+
+
+def fused_gumbel_topk_sample(rng, p, k: int, tile: int = None):
     """Single-pass Plackett-Luce sample: the Gumbel perturbation happens
     inside the kernel, so scores never round-trip through HBM."""
-    u = jax.random.uniform(rng, p.shape, jnp.float32)
-    _, idx = fused_gumbel_topk_kernel_call(p.astype(jnp.float32), u, k, tile=tile, interpret=_interpret())
-    return idx
+    use_kernel, interpret = kernel_route()
+    if tile is None:
+        tile = best_config("gumbel_topk", p.shape[0])["tile"]
+    return _fused_gumbel_topk_impl(rng, p, k, int(tile), use_kernel, interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("tile",))
-def e3cs_update_tiled(logw, p, sel_mask, x, frozen, scale, tile: int = 8192):
-    """Fused, re-centered E3CS weight update (Eqs. 16-17) at fleet scale."""
+@functools.partial(jax.jit, static_argnames=("tile", "use_kernel", "interpret"))
+def _e3cs_update_impl(logw, p, sel_mask, x, frozen, scale, tile: int, use_kernel: bool, interpret: bool):
+    if not use_kernel:
+        return e3cs_update_tiled_ref(logw, p, sel_mask, x, frozen, scale)
     new_logw, tmax = e3cs_update_kernel_call(
-        logw, p, sel_mask, x, frozen, scale, tile=tile, interpret=_interpret()
+        logw, p, sel_mask, x, frozen, scale, tile=tile, interpret=interpret
     )
     return new_logw - jnp.max(tmax)
+
+
+def e3cs_update_tiled(logw, p, sel_mask, x, frozen, scale, tile: int = None):
+    """Fused, re-centered E3CS weight update (Eqs. 16-17) at fleet scale."""
+    use_kernel, interpret = kernel_route()
+    if tile is None:
+        tile = best_config("e3cs_tiles", logw.shape[0])["tile"]
+    return _e3cs_update_impl(logw, p, sel_mask, x, frozen, scale, int(tile), use_kernel, interpret)

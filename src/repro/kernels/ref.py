@@ -1,64 +1,161 @@
-"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+The fused-round references below are composed from *exactly* the staged
+engine's ops in the staged engine's order (same expressions, same operand
+order, same masking), so on backends where dispatch picks the reference
+path the ``fused=True`` engine is bit-identical to the staged one by
+construction — and the Pallas kernels in ``round_fused.py`` are validated
+bit-for-bit against these in interpret mode.
+"""
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["flash_attention_ref", "ssd_scan_ref", "gumbel_topk_ref"]
+from repro.core.volatility import DEAD_LAG
 
+from .unpack_bits import unpack_bits_ref, unpack_crumbs_ref
 
-def flash_attention_ref(q, k, v, causal: bool = True, window: int = 0):
-    """q: (B,S,H,hd); k/v: (B,T,KV,hd), H = G*KV. Returns (B,S,H,hd)."""
-    B, S, H, hd = q.shape
-    T, KV = k.shape[1], k.shape[2]
-    G = H // KV
-    qg = q.reshape(B, S, KV, G, hd)
-    s = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32) / jnp.sqrt(hd)
-    qi = jnp.arange(S)[:, None]
-    kj = jnp.arange(T)[None, :]
-    mask = jnp.ones((S, T), bool)
-    if causal:
-        mask &= kj <= qi
-    if window > 0:
-        mask &= kj > qi - window
-    s = jnp.where(mask[None, None, None], s, -jnp.inf)
-    w = jax.nn.softmax(s, axis=-1)
-    w = jnp.where(jnp.isfinite(w), w, 0.0)  # fully-masked rows
-    out = jnp.einsum("bkgst,btkh->bskgh", w.astype(v.dtype), v)
-    return out.reshape(B, S, H, hd)
+__all__ = [
+    "gumbel_topk_ref",
+    "e3cs_update_tiled_ref",
+    "fused_alloc_select_ref",
+    "fused_perturb_select_ref",
+    "round_tail_ref",
+]
 
-
-def ssd_scan_ref(x, dt, A, B, C, chunk: int = 0):
-    """Sequential SSD recurrence (ground truth; chunk arg ignored).
-
-    x: (b,S,H,P); dt: (b,S,H); A: (H,); B/C: (b,S,G,N).
-    Returns (y (b,S,H,P), final_state (b,H,N,P)).
-    """
-    b, S, H, P = x.shape
-    G, N = B.shape[2], B.shape[3]
-    rep = H // G
-    Bh = jnp.repeat(B, rep, axis=2)
-    Ch = jnp.repeat(C, rep, axis=2)
-
-    def step(state, inp):
-        xt, dtt, Bt, Ct = inp
-        decay = jnp.exp(dtt * A)[:, :, None, None]
-        state = state * decay + jnp.einsum("bh,bhn,bhp->bhnp", dtt, Bt, xt)
-        y = jnp.einsum("bhn,bhnp->bhp", Ct, state)
-        return state, y
-
-    init = jnp.zeros((b, H, N, P), jnp.float32)
-    xs = (
-        jnp.moveaxis(x.astype(jnp.float32), 1, 0),
-        jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
-        jnp.moveaxis(Bh.astype(jnp.float32), 1, 0),
-        jnp.moveaxis(Ch.astype(jnp.float32), 1, 0),
-    )
-    final, ys = jax.lax.scan(step, init, xs)
-    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), final.astype(x.dtype)
+_LAG_DEAD_CODE = 3  # 2-bit crumb sentinel (mirrors engine.round_program)
 
 
 def gumbel_topk_ref(scores, k: int):
     """Top-k indices of perturbed scores (descending)."""
     _, idx = jax.lax.top_k(scores, k)
     return idx.astype(jnp.int32)
+
+
+def e3cs_update_tiled_ref(logw, p, sel_mask, x, frozen, scale):
+    """jnp twin of ``e3cs_tiles.e3cs_update_kernel_call`` + recenter."""
+    xhat = sel_mask * x / jnp.maximum(p, 1e-12)
+    step = jnp.minimum(scale * xhat, 1.0)
+    new = logw + jnp.where(frozen > 0, 0.0, step)
+    return new - jnp.max(new)
+
+
+def _select_scores(p, g, active):
+    """Staged score assembly: ``perturbed_scores`` with the Gumbel draw
+    hoisted out (``g`` must come from the identical ``jax.random.gumbel``
+    call the staged sampler makes), plus the sharded engine's activity
+    masking."""
+    s = jnp.log(jnp.maximum(p, 1e-20)) + g
+    if active is not None:
+        s = jnp.where(active > 0, s, -jnp.inf)
+    return s
+
+
+def fused_alloc_select_ref(w, g, k: int, *, sigma, scalars, active=None):
+    """Allocation epilogue + perturb + top-k in staged op order.
+
+    ``scalars = (residual, cap, denom, use_cap)`` from
+    ``engine.sharded.masked_prob_alloc_scalars``.  Returns
+    ``(p, capped, vals, idx)`` with ``idx`` local (no shard offset) —
+    bitwise the staged ``masked_prob_alloc`` epilogue followed by
+    ``perturbed_scores`` + ``lax.top_k``.
+    """
+    residual, cap, denom, use_cap = scalars
+    p = sigma + residual * jnp.minimum(w, cap) / denom
+    capped = (p >= 1.0 - 1e-6) & use_cap
+    p = jnp.clip(p, sigma, 1.0)
+    if active is not None:
+        p = p * active
+        capped = capped & (active > 0)
+    vals, idx = jax.lax.top_k(_select_scores(p, g, active), k)
+    return p, capped, vals, idx.astype(jnp.int32)
+
+
+def fused_perturb_select_ref(p, g, k: int, *, active=None):
+    """Perturb + top-k only (the sorted-allocator path, where ``p`` is
+    already staged).  Returns ``(vals, idx)``."""
+    vals, idx = jax.lax.top_k(_select_scores(p, g, active), k)
+    return vals, idx.astype(jnp.int32)
+
+
+def round_tail_ref(
+    obs,
+    mask,
+    p,
+    capped,
+    logw,
+    loss_cache,
+    credit,
+    fb,
+    *,
+    kind: str,
+    residual,
+    eta: float,
+    K_glob: int,
+    decay=(),
+    active: Optional[jax.Array] = None,
+):
+    """Observe-decode + E3CS elementwise update + credit rings, staged order.
+
+    ``kind``: ``"bits"`` (packed sync trace row), ``"crumbs"`` (packed async
+    lag row), ``"x"`` (dense success bits), ``"lag"`` (dense int32 lags).
+    ``decay`` is the static per-slot late-credit schedule
+    ``(alpha**1, ..., alpha**S)``; ``credit`` / ``fb`` are the ``(S, K)``
+    rings (``None`` when absent).  ``residual`` is the traced scalar
+    ``asarray(k, p.dtype) - K_glob * sigma`` computed by the caller with the
+    staged expression.  Returns a dict of every tail product; the global
+    recenter (needs a cross-tile / cross-shard max) stays with the caller.
+    """
+    K = mask.shape[0]
+    lag = None
+    if kind == "bits":
+        x = unpack_bits_ref(obs, K)
+    elif kind == "crumbs":
+        codes = unpack_crumbs_ref(obs, K)
+        lag = jnp.where(codes == _LAG_DEAD_CODE, DEAD_LAG, codes)
+    elif kind == "x":
+        x = obs
+    elif kind == "lag":
+        lag = obs
+    else:
+        raise ValueError(f"unknown obs kind {kind!r}")
+    if lag is not None:
+        x = (lag == 0).astype(jnp.float32)  # deadline-based selector feedback
+
+    # Eq. 16/17 elementwise (recenter deferred): exactly e3cs_update's ops
+    xhat = mask * x / jnp.maximum(p, 1e-12)
+    step = residual * eta * xhat / K_glob
+    step = jnp.minimum(step, 1.0)
+    frozen = capped if active is None else capped | (active == 0)
+    logw_pre = logw + jnp.where(frozen, 0.0, step)
+    m = jnp.max(logw_pre) if active is None else jnp.max(
+        jnp.where(active > 0, logw_pre, -jnp.inf)
+    )
+    out = {
+        "x": x,
+        "logw_pre": logw_pre,
+        "m": m,
+        "loss_cache": jnp.where(mask > 0, 1.0 - x, loss_cache),
+    }
+    if lag is not None:
+        out["lag"] = lag
+
+    S = len(decay)
+    if credit is not None and S > 0:
+        dec = jnp.asarray(list(decay), jnp.float32)
+        lag_rows = jnp.arange(1, S + 1, dtype=jnp.int32)
+        sched = mask[None, :] * (lag[None, :] == lag_rows[:, None]) * dec[:, None]
+        out["arriving"] = credit[0, :]
+        shifted = jnp.concatenate([credit[1:, :], jnp.zeros_like(credit[:1, :])], axis=0)
+        out["credit"] = shifted + sched
+        if fb is not None:
+            xhat_rows = sched / jnp.maximum(p, 1e-12)
+            rows = jnp.minimum(residual * eta * xhat_rows / K_glob, 1.0)
+            rows = jnp.where(frozen, 0.0, rows)
+            out["arr_fb"] = fb[0, :]
+            fb_shift = jnp.concatenate([fb[1:, :], jnp.zeros_like(fb[:1, :])], axis=0)
+            out["fb"] = fb_shift + rows
+    return out

@@ -73,11 +73,15 @@ def unpack_bits_kernel_call(packed: jax.Array, K: int, tile_b: int = 1024, inter
 
 
 def unpack_bits(packed: jax.Array, K: int, tile_b: int = 1024) -> jax.Array:
-    """Backend-dispatching row unpack: Pallas kernel on accelerators, jnp
-    reference on CPU (where the interpreter would be the bottleneck)."""
-    if jax.default_backend() == "cpu":
+    """Dispatching row unpack: Pallas kernel on accelerators, jnp reference
+    on CPU (where the interpreter would be the bottleneck); routed per call
+    by ``REPRO_INTERPRET`` (``repro.kernels.dispatch``)."""
+    from .dispatch import kernel_route  # deferred: dispatch is dependency-free
+
+    use_kernel, interpret = kernel_route(cpu_kernel_default=False)
+    if not use_kernel:
         return unpack_bits_ref(packed, K)
-    return unpack_bits_kernel_call(packed, K, tile_b=tile_b)
+    return unpack_bits_kernel_call(packed, K, tile_b=tile_b, interpret=interpret)
 
 
 def unpack_crumbs_ref(packed: jax.Array, K: int) -> jax.Array:
@@ -122,7 +126,10 @@ def unpack_crumbs_kernel_call(packed: jax.Array, K: int, tile_b: int = 1024, int
 
 
 def unpack_crumbs(packed: jax.Array, K: int, tile_b: int = 1024) -> jax.Array:
-    """Backend-dispatching crumb unpack (see ``unpack_bits`` for the idiom)."""
-    if jax.default_backend() == "cpu":
+    """Dispatching crumb unpack (see ``unpack_bits`` for the idiom)."""
+    from .dispatch import kernel_route  # deferred: dispatch is dependency-free
+
+    use_kernel, interpret = kernel_route(cpu_kernel_default=False)
+    if not use_kernel:
         return unpack_crumbs_ref(packed, K)
-    return unpack_crumbs_kernel_call(packed, K, tile_b=tile_b)
+    return unpack_crumbs_kernel_call(packed, K, tile_b=tile_b, interpret=interpret)

@@ -288,6 +288,7 @@ def run_service_sharded(
     reps: int = 3,
     staleness: int = 0,
     alpha: float = 0.5,
+    fused: bool = False,
     reporter: Reporter | None = None,
 ):
     """Compiled steady-state serving of ONE fleet-scale job with the K axis
@@ -307,6 +308,11 @@ def run_service_sharded(
     late-but-alive cohorts ``alpha**lag`` — the sharded-async composition
     that falls out of ``RoundProgram`` (the config is resolved by the same
     ``RoundProgram.from_config`` the training server uses).
+
+    ``fused=True`` serves through the fused round path
+    (``repro.kernels.round_fused``): allocation epilogue / perturb / top-k in
+    one dispatch and the observe/update/credit tail in another — bit-identical
+    selections, fewer passes over the ``(K/D,)`` shards.
     """
     from repro.configs.base import FLConfig
     from repro.engine.round_program import RoundProgram
@@ -320,7 +326,7 @@ def run_service_sharded(
         K=K, k=k, rounds=rounds, scheme="e3cs", quota_frac=0.5, allocator="bisect",
         volatility="bernoulli", staleness_rounds=S, staleness_alpha=alpha,
     )
-    program = RoundProgram.from_config(fl, mesh=mesh, block=block)
+    program = RoundProgram.from_config(fl, mesh=mesh, block=block, fused=fused)
     # serve with the in-scan taps AND sketch stages on: the same compiled
     # horizon that answers requests emits the ROUND_TAPS telemetry stream
     # plus the psum-merged client-axis sketch stream (fairness telemetry)
@@ -344,6 +350,7 @@ def run_service_sharded(
         "k": k,
         "rounds": rounds,
         "bisect_block": block,
+        "fused": bool(fused),
         "rounds_per_s": round(rounds / best, 2),
         "client_decisions_per_s": round(rounds * K / best, 1),
         "round_us": round(best / rounds * 1e6, 1),
@@ -492,6 +499,10 @@ def main():
     ap.add_argument("--staleness", type=int, default=2,
                     help="async buffer depth S (with --async, alone or combined with --mesh; 0 = compiled sync)")
     ap.add_argument("--alpha", type=float, default=0.5, help="staleness decay per round of lag")
+    ap.add_argument("--fused", action="store_true",
+                    help="with --mesh: serve through the fused round kernel path "
+                         "(repro.kernels.round_fused) — bit-identical selections, "
+                         "fewer passes over the per-device shards")
     ap.add_argument("--mesh", type=int, default=None, metavar="D",
                     help="serve one K-sharded job over a D-device mesh (forced CPU devices: "
                          "XLA_FLAGS=--xla_force_host_platform_device_count=D)")
@@ -522,7 +533,7 @@ def main():
         rep = Reporter("select_serve_sharded_async" if S else "select_serve_sharded", config=vars(args))
         report = run_service_sharded(
             K=K, rounds=args.rounds, D=args.mesh, seed=args.seed, staleness=S, alpha=args.alpha,
-            reporter=rep,
+            fused=args.fused, reporter=rep,
         )
     elif args.async_mode:
         rep = Reporter("select_serve_async", config=vars(args))

@@ -9,9 +9,9 @@ A ``window > 0`` enables sliding-window attention; in decode mode the cache
 is a ring buffer of ``window`` slots, so `long_500k` serving keeps O(window)
 memory for dense architectures (DESIGN.md §5).
 
-The XLA einsum path is the default (robust for SPMD lowering); the Pallas
-flash kernel (`repro.kernels.flash_attention`) is selectable for the
-train/prefill hot path via ``impl="flash"``.
+The XLA einsum path is the default (robust for SPMD lowering);
+``impl="chunked"`` swaps in the running-softmax blocked path for long
+train/prefill sequences.
 """
 from __future__ import annotations
 
@@ -156,11 +156,7 @@ def attn_apply(
         q, k, v = _project_qkv(p, x, cfg, positions)
         k = shard(k, "batch", "seq", "kv_heads", "head_dim")
         v = shard(v, "batch", "seq", "kv_heads", "head_dim")
-        if impl == "flash" and cross_kv is None:
-            from repro.kernels import ops as kops
-
-            out = kops.flash_attention(q, k, v, causal=True, window=window)
-        elif impl == "chunked":
+        if impl == "chunked":
             out = _chunked_sdpa(q, k, v, True, window, cfg.attn_logit_softcap)
         else:
             mask = _causal_mask(S, S, 0, window)[None, None]

@@ -9,9 +9,9 @@ G = ngroups, N = ssm_state):
     gate:     y = RMSNorm(y * silu(z)) ; out_proj: d_in -> d
 
 Training/prefill uses the *chunked* SSD algorithm (quadratic within chunks of
-length Q, linear across chunks via a carried (H,N,P) state) — mirrored by the
-Pallas kernel in ``repro.kernels.ssd_scan``.  Decode is the O(1) recurrence
-with a conv ring state, which is what makes `long_500k` serving tractable.
+length Q, linear across chunks via a carried (H,N,P) state).  Decode is the
+O(1) recurrence with a conv ring state, which is what makes `long_500k`
+serving tractable.
 """
 from __future__ import annotations
 
@@ -151,12 +151,7 @@ def ssm_apply(p, x, cfg, mode: str = "train", impl: str = "einsum"):
     dt = jax.nn.softplus(dt + p["dt_bias"])  # (B,S,H)
     A = -jnp.exp(p["A_log"].astype(jnp.float32)).astype(x.dtype)
     xh = xs.reshape(*x.shape[:2], H, P)
-    if impl == "ssd_kernel":
-        from repro.kernels import ops as kops
-
-        y, final = kops.ssd_scan(xh, dt, A, Bm, Cm, chunk=cfg.ssm_chunk)
-    else:
-        y, final = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk, return_final=True)
+    y, final = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk, return_final=True)
     y = y + p["D"][None, None, :, None] * xh
     y = y.reshape(*x.shape[:2], d_in)
     y = rmsnorm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)

@@ -22,7 +22,10 @@ from __future__ import annotations
 
 import os
 
-__all__ = ["results_root", "bench_dir", "runlog_dir", "artifact_path", "bench_path", "runlog_path"]
+__all__ = [
+    "results_root", "bench_dir", "runlog_dir", "autotune_dir",
+    "artifact_path", "bench_path", "runlog_path", "autotune_path",
+]
 
 
 def results_root() -> str:
@@ -47,6 +50,12 @@ def runlog_dir() -> str:
     return os.path.join(results_root(), "runlogs")
 
 
+def autotune_dir() -> str:
+    """Where the kernel autotune cache lives (``REPRO_AUTOTUNE_DIR``
+    overrides; the committed per-box baseline sits at the default)."""
+    return os.environ.get("REPRO_AUTOTUNE_DIR") or os.path.join(results_root(), "autotune")
+
+
 def _ensure(path: str) -> str:
     d = os.path.dirname(path)
     if d:
@@ -68,3 +77,8 @@ def bench_path(name: str) -> str:
 def runlog_path(run: str) -> str:
     """``<run>.jsonl`` under the runlog dir; creates the directory."""
     return _ensure(os.path.join(runlog_dir(), f"{run}.jsonl"))
+
+
+def autotune_path(name: str = "autotune") -> str:
+    """``<name>.json`` under the autotune dir; creates the directory."""
+    return _ensure(os.path.join(autotune_dir(), f"{name}.json"))

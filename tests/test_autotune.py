@@ -1,0 +1,127 @@
+"""Autotune harness: cache round-trip, corrupt-cache degradation, sweep
+determinism with an injected timer, and cross-process pickup semantics."""
+import json
+
+import pytest
+
+from repro.kernels import autotune
+
+
+@pytest.fixture(autouse=True)
+def _isolated_cache(monkeypatch, tmp_path):
+    # every test gets its own cache dir and a cleared memo/cold-set
+    monkeypatch.setenv("REPRO_AUTOTUNE_DIR", str(tmp_path))
+    autotune._cache_memo = (None, None, None)
+    autotune.reset_cold()
+    yield tmp_path
+    autotune._cache_memo = (None, None, None)
+    autotune.reset_cold()
+
+
+def test_bucketing_and_key_shape():
+    assert autotune._bucket(1) == 1024
+    assert autotune._bucket(1024) == 1024
+    assert autotune._bucket(1025) == 2048
+    assert autotune._bucket(1_000_000) == 2**20
+    key = autotune.cache_key("gumbel_topk", 1_000_000, backend="cpu")
+    assert key == "gumbel_topk|K1048576|float32|cpu"
+
+
+def test_cache_round_trip(tmp_path):
+    cache = {
+        "gumbel_topk|K1048576|float32|cpu": {"tile": 16384},
+        "bisect_tiles|K1048576|float32|cpu": {"tile": 4096, "block": 2},
+    }
+    path = autotune.save_cache(cache, str(tmp_path / "autotune.json"))
+    assert autotune.load_cache(path) == cache
+    # sorted keys + trailing newline: byte-stable output for the checked-in baseline
+    text = (tmp_path / "autotune.json").read_text()
+    assert text.endswith("\n")
+    assert list(json.loads(text)) == sorted(cache)
+
+
+@pytest.mark.parametrize("garbage", ["{not json", '["a", "list"]', '{"key": 7}'])
+def test_corrupt_cache_degrades_to_defaults(tmp_path, garbage):
+    (tmp_path / "autotune.json").write_text(garbage)
+    with pytest.warns(UserWarning, match="corrupt autotune cache"):
+        assert autotune.load_cache() == {}
+    # best_config never crashes on a corrupt cache: defaults, recorded cold
+    with pytest.warns(UserWarning):
+        cfg = autotune.best_config("gumbel_topk", 4096)
+    assert cfg == autotune.DEFAULTS["gumbel_topk"]
+    assert autotune.cache_key("gumbel_topk", 4096) in autotune.cold_keys()
+
+
+def test_best_config_merges_hit_over_defaults(tmp_path):
+    key = autotune.cache_key("bisect_tiles", 4096)
+    autotune.save_cache({key: {"tile": 2048}})  # partial entry: no "block"
+    cfg = autotune.best_config("bisect_tiles", 4096)
+    assert cfg["tile"] == 2048
+    assert cfg["block"] == autotune.DEFAULTS["bisect_tiles"]["block"]  # default survives
+    assert autotune.cold_keys() == []
+
+
+def test_external_write_picked_up_by_mtime_memo(tmp_path):
+    # a lookup before any cache exists: defaults + cold
+    assert autotune.best_config("gumbel_topk", 4096) == autotune.DEFAULTS["gumbel_topk"]
+    assert autotune.cold_keys()
+    # another process writes the cache (same effect: file appears / mtime moves)
+    autotune.save_cache({autotune.cache_key("gumbel_topk", 4096): {"tile": 32768}})
+    autotune.reset_cold()
+    assert autotune.best_config("gumbel_topk", 4096)["tile"] == 32768
+    assert autotune.cold_keys() == []
+
+
+def test_sweep_deterministic_with_injected_timer():
+    # timer keyed on the candidate: argmin must win
+    def timer(fn, iters, warmup, blocking):
+        timer.calls += 1
+        return timer.plan[timer.calls - 1]
+
+    timer.calls = 0
+    timer.plan = [50.0, 10.0, 30.0]
+    best, table = autotune.sweep(
+        "gumbel_topk", 4096, candidates={"tile": [2048, 4096, 8192]}, timer=timer
+    )
+    assert best == {"tile": 4096}
+    assert table == {'{"tile": 2048}': 50.0, '{"tile": 4096}': 10.0, '{"tile": 8192}': 30.0}
+
+
+def test_sweep_tie_breaks_to_earlier_candidate():
+    best, _ = autotune.sweep(
+        "gumbel_topk", 4096,
+        candidates={"tile": [2048, 4096, 8192]},
+        timer=lambda fn, iters, warmup, blocking: 42.0,
+    )
+    assert best == {"tile": 2048}  # strict <: constant timings keep the first
+
+
+def test_autotune_merges_and_persists(tmp_path):
+    # pre-existing entry for another kernel must survive the merge
+    keep_key = autotune.cache_key("e3cs_tiles", 4096)
+    autotune.save_cache({keep_key: {"tile": 16384}})
+    out = autotune.autotune(
+        ["gumbel_topk"], [4096], timer=lambda fn, iters, warmup, blocking: 1.0
+    )
+    cache = autotune.load_cache(out["path"])
+    assert keep_key in cache
+    assert autotune.cache_key("gumbel_topk", 4096) in cache
+    # the fresh write is immediately visible through best_config (memo reset)
+    assert autotune.best_config("gumbel_topk", 4096)["tile"] == cache[
+        autotune.cache_key("gumbel_topk", 4096)
+    ]["tile"]
+
+
+def test_sweep_smoke_real_timer(monkeypatch):
+    # a real (non-injected) sweep at K=1e4 on the reference route: exercises
+    # the ops-level benchmark builders end to end
+    monkeypatch.setenv("REPRO_INTERPRET", "0")
+    for kernel in sorted(autotune.CANDIDATES):
+        cands = {ax: vals[:2] for ax, vals in autotune.CANDIDATES[kernel].items()}
+        best, table = autotune.sweep(kernel, 10_000, candidates=cands, iters=1, warmup=1)
+        assert best[next(iter(cands))] in cands[next(iter(cands))]
+        n = 1
+        for vals in cands.values():
+            n *= len(vals)
+        assert len(table) == n
+        assert all(us > 0 for us in table.values())

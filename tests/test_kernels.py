@@ -10,70 +10,6 @@ from repro.kernels.gumbel_topk import gumbel_topk_kernel_call
 RNG = np.random.default_rng(0)
 
 
-def _randn(shape, dtype):
-    return jnp.asarray(RNG.normal(size=shape), dtype)
-
-
-FLASH_CASES = [
-    # (B, S, H, KV, hd, window, dtype)
-    (2, 64, 4, 2, 32, 0, jnp.float32),
-    (1, 128, 8, 1, 64, 0, jnp.float32),  # MQA
-    (2, 96, 4, 4, 32, 0, jnp.float32),  # MHA, non-pow2 seq
-    (1, 256, 4, 2, 64, 64, jnp.float32),  # sliding window
-    (2, 64, 4, 2, 32, 0, jnp.bfloat16),
-    (1, 100, 2, 2, 128, 33, jnp.float32),  # ragged seq + window
-]
-
-
-@pytest.mark.parametrize("case", FLASH_CASES, ids=[str(c) for c in FLASH_CASES])
-def test_flash_attention_matches_ref(case):
-    B, S, H, KV, hd, win, dt = case
-    q = _randn((B, S, H, hd), dt)
-    k = _randn((B, S, KV, hd), dt)
-    v = _randn((B, S, KV, hd), dt)
-    out = ops.flash_attention(q, k, v, causal=True, window=win, block_q=32, block_k=32)
-    expect = ref.flash_attention_ref(q, k, v, causal=True, window=win)
-    tol = 2e-2 if dt == jnp.bfloat16 else 2e-5
-    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(expect, np.float32), atol=tol, rtol=tol)
-
-
-SSD_CASES = [
-    # (b, S, H, P, G, N, chunk, dtype)
-    (2, 64, 4, 16, 2, 32, 16, jnp.float32),
-    (1, 80, 2, 32, 1, 16, 32, jnp.float32),  # ragged S vs chunk
-    (2, 128, 8, 16, 8, 8, 64, jnp.float32),  # groups == heads
-    (1, 32, 4, 64, 2, 128, 32, jnp.float32),  # wide state
-]
-
-
-@pytest.mark.parametrize("case", SSD_CASES, ids=[str(c) for c in SSD_CASES])
-def test_ssd_scan_matches_sequential_ref(case):
-    b, S, H, P, G, N, chunk, dt = case
-    x = _randn((b, S, H, P), dt)
-    dtv = jnp.asarray(RNG.uniform(0.01, 0.4, (b, S, H)), dt)
-    A = jnp.asarray(-RNG.uniform(0.3, 2.0, (H,)), dt)
-    B = _randn((b, S, G, N), dt)
-    C = _randn((b, S, G, N), dt)
-    y, st = ops.ssd_scan(x, dtv, A, B, C, chunk=chunk)
-    y_ref, st_ref = ref.ssd_scan_ref(x, dtv, A, B, C)
-    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=5e-4, rtol=5e-4)
-    np.testing.assert_allclose(np.asarray(st), np.asarray(st_ref), atol=5e-4, rtol=5e-4)
-
-
-def test_ssd_kernel_matches_model_chunked_path():
-    from repro.models.ssm import ssd_chunked
-
-    b, S, H, P, G, N = 1, 96, 4, 16, 2, 24
-    x = _randn((b, S, H, P), jnp.float32)
-    dtv = jnp.asarray(RNG.uniform(0.01, 0.4, (b, S, H)), jnp.float32)
-    A = jnp.asarray(-RNG.uniform(0.3, 2.0, (H,)), jnp.float32)
-    B = _randn((b, S, G, N), jnp.float32)
-    C = _randn((b, S, G, N), jnp.float32)
-    y1, st1 = ops.ssd_scan(x, dtv, A, B, C, chunk=32)
-    y2, st2 = ssd_chunked(x, dtv, A, B, C, 32, return_final=True)
-    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=5e-5, rtol=5e-5)
-
-
 @pytest.mark.parametrize("K,k,tile", [(100, 10, 32), (1000, 20, 256), (513, 7, 128)])
 def test_gumbel_topk_matches_lax_topk(K, k, tile):
     scores = jnp.asarray(RNG.normal(size=(K,)), jnp.float32)
@@ -150,3 +86,76 @@ def test_gumbel_topk_sampler_distribution():
         idx = ops.gumbel_topk_sample(jax.random.PRNGKey(i), p, 4, tile=32)
         hits[np.asarray(idx)] += 1
     assert hits[16:].mean() > 4 * hits[:16].mean()
+
+
+# ---------------------------------------------------------------------------
+# Dispatch routing: REPRO_INTERPRET is read per call, autotune tiles per size
+# ---------------------------------------------------------------------------
+
+
+def test_repro_interpret_flip_takes_effect_mid_process(monkeypatch):
+    """Flipping REPRO_INTERPRET between calls must change the route without a
+    process restart (the old wrappers read the env at trace time and froze
+    it into the jit cache)."""
+    from repro.kernels import ops as ops_mod
+
+    calls = []
+    real = ops_mod.gumbel_topk_kernel_call
+
+    def spy(scores, k, tile=8192, interpret=False):
+        calls.append(interpret)
+        return real(scores, k, tile=tile, interpret=interpret)
+
+    monkeypatch.setattr(ops_mod, "gumbel_topk_kernel_call", spy)
+    # unique K so each route change compiles fresh (jit caches per static combo)
+    p = jnp.asarray(RNG.gamma(1.0, 1.0, 263).astype(np.float32))
+    monkeypatch.setenv("REPRO_INTERPRET", "0")
+    idx_ref = ops.gumbel_topk_sample(jax.random.PRNGKey(0), p, 5, tile=64)
+    assert calls == []  # forced-ref mode: the kernel is never invoked
+    monkeypatch.setenv("REPRO_INTERPRET", "1")
+    idx_kern = ops.gumbel_topk_sample(jax.random.PRNGKey(0), p, 5, tile=64)
+    assert calls and calls[-1] is True  # flipped: kernel path, interpret on CPU
+    assert sorted(np.asarray(idx_kern).tolist()) == sorted(np.asarray(idx_ref).tolist())
+    monkeypatch.setenv("REPRO_INTERPRET", "0")
+    n = len(calls)
+    ops.gumbel_topk_sample(jax.random.PRNGKey(1), p, 5, tile=64)
+    assert len(calls) == n  # flipped back: ref again
+
+
+def test_repro_interpret_rejects_garbage(monkeypatch):
+    from repro.kernels.dispatch import interpret_mode
+
+    monkeypatch.setenv("REPRO_INTERPRET", "maybe")
+    with pytest.raises(ValueError):
+        interpret_mode()
+
+
+def test_dispatch_consults_autotune_cache(monkeypatch, tmp_path):
+    """tile=None must resolve through the on-disk autotune cache."""
+    import json
+
+    from repro.kernels import autotune
+    from repro.kernels import ops as ops_mod
+
+    monkeypatch.setenv("REPRO_AUTOTUNE_DIR", str(tmp_path))
+    monkeypatch.setenv("REPRO_INTERPRET", "1")
+    key = autotune.cache_key("gumbel_topk", 263)
+    (tmp_path / "autotune.json").write_text(json.dumps({key: {"tile": 48}}))
+
+    seen = []
+    real = ops_mod.gumbel_topk_kernel_call
+
+    def spy(scores, k, tile=8192, interpret=False):
+        seen.append(tile)
+        return real(scores, k, tile=tile, interpret=interpret)
+
+    monkeypatch.setattr(ops_mod, "gumbel_topk_kernel_call", spy)
+    p = jnp.asarray(RNG.gamma(1.0, 1.0, 263).astype(np.float32))
+    ops.gumbel_topk_sample(jax.random.PRNGKey(0), p, 5)  # tile=None -> cache
+    assert seen == [48]
+    # a size outside the cached bucket falls back to the defaults, recorded cold
+    autotune.reset_cold()
+    bigp = jnp.asarray(RNG.gamma(1.0, 1.0, 3001).astype(np.float32))
+    ops.gumbel_topk_sample(jax.random.PRNGKey(0), bigp, 5)
+    assert seen[-1] == autotune.DEFAULTS["gumbel_topk"]["tile"]
+    assert autotune.cache_key("gumbel_topk", 3001) in autotune.cold_keys()
